@@ -1,0 +1,52 @@
+"""Paper Table III: computational complexity of GPT2-S with LoRA —
+parameters and FLOPs per component (batch of one 512-token sample, matching
+the paper's accounting: BP = 2x FP, embeddings neglected)."""
+from __future__ import annotations
+
+from repro.configs import get_arch
+from repro.core.workload import layer_workloads, lm_head_flops
+
+
+def rows():
+    cfg = get_arch("gpt2-s")
+    S = 512
+    d, h, hd, ff, V = (cfg.d_model, cfg.num_heads, cfg.head_dim, cfg.d_ff,
+                       cfg.vocab_size)
+    # parameters
+    p_embed = V * d
+    p_pos = cfg.max_seq_len * d
+    p_ln = 2 * d
+    p_attn = 4 * (d * d + d)
+    p_lora_per_rank = 2 * (d + d)                   # q and v adapters
+    p_ff = 2 * d * ff + ff + d
+    # FLOPs (per 512-token sample)
+    f_attn = (2 * S * d * (h * hd) * 2 + 2 * S * d * (h * hd) * 2 / 2
+              )  # qkvo projections approx; exact from workload below
+    ws = layer_workloads(cfg, S)
+    f_block = ws[0].rho
+    f_lora = ws[0].drho                              # per rank
+    f_mlp = 2 * S * d * ff * 2
+    f_attn = f_block - f_mlp
+    f_head = lm_head_flops(cfg, S)
+    out = [
+        ("token_embedding_params", p_embed, 0.0),
+        ("position_encoding_params", p_pos, 0.0),
+        ("layernorm_params_per_block", 2 * p_ln, 2 * S * d * 8 / 1e9),
+        ("mha_params_per_block", p_attn, f_attn / 1e9),
+        ("lora_adapter_params_per_rank", p_lora_per_rank, f_lora / 1e9),
+        ("ffn_params_per_block", p_ff, f_mlp / 1e9),
+        ("lm_head_gflops", 0, f_head / 1e9),
+        ("block_total_gflops_fp", 0, f_block / 1e9),
+        ("model_total_gflops_fp_bp", 0,
+         (3 * (sum(w.rho for w in ws) + f_head)) / 1e9),
+    ]
+    return out
+
+
+def main(emit):
+    for name, params, gflops in rows():
+        emit(f"table3/{name}", 0.0, f"params={params};gflops={gflops:.3f}")
+
+
+if __name__ == "__main__":
+    main(lambda n, t, d: print(f"{n},{t},{d}"))

@@ -1,0 +1,34 @@
+"""Roofline summary (beyond-paper deliverable g): reads the per-pair JSON
+produced by ``python -m repro.launch.dryrun --out experiments/dryrun`` and
+emits one row per (arch x shape x mesh).  Run the dry-run sweep first; rows
+are skipped gracefully if absent."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+OUT_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def main(emit):
+    files = sorted(glob.glob(os.path.join(OUT_DIR, "*.json")))
+    if not files:
+        emit("roofline/no_dryrun_results", 0.0,
+             f"run `python -m repro.launch.dryrun --out {OUT_DIR}` first")
+        return
+    from repro.analysis.report import _fix_collectives
+
+    for f in files:
+        with open(f) as fh:
+            r = _fix_collectives(json.load(fh))
+        rf = r["roofline"]
+        tag = f"{r['arch']}_{r['shape']}_{r['mesh']}"
+        emit(f"roofline/{tag}", r.get("compile_s", 0.0) * 1e6,
+             (f"t_compute={rf['t_compute']:.4g};t_memory={rf['t_memory']:.4g};"
+              f"t_collective={rf['t_collective']:.4g};dominant={rf['dominant']};"
+              f"useful={rf['useful_ratio']:.3f}"))
+
+
+if __name__ == "__main__":
+    main(lambda n, t, d: print(f"{n},{t},{d}"))

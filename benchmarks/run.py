@@ -1,0 +1,59 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness — one module per paper table/figure:
+
+  table3  bench_complexity   GPT2-S params/FLOPs with LoRA
+  table4  bench_ppl          centralized vs SflLLM perplexity
+  fig3/4  bench_convergence  loss curves + steps-to-target per rank (+E(r) fit)
+  fig5-8  bench_latency      latency sweeps, proposed vs baselines a-d
+  kernels bench_kernels      kernel twins micro-times + traffic accounting
+  roofline bench_roofline    per (arch x shape x mesh) roofline rows
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only table4,fig5 ...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import (bench_complexity, bench_convergence, bench_kernels,
+               bench_latency, bench_ppl, bench_roofline)
+
+SUITES = {
+    "table3": bench_complexity.main,
+    "table4": bench_ppl.main,
+    "convergence": bench_convergence.main,
+    "latency": bench_latency.main,
+    "kernels": bench_kernels.main,
+    "roofline": bench_roofline.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of " + ",".join(SUITES))
+    args = ap.parse_args()
+    picked = [s.strip() for s in args.only.split(",") if s.strip()] or \
+        list(SUITES)
+
+    print("name,us_per_call,derived")
+
+    def emit(name, us, derived):
+        print(f"{name},{us:.1f},{derived}")
+        sys.stdout.flush()
+
+    for name in picked:
+        t0 = time.time()
+        try:
+            SUITES[name](emit)
+            emit(f"{name}/_suite_wall", (time.time() - t0) * 1e6, "ok")
+        except Exception as e:  # noqa: BLE001 — keep the harness running
+            traceback.print_exc()
+            emit(f"{name}/_suite_wall", (time.time() - t0) * 1e6,
+                 f"FAILED:{e!r}")
+
+
+if __name__ == "__main__":
+    main()

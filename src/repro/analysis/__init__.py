@@ -1,0 +1,9 @@
+from .roofline import (HBM_BW, ICI_BW, PEAK_FLOPS, Roofline, build_report,
+                       cost_analysis_dict, memory_analysis_dict, model_flops,
+                       parse_collectives)
+
+__all__ = [
+    "HBM_BW", "ICI_BW", "PEAK_FLOPS", "Roofline", "build_report",
+    "cost_analysis_dict", "memory_analysis_dict", "model_flops",
+    "parse_collectives",
+]

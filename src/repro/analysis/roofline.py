@@ -1,0 +1,162 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs / peak_FLOP/s            (per chip)
+    memory term     = HLO_bytes / HBM_bw                 (per chip)
+    collective term = collective_bytes / link_bw         (per chip-link)
+
+``compiled.cost_analysis()`` runs on the post-SPMD-partitioning module, so
+its flops/bytes are already per-device.  Collective bytes are NOT in
+cost_analysis — we parse the optimized HLO text and sum the result-shape
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (async `-start` forms counted once, `-done` skipped).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI.
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+from dataclasses import dataclass, field, asdict
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+# `%x = TYPE kind(` or `%x = (TYPE, TYPE) kind(`; skip -done/-update forms.
+_OP_RE = re.compile(
+    r"=\s+(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, dict]:
+    """-> {kind: {"count": int, "bytes": int}} from optimized HLO."""
+    out: Dict[str, dict] = {k: {"count": 0, "bytes": 0} for k in _COLL_KINDS}
+    for m in _OP_RE.finditer(hlo_text):
+        type_str, kind, _start = m.groups()
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += _shape_bytes(type_str)
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops: float                 # per device
+    bytes_accessed: float        # per device
+    coll_bytes: float            # per device
+    coll_breakdown: Dict[str, dict]
+    model_flops_global: float    # 6*N*D (train) / 2*N*D (inference)
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    dominant: str = ""
+    useful_ratio: float = 0.0    # MODEL_FLOPS / (HLO_FLOPs * chips)
+    note: str = ""
+
+    def finish(self) -> "Roofline":
+        self.t_compute = self.flops / PEAK_FLOPS
+        self.t_memory = self.bytes_accessed / HBM_BW
+        self.t_collective = self.coll_bytes / ICI_BW
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        self.dominant = max(terms, key=terms.get)
+        hlo_global = self.flops * self.chips
+        self.useful_ratio = (self.model_flops_global / hlo_global
+                             if hlo_global else 0.0)
+        return self
+
+    def to_json(self) -> str:
+        return json.dumps(asdict(self), indent=1)
+
+
+def cost_analysis_dict(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:            # pragma: no cover
+        return {"error": str(e)}
+    if isinstance(ca, list):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}
+
+
+def memory_analysis_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:            # pragma: no cover
+        return {"error": str(e)}
+    if ma is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def model_flops(cfg, shape, *, lora_rank: Optional[int] = None) -> float:
+    """MODEL_FLOPS: 6*N*D train / 2*N*D prefill / 2*N*B decode, with
+    N = active params (MoE counts routed experts only)."""
+    from ..models.model import num_active_params
+
+    n = num_active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch        # decode: one token per row
+
+
+def build_report(*, arch: str, shape_cfg, mesh_name: str, chips: int,
+                 compiled, lowered_text: Optional[str], cfg) -> Roofline:
+    """FLOPs/bytes/collectives from the trip-count-aware HLO cost model
+    (see hlo_cost.py — XLA's own cost_analysis counts scan bodies once)."""
+    from .hlo_cost import analyze_hlo
+
+    text = lowered_text if lowered_text is not None else compiled.as_text()
+    cost = analyze_hlo(text)
+    return Roofline(
+        arch=arch,
+        shape=shape_cfg.name,
+        mesh=mesh_name,
+        chips=chips,
+        flops=cost.flops,
+        bytes_accessed=cost.bytes,
+        coll_bytes=cost.coll_bytes,
+        coll_breakdown={k: {kk: float(vv) for kk, vv in v.items()}
+                        for k, v in cost.coll.items()},
+        model_flops_global=model_flops(cfg, shape_cfg),
+    ).finish()

@@ -1,0 +1,3 @@
+from .io import restore_pytree, save_pytree
+
+__all__ = ["restore_pytree", "save_pytree"]

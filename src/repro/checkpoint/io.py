@@ -1,0 +1,60 @@
+"""msgpack-based pytree checkpointing (orbax is not available offline).
+
+Arrays are stored as (dtype, shape, raw bytes); tree structure via
+path-keyed flat dict, so checkpoints are robust to container-type changes
+(dict vs dataclass) as long as field names match.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _key_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_pytree(path: str, tree: Any) -> None:
+    flat = {}
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        arr = np.asarray(leaf)
+        flat[_key_str(kp)] = {
+            "dtype": str(arr.dtype),
+            "shape": list(arr.shape),
+            "data": arr.tobytes(),
+        }
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(flat, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def restore_pytree(path: str, template: Any) -> Any:
+    with open(path, "rb") as f:
+        flat = msgpack.unpackb(f.read(), raw=False)
+    leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    new_leaves = []
+    for kp, leaf in leaves_paths:
+        k = _key_str(kp)
+        if k not in flat:
+            raise KeyError(f"checkpoint missing leaf {k!r}")
+        rec = flat[k]
+        arr = np.frombuffer(rec["data"], dtype=rec["dtype"]).reshape(rec["shape"])
+        new_leaves.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

@@ -1,0 +1,24 @@
+"""The paper's primary contribution: SflLLM — split federated LoRA
+fine-tuning (Algorithm 1) + joint resource allocation (Algorithms 2-3)."""
+from .aggregation import fedavg
+from .channel import ClientEnv, sample_clients
+from .convergence import ConvergenceModel, DEFAULT_E, fit_convergence_model
+from .latency import latency_report, local_round_latency, split_workload, total_latency
+from .lora import adapter_bytes_per_layer, count_params, merge_adapter, split_tree
+from .resource import (Allocation, Problem, baseline, bcd_minimize_delay,
+                       greedy_subchannels, objective, solve_power_control,
+                       solve_power_control_slsqp)
+from .sfl import CentralizedLoRA, SflLLM, SflState
+from .split import mu_vector, valid_splits
+from .workload import layer_workloads, lm_head_flops
+
+__all__ = [
+    "fedavg", "ClientEnv", "sample_clients", "ConvergenceModel", "DEFAULT_E",
+    "fit_convergence_model", "latency_report", "local_round_latency",
+    "split_workload", "total_latency", "adapter_bytes_per_layer",
+    "count_params", "merge_adapter", "split_tree", "Allocation", "Problem",
+    "baseline", "bcd_minimize_delay", "greedy_subchannels", "objective",
+    "solve_power_control", "solve_power_control_slsqp", "CentralizedLoRA",
+    "SflLLM", "SflState", "mu_vector", "valid_splits", "layer_workloads",
+    "lm_head_flops",
+]

@@ -1,0 +1,29 @@
+"""Federated-server aggregation (paper eq. 7).
+
+DeltaW_c^t = sum_k (D_k / D) DeltaW_k^t — a weighted average of the
+client-side LoRA adapters.  The federated server never sees raw data or
+activations; only adapter weights cross this boundary.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def fedavg(client_trees: Sequence[Any], weights: Sequence[float]) -> Any:
+    """Weighted average of pytrees; weights are normalized to sum to 1."""
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.maximum(w.sum(), 1e-12)
+
+    def _avg(*leaves):
+        acc = sum(wi * l.astype(jnp.float32) for wi, l in zip(w, leaves))
+        return acc.astype(leaves[0].dtype)
+
+    return jax.tree.map(_avg, *client_trees)
+
+
+def broadcast(global_tree: Any, num_clients: int) -> list:
+    """Federated server -> clients: every client gets the global adapter."""
+    return [jax.tree.map(lambda x: x, global_tree) for _ in range(num_clients)]

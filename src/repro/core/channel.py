@@ -1,0 +1,115 @@
+"""Wireless channel + client environment model (paper Section III / VII-A).
+
+K clients uniform in a disc of radius d_max around the federated server;
+the main server sits d_main from the centroid.  Average channel gain
+follows the 3GPP-style path loss 128.1 + 37.6 log10(d_km) with lognormal
+shadowing (sigma = 8 dB).  Uplink rates follow eqs. (9) / (14):
+
+    R_k = sum_i r_k^i B_i log2(1 + p_i G gamma_k / sigma^2)
+
+with p_i the transmit PSD on subchannel i (W/Hz) — note the SNR is
+PSD-against-PSD, so it is bandwidth-independent.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List, Sequence
+
+import numpy as np
+
+from ..configs.system import SystemConfig, channel_gain
+
+
+@dataclass(frozen=True)
+class ClientEnv:
+    """Static per-client environment for one resource-allocation episode."""
+
+    f_hz: float            # computing capability f_k (cycles/s)
+    kappa: float           # cycles per FLOP
+    d_main_m: float
+    d_fed_m: float
+    gain_main: float       # G_c G_s gamma(d_k^s), linear
+    gain_fed: float        # G_c G_f gamma(d_k^f), linear
+
+
+def sample_clients(sys_cfg: SystemConfig, rng: np.random.Generator | int = 0
+                   ) -> List[ClientEnv]:
+    """Draw the Section VII-A scenario."""
+    rng = np.random.default_rng(rng) if isinstance(rng, int) else rng
+    K = sys_cfg.num_clients
+    r = sys_cfg.d_max_m * np.sqrt(rng.uniform(0, 1, K))
+    ang = rng.uniform(0, 2 * math.pi, K)
+    x, y = r * np.cos(ang), r * np.sin(ang)
+    # fed server at origin; main server at (d_main, 0)
+    d_fed = np.hypot(x, y)
+    d_main = np.hypot(x - sys_cfg.d_main_m, y)
+    f = rng.uniform(*sys_cfg.f_client_hz_range, K)
+    shadow = rng.normal(0.0, sys_cfg.shadow_std_db, (K, 2))
+    out = []
+    for k in range(K):
+        out.append(ClientEnv(
+            f_hz=float(f[k]),
+            kappa=sys_cfg.kappa_client,
+            d_main_m=float(d_main[k]),
+            d_fed_m=float(d_fed[k]),
+            gain_main=sys_cfg.antenna_gain_main * channel_gain(d_main[k], shadow[k, 0]),
+            gain_fed=sys_cfg.antenna_gain_fed * channel_gain(d_fed[k], shadow[k, 1]),
+        ))
+    return out
+
+
+def fade_clients(envs: Sequence[ClientEnv], rng, std_db: float = 4.0
+                 ) -> List[ClientEnv]:
+    """Per-round block fading: lognormal perturbation of the average gains
+    (the paper's 'time-varying and dynamically varying communication
+    resources').  Returns a new list of ClientEnv."""
+    rng = np.random.default_rng(rng) if isinstance(rng, int) else rng
+    out = []
+    for e in envs:
+        f_main, f_fed = 10.0 ** (rng.normal(0.0, std_db, 2) / 10.0)
+        out.append(ClientEnv(
+            f_hz=e.f_hz, kappa=e.kappa, d_main_m=e.d_main_m,
+            d_fed_m=e.d_fed_m, gain_main=e.gain_main * f_main,
+            gain_fed=e.gain_fed * f_fed))
+    return out
+
+
+def subchannel_bandwidths(sys_cfg: SystemConfig, which: str) -> np.ndarray:
+    """Equal split of the total bandwidth (Table II)."""
+    if which == "main":
+        n = sys_cfg.num_subchannels_main
+    else:
+        n = sys_cfg.num_subchannels_fed
+    return np.full(n, sys_cfg.total_bandwidth_hz / n)
+
+
+def rate_bps(bw_hz: Sequence[float], psd_w_hz: Sequence[float], gain: float,
+             noise_psd: float) -> float:
+    """eq. (9)/(14) for one client's set of assigned subchannels."""
+    bw = np.asarray(bw_hz, float)
+    p = np.asarray(psd_w_hz, float)
+    snr = p * gain / noise_psd
+    return float(np.sum(bw * np.log2(1.0 + snr)))
+
+
+def min_power_for_rate(rate_bps_target: float, bw_total: float, gain: float,
+                       noise_psd: float) -> float:
+    """Minimum total transmit power (W) to reach a rate over subchannels of
+    total bandwidth ``bw_total`` with a common gain.
+
+    With equal gains, the optimal PSD is uniform (equal spectral efficiency
+    per Hz), giving  P = sigma^2 * bw * (2^(R/bw) - 1) / gain.
+    """
+    if rate_bps_target <= 0:
+        return 0.0
+    return noise_psd * bw_total * (2.0 ** (rate_bps_target / bw_total) - 1.0) / gain
+
+
+def rate_for_power(power_w: float, bw_total: float, gain: float,
+                   noise_psd: float) -> float:
+    """Inverse of min_power_for_rate."""
+    if bw_total <= 0 or power_w <= 0:
+        return 0.0
+    psd = power_w / bw_total
+    return bw_total * math.log2(1.0 + psd * gain / noise_psd)

@@ -1,0 +1,145 @@
+"""Training-delay model — paper Section V-A, eqs. (8)–(17)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List, Sequence
+
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..configs.system import SystemConfig
+from .channel import ClientEnv
+from .workload import LayerWorkload, layer_workloads, lm_head_flops
+
+
+@dataclass(frozen=True)
+class SplitWorkload:
+    """Aggregated Phi/Gamma/Theta terms for a given (mu, r)."""
+
+    phi_c_f: float          # client FP FLOPs / sample (frozen)
+    dphi_c_f: float         # client FP FLOPs / sample (LoRA, already x r)
+    phi_s_f: float          # server FP
+    dphi_s_f: float
+    gamma_s: float          # activation bytes / sample at the split layer
+    dtheta_c: float         # client LoRA bytes (uplink to fed server)
+
+    @property
+    def phi_c_b(self):      # paper: BP = 2 x FP
+        return 2.0 * self.phi_c_f
+
+    @property
+    def dphi_c_b(self):
+        return 2.0 * self.dphi_c_f
+
+    @property
+    def phi_s_b(self):
+        return 2.0 * self.phi_s_f
+
+    @property
+    def dphi_s_b(self):
+        return 2.0 * self.dphi_s_f
+
+
+def split_workload(cfg: ArchConfig, workloads: List[LayerWorkload],
+                   ell_c: int, rank: int, seq_len: int) -> SplitWorkload:
+    """Phi_c^F(mu), DeltaPhi_c^F(mu,r), Gamma_s(mu), DeltaTheta_c(mu,r)...
+
+    Gamma_s(mu) = sum_j (mu_j - mu_{j+1}) psi_j picks out the split layer's
+    activation size; the LM head is a server-side constant.
+    """
+    c = workloads[:ell_c]
+    s = workloads[ell_c:]
+    return SplitWorkload(
+        phi_c_f=sum(w.rho for w in c),
+        dphi_c_f=rank * sum(w.drho for w in c),
+        phi_s_f=sum(w.rho for w in s) + lm_head_flops(cfg, seq_len),
+        dphi_s_f=rank * sum(w.drho for w in s),
+        gamma_s=workloads[ell_c - 1].psi if ell_c >= 1 else float(
+            seq_len * cfg.d_model * 2),
+        dtheta_c=rank * sum(w.dxi for w in c),
+    )
+
+
+# ---------------------------------------------------------------------------
+# eqs. (8)-(15)
+# ---------------------------------------------------------------------------
+
+def t_client_fp(sw: SplitWorkload, env: ClientEnv, b: int) -> float:
+    return b * env.kappa * (sw.phi_c_f + sw.dphi_c_f) / env.f_hz       # (8)
+
+
+def t_act_upload(sw: SplitWorkload, rate_bps: float, b: int) -> float:
+    return b * sw.gamma_s * 8.0 / max(rate_bps, 1e-9)                  # (10)
+
+
+def t_server_fp(sw: SplitWorkload, sys_cfg: SystemConfig, K: int, b: int) -> float:
+    return (K * b * sys_cfg.kappa_server * (sw.phi_s_f + sw.dphi_s_f)
+            / sys_cfg.f_server_hz)                                     # (11)
+
+
+def t_server_bp(sw: SplitWorkload, sys_cfg: SystemConfig, K: int, b: int) -> float:
+    return (K * b * sys_cfg.kappa_server * (sw.phi_s_b + sw.dphi_s_b)
+            / sys_cfg.f_server_hz)                                     # (12)
+
+
+def t_client_bp(sw: SplitWorkload, env: ClientEnv, b: int) -> float:
+    return b * env.kappa * (sw.phi_c_b + sw.dphi_c_b) / env.f_hz       # (13)
+
+
+def t_lora_upload(sw: SplitWorkload, rate_bps: float) -> float:
+    return sw.dtheta_c * 8.0 / max(rate_bps, 1e-9)                     # (15)
+
+
+# ---------------------------------------------------------------------------
+# eqs. (16)-(17)
+# ---------------------------------------------------------------------------
+
+def local_round_latency(sw: SplitWorkload, envs: Sequence[ClientEnv],
+                        rates_main: Sequence[float], sys_cfg: SystemConfig,
+                        b: int) -> float:
+    """(16): max_k(T_k^F + T_k^s) + T_s^F + T_s^B + max_k T_k^B."""
+    K = len(envs)
+    t1 = max(t_client_fp(sw, e, b) + t_act_upload(sw, r, b)
+             for e, r in zip(envs, rates_main))
+    t2 = max(t_client_bp(sw, e, b) for e in envs)
+    return (t1 + t_server_fp(sw, sys_cfg, K, b)
+            + t_server_bp(sw, sys_cfg, K, b) + t2)
+
+
+def total_latency(sw: SplitWorkload, envs: Sequence[ClientEnv],
+                  rates_main: Sequence[float], rates_fed: Sequence[float],
+                  sys_cfg: SystemConfig, b: int, local_steps: int,
+                  global_rounds: float) -> float:
+    """(17): T = E(r) (I * T_local + max_k T_k^f)."""
+    t_local = local_round_latency(sw, envs, rates_main, sys_cfg, b)
+    t3 = max(t_lora_upload(sw, r) for r in rates_fed)
+    return global_rounds * (local_steps * t_local + t3)
+
+
+def latency_report(cfg: ArchConfig, sys_cfg: SystemConfig,
+                   envs: Sequence[ClientEnv], rates_main, rates_fed,
+                   ell_c: int, rank: int, seq_len: int, b: int,
+                   local_steps: int, global_rounds: float) -> dict:
+    ws = layer_workloads(cfg, seq_len)
+    sw = split_workload(cfg, ws, ell_c, rank, seq_len)
+    K = len(envs)
+    per_client = [
+        {"t_fp": t_client_fp(sw, e, b),
+         "t_up": t_act_upload(sw, r, b),
+         "t_bp": t_client_bp(sw, e, b),
+         "t_fed": t_lora_upload(sw, rf)}
+        for e, r, rf in zip(envs, rates_main, rates_fed)
+    ]
+    return {
+        "split": ell_c,
+        "rank": rank,
+        "t1": max(c["t_fp"] + c["t_up"] for c in per_client),
+        "t2": max(c["t_bp"] for c in per_client),
+        "t3": max(c["t_fed"] for c in per_client),
+        "t_server_fp": t_server_fp(sw, sys_cfg, K, b),
+        "t_server_bp": t_server_bp(sw, sys_cfg, K, b),
+        "t_local": local_round_latency(sw, envs, rates_main, sys_cfg, b),
+        "total": total_latency(sw, envs, rates_main, rates_fed, sys_cfg, b,
+                               local_steps, global_rounds),
+        "per_client": per_client,
+    }

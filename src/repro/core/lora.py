@@ -1,0 +1,63 @@
+"""LoRA utilities: merging, sizing, and wire-format accounting.
+
+The adapter pytrees themselves are built by ``repro.models.init_lora_stack``;
+this module provides the paper-facing operations — merge (W0 + (alpha/r) BA),
+trainable-parameter counts, and the uplink data volume DeltaTheta_c(mu, r)
+used by the latency model (eq. 15).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def merge_adapter(w: jax.Array, lora: dict, scale: float) -> jax.Array:
+    """W' = W0 + scale * (B A) — deploy-time merge for a single projection.
+
+    w: (d_in, d_out); lora: {"a": (r, d_in), "b": (d_out, r)}.
+    """
+    delta = jnp.einsum("or,ri->io", lora["b"].astype(jnp.float32),
+                       lora["a"].astype(jnp.float32)) * scale
+    return (w.astype(jnp.float32) + delta).astype(w.dtype)
+
+
+def count_params(tree: Any) -> int:
+    return sum(int(l.size) for l in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree: Any, bytes_per_param: int = 4) -> int:
+    return count_params(tree) * bytes_per_param
+
+
+def adapter_bytes_per_layer(cfg, rank: int, bytes_per_param: int = 4) -> list:
+    """Delta xi_j of eq. 15 — per-layer LoRA data volume, in bytes.
+
+    Returns a list of length cfg.num_layers (0 for layers whose block type
+    carries none of cfg.lora_targets).
+    """
+    from ..models.model import _lora_dims
+
+    out = []
+    for pat in cfg.layer_kinds:
+        n = 0
+        for t in cfg.lora_targets:
+            dims = _lora_dims(cfg, pat, t)
+            if dims is not None:
+                _, d_in, d_out = dims
+                n += rank * (d_in + d_out)
+        out.append(n * bytes_per_param)
+    return out
+
+
+def split_tree(tree: Any, rep_split: int) -> Tuple[Any, Any]:
+    """Slice every stacked leaf at the repeat axis: ([:s], [s:])."""
+    client = jax.tree.map(lambda v: v[:rep_split], tree)
+    server = jax.tree.map(lambda v: v[rep_split:], tree)
+    return client, server
+
+
+def concat_tree(client: Any, server: Any) -> Any:
+    return jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0),
+                        client, server)

@@ -1,0 +1,405 @@
+"""Joint resource allocation — paper Section VI (P1–P4, Algorithms 2–3).
+
+* P1  subchannel assignment     -> greedy (Algorithm 2)
+* P2  power control             -> exact convex solve: after the paper's
+      log-convexification the per-client optimal PSD is uniform across its
+      (equal-gain) subchannels, so the KKT system reduces to a 1-D
+      bisection on T1/T3 with closed-form minimum-power-for-rate.  A scipy
+      SLSQP solver of the same convex program cross-checks it in tests.
+* P3  split-point selection     -> exhaustive over pattern-aligned splits
+* P4  LoRA rank selection       -> exhaustive over candidate ranks, with
+      E(r) from core.convergence
+* Algorithm 3: block-coordinate descent over P1..P4.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..configs.system import SystemConfig
+from .channel import ClientEnv, min_power_for_rate, rate_for_power, subchannel_bandwidths
+from .convergence import ConvergenceModel, DEFAULT_E
+from .latency import (SplitWorkload, split_workload, t_client_bp, t_client_fp,
+                      t_server_bp, t_server_fp)
+from .split import valid_splits
+from .workload import layer_workloads
+
+
+@dataclass
+class Allocation:
+    """One complete decision (r^s, r^f, p^s, p^f, mu, r) of problem (18)."""
+
+    assign_main: np.ndarray            # (M,) client index per subchannel
+    assign_fed: np.ndarray             # (N,)
+    power_main: np.ndarray             # (K,) total W per client, main uplink
+    power_fed: np.ndarray              # (K,)
+    ell_c: int
+    rank: int
+
+    def bw_main(self, sys_cfg: SystemConfig) -> np.ndarray:
+        bws = subchannel_bandwidths(sys_cfg, "main")
+        K = int(self.power_main.shape[0])
+        return np.array([bws[self.assign_main == k].sum() for k in range(K)])
+
+    def bw_fed(self, sys_cfg: SystemConfig) -> np.ndarray:
+        bws = subchannel_bandwidths(sys_cfg, "fed")
+        K = int(self.power_fed.shape[0])
+        return np.array([bws[self.assign_fed == k].sum() for k in range(K)])
+
+    def rates_main(self, sys_cfg: SystemConfig, envs) -> np.ndarray:
+        bw = self.bw_main(sys_cfg)
+        return np.array([
+            rate_for_power(self.power_main[k], bw[k], envs[k].gain_main,
+                           sys_cfg.noise_psd_w_hz) for k in range(len(envs))])
+
+    def rates_fed(self, sys_cfg: SystemConfig, envs) -> np.ndarray:
+        bw = self.bw_fed(sys_cfg)
+        return np.array([
+            rate_for_power(self.power_fed[k], bw[k], envs[k].gain_fed,
+                           sys_cfg.noise_psd_w_hz) for k in range(len(envs))])
+
+
+@dataclass(frozen=True)
+class Problem:
+    """Everything fixed during one resource-allocation episode."""
+
+    cfg: ArchConfig
+    sys_cfg: SystemConfig
+    envs: Tuple[ClientEnv, ...]
+    seq_len: int
+    batch: int
+    local_steps: int
+    e_model: ConvergenceModel = DEFAULT_E
+    rank_candidates: Tuple[int, ...] = (1, 2, 4, 6, 8)
+
+    def sw(self, ell_c: int, rank: int) -> SplitWorkload:
+        ws = layer_workloads(self.cfg, self.seq_len)
+        return split_workload(self.cfg, ws, ell_c, rank, self.seq_len)
+
+
+# ---------------------------------------------------------------------------
+# objective (eq. 17 with explicit T1/T2/T3)
+# ---------------------------------------------------------------------------
+
+def objective(prob: Problem, alloc: Allocation) -> float:
+    sw = prob.sw(alloc.ell_c, alloc.rank)
+    b, K = prob.batch, len(prob.envs)
+    r_main = alloc.rates_main(prob.sys_cfg, prob.envs)
+    r_fed = alloc.rates_fed(prob.sys_cfg, prob.envs)
+    bits_act = b * sw.gamma_s * 8.0
+    t1 = max(t_client_fp(sw, e, b) + bits_act / max(r, 1e-9)
+             for e, r in zip(prob.envs, r_main))
+    t2 = max(t_client_bp(sw, e, b) for e in prob.envs)
+    t3 = max(sw.dtheta_c * 8.0 / max(r, 1e-9) for r in r_fed)
+    t_local = (t1 + t_server_fp(sw, prob.sys_cfg, K, b)
+               + t_server_bp(sw, prob.sys_cfg, K, b) + t2)
+    return prob.e_model(alloc.rank) * (prob.local_steps * t_local + t3)
+
+
+# ---------------------------------------------------------------------------
+# P1: greedy subchannel assignment (Algorithm 2)
+# ---------------------------------------------------------------------------
+
+def _uniform_power(prob: Problem, n_assigned_bw: np.ndarray) -> np.ndarray:
+    """Power policy used *inside* the greedy: each client spends min(p_max,
+    fair share of p_th)."""
+    K = len(prob.envs)
+    return np.full(K, min(prob.sys_cfg.p_max_w, prob.sys_cfg.p_th_w / K))
+
+
+def greedy_subchannels(prob: Problem, ell_c: int, rank: int) -> Allocation:
+    sys_cfg, envs = prob.sys_cfg, prob.envs
+    K = len(envs)
+    bws_m = subchannel_bandwidths(sys_cfg, "main")
+    bws_f = subchannel_bandwidths(sys_cfg, "fed")
+    M, N = len(bws_m), len(bws_f)
+    assign_m = np.full(M, -1)
+    assign_f = np.full(N, -1)
+    sw = prob.sw(ell_c, rank)
+    b = prob.batch
+    p_k = np.full(K, min(sys_cfg.p_max_w, sys_cfg.p_th_w / K))
+
+    # ---- Phase 1: everyone gets one subchannel ---------------------------
+    # main: weakest compute first; fed: farthest first  (Algorithm 2 l.5-10)
+    free_m = sorted(range(M), key=lambda i: -bws_m[i])
+    free_f = sorted(range(N), key=lambda i: -bws_f[i])
+    for j, k in enumerate(sorted(range(K), key=lambda k: envs[k].f_hz)):
+        assign_m[free_m[j]] = k
+    for j, k in enumerate(sorted(range(K), key=lambda k: -envs[k].d_fed_m)):
+        assign_f[free_f[j]] = k
+    free_m = [i for i in range(M) if assign_m[i] < 0]
+    free_f = [i for i in range(N) if assign_f[i] < 0]
+
+    def t_main(k):
+        bw = bws_m[assign_m == k].sum()
+        r = rate_for_power(p_k[k], bw, envs[k].gain_main, sys_cfg.noise_psd_w_hz)
+        return t_client_fp(sw, envs[k], b) + b * sw.gamma_s * 8.0 / max(r, 1e-9)
+
+    def t_fed(k):
+        bw = bws_f[assign_f == k].sum()
+        r = rate_for_power(p_k[k], bw, envs[k].gain_fed, sys_cfg.noise_psd_w_hz)
+        return sw.dtheta_c * 8.0 / max(r, 1e-9)
+
+    # ---- Phase 2: feed the straggler ------------------------------------
+    cand = set(range(K))
+    for i in sorted(free_m, key=lambda i: -bws_m[i]):
+        if not cand:
+            break
+        n = max(cand, key=t_main)
+        assign_m[i] = n
+    cand = set(range(K))
+    for i in sorted(free_f, key=lambda i: -bws_f[i]):
+        if not cand:
+            break
+        n = max(cand, key=t_fed)
+        assign_f[i] = n
+
+    return Allocation(assign_main=assign_m, assign_fed=assign_f,
+                      power_main=p_k.copy(), power_fed=p_k.copy(),
+                      ell_c=ell_c, rank=rank)
+
+
+# ---------------------------------------------------------------------------
+# P2: power control (exact convex solve via bisection)
+# ---------------------------------------------------------------------------
+
+def _solve_minmax_rate(compute_t: np.ndarray, bits: np.ndarray,
+                       bw: np.ndarray, gain: np.ndarray, noise: float,
+                       p_max: float, p_th: float,
+                       iters: int = 80) -> Tuple[float, np.ndarray]:
+    """min T s.t. compute_t_k + bits_k / R_k <= T, with the minimum-power
+    rate/power tradeoff P_k(R) = noise*bw*(2^(R/bw)-1)/gain_k, P_k <= p_max,
+    sum P_k <= p_th.  Returns (T*, per-client power)."""
+    K = len(bw)
+
+    def power_needed(T):
+        p = np.zeros(K)
+        for k in range(K):
+            if bits[k] <= 0:
+                continue
+            if T <= compute_t[k]:
+                return None
+            r_req = bits[k] / (T - compute_t[k])
+            if bw[k] <= 0:
+                return None
+            p[k] = min_power_for_rate(r_req, bw[k], gain[k], noise)
+        return p
+
+    def feasible(T):
+        p = power_needed(T)
+        return p is not None and np.all(p <= p_max + 1e-15) and p.sum() <= p_th + 1e-15
+
+    # upper bound: everyone at the fair-share power
+    p0 = np.full(K, min(p_max, p_th / max(K, 1)))
+    hi = 0.0
+    for k in range(K):
+        r = rate_for_power(p0[k], bw[k], gain[k], noise)
+        hi = max(hi, compute_t[k] + (bits[k] / max(r, 1e-12) if bits[k] > 0 else 0))
+    hi = max(hi * 1.001, 1e-9)
+    if not feasible(hi):     # pathological: expand until feasible
+        for _ in range(200):
+            hi *= 2.0
+            if feasible(hi):
+                break
+    lo = float(np.max(compute_t))
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        if mid <= lo:
+            break
+        if feasible(mid):
+            hi = mid
+        else:
+            lo = mid
+    p = power_needed(hi)
+    return float(hi), p
+
+
+def solve_power_control(prob: Problem, alloc: Allocation) -> Allocation:
+    """P2 for both uplinks (they are separable — C4/C5 are per-uplink)."""
+    sw = prob.sw(alloc.ell_c, alloc.rank)
+    envs, sys_cfg, b = prob.envs, prob.sys_cfg, prob.batch
+    K = len(envs)
+    noise = sys_cfg.noise_psd_w_hz
+
+    compute = np.array([t_client_fp(sw, e, b) for e in envs])
+    bits_act = np.full(K, b * sw.gamma_s * 8.0)
+    _, p_main = _solve_minmax_rate(compute, bits_act, alloc.bw_main(sys_cfg),
+                                   np.array([e.gain_main for e in envs]),
+                                   noise, sys_cfg.p_max_w, sys_cfg.p_th_w)
+
+    bits_lora = np.full(K, sw.dtheta_c * 8.0)
+    _, p_fed = _solve_minmax_rate(np.zeros(K), bits_lora, alloc.bw_fed(sys_cfg),
+                                  np.array([e.gain_fed for e in envs]),
+                                  noise, sys_cfg.p_max_w, sys_cfg.p_th_w)
+    return replace(alloc, power_main=p_main, power_fed=p_fed)
+
+
+def solve_power_control_slsqp(prob: Problem, alloc: Allocation) -> Allocation:
+    """Same convex program via scipy SLSQP over theta (cross-check path)."""
+    from scipy.optimize import minimize
+
+    sw = prob.sw(alloc.ell_c, alloc.rank)
+    envs, sys_cfg, b = prob.envs, prob.sys_cfg, prob.batch
+    K = len(envs)
+    noise = sys_cfg.noise_psd_w_hz
+
+    def solve_side(bw, gain, compute, bits):
+        act = [k for k in range(K) if bits[k] > 0 and bw[k] > 0]
+        if not act:
+            return np.zeros(K), 0.0
+
+        def power_of_rate(r, k):
+            return min_power_for_rate(r, bw[k], gain[k], noise)
+
+        # variables: rates R_k (k in act) + T
+        def obj(x):
+            return x[-1]
+
+        cons = []
+        for i, k in enumerate(act):
+            cons.append({"type": "ineq",
+                         "fun": (lambda x, i=i, k=k:
+                                 x[-1] - compute[k] - bits[k] / max(x[i], 1e-9))})
+            cons.append({"type": "ineq",
+                         "fun": (lambda x, i=i, k=k:
+                                 sys_cfg.p_max_w - power_of_rate(x[i], k))})
+        cons.append({"type": "ineq",
+                     "fun": lambda x: sys_cfg.p_th_w - sum(
+                         power_of_rate(x[i], k) for i, k in enumerate(act))})
+        p0 = min(sys_cfg.p_max_w, sys_cfg.p_th_w / K)
+        r0 = np.array([rate_for_power(p0, bw[k], gain[k], noise) for k in act])
+        t0 = max(compute[k] + bits[k] / max(r0[i], 1e-9)
+                 for i, k in enumerate(act))
+        x0 = np.concatenate([r0, [t0 * 1.1]])
+        res = minimize(obj, x0, constraints=cons, method="SLSQP",
+                       options={"maxiter": 400, "ftol": 1e-12})
+        p = np.zeros(K)
+        for i, k in enumerate(act):
+            p[k] = power_of_rate(res.x[i], k)
+        return p, float(res.x[-1])
+
+    compute = np.array([t_client_fp(sw, e, b) for e in envs])
+    p_main, _ = solve_side(alloc.bw_main(sys_cfg),
+                           np.array([e.gain_main for e in envs]), compute,
+                           np.full(K, b * sw.gamma_s * 8.0))
+    p_fed, _ = solve_side(alloc.bw_fed(sys_cfg),
+                          np.array([e.gain_fed for e in envs]), np.zeros(K),
+                          np.full(K, sw.dtheta_c * 8.0))
+    return replace(alloc, power_main=p_main, power_fed=p_fed)
+
+
+# ---------------------------------------------------------------------------
+# P3 / P4: exhaustive searches
+# ---------------------------------------------------------------------------
+
+def search_split(prob: Problem, alloc: Allocation) -> Allocation:
+    best, best_t = alloc, objective(prob, alloc)
+    for ell in valid_splits(prob.cfg):
+        cand = solve_power_control(prob, replace(alloc, ell_c=ell))
+        t = objective(prob, cand)
+        if t < best_t:
+            best, best_t = cand, t
+    return best
+
+
+def search_rank(prob: Problem, alloc: Allocation) -> Allocation:
+    best, best_t = alloc, objective(prob, alloc)
+    for r in prob.rank_candidates:
+        cand = solve_power_control(prob, replace(alloc, rank=r))
+        t = objective(prob, cand)
+        if t < best_t:
+            best, best_t = cand, t
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 3: BCD
+# ---------------------------------------------------------------------------
+
+def bcd_minimize_delay(prob: Problem, *, ell0: Optional[int] = None,
+                       rank0: int = 4, eps: float = 1e-6,
+                       max_iters: int = 20, verbose: bool = False
+                       ) -> Tuple[Allocation, List[float]]:
+    splits = valid_splits(prob.cfg)
+    ell = ell0 if ell0 is not None else splits[len(splits) // 2]
+    alloc = greedy_subchannels(prob, ell, rank0)
+    alloc = solve_power_control(prob, alloc)
+    hist = [objective(prob, alloc)]
+    for it in range(max_iters):
+        alloc = greedy_subchannels(prob, alloc.ell_c, alloc.rank)      # P1
+        alloc = solve_power_control(prob, alloc)                       # P2
+        alloc = search_split(prob, alloc)                              # P3
+        alloc = search_rank(prob, alloc)                               # P4
+        hist.append(objective(prob, alloc))
+        if verbose:
+            print(f"BCD iter {it}: T = {hist[-1]:.3f}s "
+                  f"(split={alloc.ell_c}, rank={alloc.rank})")
+        if abs(hist[-2] - hist[-1]) <= eps * max(hist[-2], 1e-12):
+            break
+    return alloc, hist
+
+
+# ---------------------------------------------------------------------------
+# baselines a-d (Section VII-C)
+# ---------------------------------------------------------------------------
+
+def random_allocation(prob: Problem, rng, *, ell_c=None, rank=None) -> Allocation:
+    K = len(prob.envs)
+    sys_cfg = prob.sys_cfg
+    M = sys_cfg.num_subchannels_main
+    N = sys_cfg.num_subchannels_fed
+    splits = valid_splits(prob.cfg)
+    assign_m = rng.integers(0, K, M)
+    assign_f = rng.integers(0, K, N)
+    # every client needs >= 1 channel on each link for feasibility
+    perm = rng.permutation(M)[:K]
+    for k in range(K):
+        assign_m[perm[k]] = k
+    perm = rng.permutation(N)[:K]
+    for k in range(K):
+        assign_f[perm[k]] = k
+    p = np.full(K, min(sys_cfg.p_max_w, sys_cfg.p_th_w / K)) * rng.uniform(0.2, 1.0, K)
+    return Allocation(
+        assign_main=assign_m, assign_fed=assign_f,
+        power_main=p.copy(), power_fed=p.copy(),
+        ell_c=int(ell_c) if ell_c is not None else int(rng.choice(splits)),
+        rank=int(rank) if rank is not None else int(rng.choice(prob.rank_candidates)),
+    )
+
+
+def baseline(prob: Problem, which: str, rng) -> Allocation:
+    """Paper baselines:
+    a: random everything;
+    b: random subchannel+power, optimized split+rank;
+    c: random split, optimized subchannel+power+rank;
+    d: optimized subchannel+power+split, random rank."""
+    if which == "a":
+        return random_allocation(prob, rng)
+    if which == "b":
+        alloc = random_allocation(prob, rng)
+        best, best_t = alloc, objective(prob, alloc)
+        for ell in valid_splits(prob.cfg):
+            for r in prob.rank_candidates:
+                cand = replace(alloc, ell_c=ell, rank=r)
+                t = objective(prob, cand)
+                if t < best_t:
+                    best, best_t = cand, t
+        return best
+    if which == "c":
+        splits = valid_splits(prob.cfg)
+        ell = int(rng.choice(splits))
+        alloc = greedy_subchannels(prob, ell, 4)
+        alloc = solve_power_control(prob, alloc)
+        alloc = search_rank(prob, alloc)
+        return replace(alloc, ell_c=ell)
+    if which == "d":
+        rank = int(rng.choice(prob.rank_candidates))
+        alloc = greedy_subchannels(prob, valid_splits(prob.cfg)[0], rank)
+        alloc = solve_power_control(prob, alloc)
+        alloc = search_split(prob, alloc)
+        return replace(alloc, rank=rank)
+    raise ValueError(which)

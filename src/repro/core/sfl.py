@@ -1,0 +1,275 @@
+"""SflLLM runtime — Algorithm 1 of the paper.
+
+Faithful split-federated semantics:
+
+* K clients each hold the embedding + the first ``ell_c`` layers (frozen)
+  plus their *own* client-side LoRA adapter DeltaW_{c,k};
+* the main server holds the remaining layers + LM head (frozen) plus one
+  shared server-side adapter DeltaW_s;
+* a local step is: client FP -> upload (s_k, y_k) -> server FP + loss over
+  the pooled batch (eq. 2) -> server BP + adapter update (eq. 5) ->
+  download dL/ds_k -> client BP + adapter update (eq. 6);
+* every I local steps the federated server aggregates the client adapters
+  (eq. 7, ``core.aggregation.fedavg``) and broadcasts the result.
+
+The information flow is exactly the paper's: the server function only ever
+receives split-layer activations + labels (never raw tokens), and clients
+only ever receive activation gradients.  Client compute is batched with
+``jax.vmap`` over the client axis — the parallel-clients property SFL adds
+over SL.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, TrainConfig
+from ..models import stack as stack_mod
+from ..models.layers import apply_norm, embed, unembed
+from ..models.model import IGNORE_ID
+from ..models.stack import Runtime
+from ..optim import Optimizer, apply_updates
+from .aggregation import fedavg
+from .lora import split_tree
+from .split import layers_to_reps
+
+
+def quantize_activations(s: jax.Array) -> jax.Array:
+    """int8 per-token symmetric quantization of split-layer activations —
+    a beyond-paper lever on eq. (10): the uplink payload Gamma_s halves
+    (bytes_per_activation 2 -> 1 + a negligible per-token scale).
+
+    Straight-through estimator: forward sees the dequantized value, the
+    backward pass is the identity (the paper's activation-gradient download
+    stays exact)."""
+    scale = jnp.max(jnp.abs(s), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    deq = jnp.round(s / scale) * scale
+    return s + jax.lax.stop_gradient(deq - s)
+
+
+def _ce_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None],
+                               axis=-1)[..., 0]
+    mask = (labels != IGNORE_ID).astype(jnp.float32)
+    return jnp.sum((logz - gold) * mask) / jnp.maximum(mask.sum(), 1.0)
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class SflState:
+    lora_client: Any          # stacked over the client axis K
+    lora_server: Any
+    opt_client: Any
+    opt_server: Any
+    step: jax.Array
+
+
+class SflLLM:
+    """Split-federated LoRA fine-tuning of one ArchConfig model."""
+
+    def __init__(self, cfg: ArchConfig, params: dict, ell_c: int,
+                 train_cfg: TrainConfig, optimizer: Optimizer,
+                 rt: Runtime = Runtime(attn_impl="naive"),
+                 aux_coef: Optional[float] = None,
+                 act_quant: bool = False):
+        self.cfg = cfg
+        self.tc = train_cfg
+        self.rt = rt
+        self.opt = optimizer
+        self.rep_split = layers_to_reps(cfg, ell_c)
+        self.ell_c = ell_c
+        self.aux_coef = cfg.router_aux_coef if aux_coef is None else aux_coef
+        self.act_quant = act_quant
+        # frozen weights, physically partitioned
+        self.client_base = {
+            "embed": params["embed"],
+            "layers": split_tree(params["layers"], self.rep_split)[0],
+        }
+        self.server_base = {
+            "embed": params["embed"],            # unembedding / LM head
+            "layers": split_tree(params["layers"], self.rep_split)[1],
+            "final_norm": params["final_norm"],
+        }
+        self._jit_local_step = jax.jit(self._local_step)
+        self._jit_eval = jax.jit(self._eval_loss)
+
+    # ------------------------------------------------------------------
+    def init_state(self, lora_template) -> SflState:
+        """lora_template: adapter for the FULL stack (models.init_lora_stack).
+
+        The client part is replicated K times (every client starts from the
+        same broadcast global adapter, as after an aggregation round)."""
+        lc, ls = split_tree(lora_template, self.rep_split)
+        K = self.tc.num_clients
+        lc_k = jax.tree.map(lambda v: jnp.broadcast_to(v, (K,) + v.shape).copy(), lc)
+        return SflState(
+            lora_client=lc_k,
+            lora_server=ls,
+            opt_client=self.opt.init(lc_k),
+            opt_server=self.opt.init(ls),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    # ------------------------------------------------------------------
+    def _client_forward(self, lora_c, tokens, frontend_emb):
+        """One client's FP: embed + layers [0, ell_c) -> activations s_k."""
+        cfg, rt = self.cfg, self.rt
+        S = tokens.shape[1] + (0 if frontend_emb is None else frontend_emb.shape[1])
+        positions = jnp.arange(S, dtype=jnp.int32)
+        x = embed(cfg, self.client_base["embed"], tokens,
+                  positions[-tokens.shape[1]:])
+        if frontend_emb is not None:
+            x = jnp.concatenate([frontend_emb.astype(x.dtype), x], axis=1)
+        x, _, aux = stack_mod.apply_stack(
+            cfg, self.client_base["layers"], x, positions=positions,
+            lora=lora_c, rt=rt, mode="train")
+        return x, aux
+
+    def _server_loss(self, lora_s, acts, labels):
+        """Pooled loss on the main server.  acts: (K, b, S, d)."""
+        cfg, rt = self.cfg, self.rt
+        K, b, S, d = acts.shape
+        x = acts.reshape(K * b, S, d)
+        positions = jnp.arange(S, dtype=jnp.int32)
+        x, _, aux = stack_mod.apply_stack(
+            cfg, self.server_base["layers"], x, positions=positions,
+            lora=lora_s, rt=rt, mode="train")
+        x = apply_norm(cfg, x, self.server_base["final_norm"])
+        logits = unembed(cfg, self.server_base["embed"], x)
+        lbl = labels.reshape(K * b, -1)
+        F = logits.shape[1] - lbl.shape[1]
+        if F > 0:
+            logits = logits[:, F:]
+        loss = _ce_loss(logits, lbl)
+        return loss + self.aux_coef * aux, loss
+
+    # ------------------------------------------------------------------
+    def _local_step(self, state: SflState, batches: Dict[str, jax.Array]):
+        """One fine-tuning round (steps a-f of Section IV-A).
+
+        batches: tokens (K, b, S), labels (K, b, S), optional frontend_emb.
+        """
+        tokens, labels = batches["tokens"], batches["labels"]
+        fe = batches.get("frontend_emb")
+
+        # (a) client-side FP, all clients in parallel ----------------------
+        def cf(lora_c, tok, f):
+            return self._client_forward(lora_c, tok, f)
+
+        if fe is None:
+            fwd = lambda ls: jax.vmap(lambda l, t: cf(l, t, None))(ls, tokens)
+        else:
+            fwd = lambda ls: jax.vmap(cf)(ls, tokens, fe)
+        if self.act_quant:
+            base_fwd = fwd
+            fwd = lambda ls: (lambda pair:
+                              (quantize_activations(pair[0]), pair[1]))(base_fwd(ls))
+        (acts, client_aux), client_vjp = jax.vjp(fwd, state.lora_client)
+
+        # (b) upload (s_k, y_k) — wireless; modeled in core.latency --------
+        # (c,d) server FP + BP on the pooled activations --------------------
+        grad_fn = jax.value_and_grad(self._server_loss, argnums=(0, 1),
+                                     has_aux=True)
+        (total, loss), (g_server, g_acts) = grad_fn(state.lora_server, acts,
+                                                    labels)
+
+        # (e) download dL/ds_k; (f) client-side BP --------------------------
+        # client-side MoE aux loss contributes through the aux cotangent
+        (g_client,) = client_vjp((g_acts,
+                                  jnp.full_like(client_aux, self.aux_coef)))
+
+        upd_s, opt_s = self.opt.update(g_server, state.opt_server,
+                                       state.lora_server)
+        upd_c, opt_c = self.opt.update(g_client, state.opt_client,
+                                       state.lora_client)
+        new = SflState(
+            lora_client=apply_updates(state.lora_client, upd_c),
+            lora_server=apply_updates(state.lora_server, upd_s),
+            opt_client=opt_c,
+            opt_server=opt_s,
+            step=state.step + 1,
+        )
+        return new, {"loss": loss, "total": total}
+
+    # ------------------------------------------------------------------
+    def aggregate(self, state: SflState, sample_counts) -> SflState:
+        """Federated-server round (eq. 7): FedAvg client adapters, broadcast."""
+        K = self.tc.num_clients
+        clients = [jax.tree.map(lambda v: v[k], state.lora_client)
+                   for k in range(K)]
+        global_c = fedavg(clients, list(sample_counts))
+        lc_k = jax.tree.map(lambda v: jnp.broadcast_to(v, (K,) + v.shape).copy(),
+                            global_c)
+        return SflState(lora_client=lc_k, lora_server=state.lora_server,
+                        opt_client=state.opt_client,
+                        opt_server=state.opt_server, step=state.step)
+
+    # ------------------------------------------------------------------
+    def local_step(self, state, batches):
+        return self._jit_local_step(state, batches)
+
+    def train(self, state: SflState, data_iter, *, global_rounds: int,
+              sample_counts, log_every: int = 0, callback=None):
+        """E global rounds x I local steps (Algorithm 1)."""
+        history = []
+        for e in range(global_rounds):
+            for i in range(self.tc.local_steps):
+                state, metrics = self.local_step(state, next(data_iter))
+                history.append(float(metrics["loss"]))
+                if log_every and len(history) % log_every == 0:
+                    print(f"round {e} step {i} loss {history[-1]:.4f}")
+                if callback is not None:
+                    callback(state, history)
+            state = self.aggregate(state, sample_counts)
+        return state, history
+
+    # ------------------------------------------------------------------
+    def _eval_loss(self, state: SflState, batch):
+        """Validation loss through client 0's adapter (post-aggregation all
+        clients are identical)."""
+        lora_c0 = jax.tree.map(lambda v: v[0], state.lora_client)
+        acts, _ = self._client_forward(lora_c0, batch["tokens"],
+                                       batch.get("frontend_emb"))
+        _, loss = self._server_loss(state.lora_server, acts[None],
+                                    batch["labels"][None])
+        return loss
+
+    def eval_loss(self, state, batch):
+        return self._jit_eval(state, batch)
+
+
+# ---------------------------------------------------------------------------
+# centralized baseline (Section VII-B comparison)
+# ---------------------------------------------------------------------------
+
+class CentralizedLoRA:
+    """Pooled-data LoRA fine-tuning — the paper's comparison baseline."""
+
+    def __init__(self, cfg: ArchConfig, params: dict, train_cfg: TrainConfig,
+                 optimizer: Optimizer, rt: Runtime = Runtime(attn_impl="naive")):
+        from ..models.model import loss_fn
+
+        self.cfg, self.tc, self.rt, self.opt = cfg, train_cfg, rt, optimizer
+        self.params = params
+
+        def step(lora, opt_state, batch):
+            (total, m), grads = jax.value_and_grad(
+                lambda l: loss_fn(cfg, params, l, batch, rt=rt),
+                has_aux=True)(lora)
+            upd, opt_state = optimizer.update(grads, opt_state, lora)
+            return apply_updates(lora, upd), opt_state, m
+
+        self._jit_step = jax.jit(step)
+
+    def init_state(self, lora):
+        return lora, self.opt.init(lora)
+
+    def step(self, lora, opt_state, batch):
+        return self._jit_step(lora, opt_state, batch)

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the compute hot-spots (validated in interpret
+mode on CPU; set interpret=False on real TPUs):
+
+* lora_matmul     — fused y = xW + scale·(xAᵀ)Bᵀ (the paper's adapter math)
+* flash_attention — online-softmax causal GQA attention, VMEM-resident tiles
+* ssd_scan        — Mamba2 chunked state-space duality forward
+"""
+from .flash_attention import flash_attention, flash_attention_ref
+from .lora_matmul import lora_matmul, lora_matmul_ref
+from .ssd_scan import ssd_scan, ssd_sequential_ref
+
+__all__ = [
+    "flash_attention", "flash_attention_ref", "lora_matmul",
+    "lora_matmul_ref", "ssd_scan", "ssd_sequential_ref",
+]

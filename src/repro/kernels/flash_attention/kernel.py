@@ -1,0 +1,103 @@
+"""FlashAttention forward Pallas kernel (TPU target, GQA-aware).
+
+Grid (B, H, Sq/bq, Sk/bk), Sk innermost.  VMEM scratch carries the online
+softmax state (m, l replicated over 128 lanes — the Mosaic-friendly layout)
+and the f32 output accumulator across Sk steps; the (bq, bk) score tile
+never leaves VMEM — that is the whole point versus the jnp twin in
+``repro.models.attention`` whose score tiles round-trip HBM.
+
+GQA is folded into the k/v BlockSpec index maps (q head h reads kv head
+h // group).  Causal + sliding-window masking from absolute positions; the
+causal fast path skips score work for fully-masked tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+_LANES = 128
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, bq: int, bk: int, k_steps: int, q_offset: int,
+            window: int, seq_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = q_offset + qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    reachable = ki * bk <= q_offset + qi * bq + bq - 1   # any unmasked?
+
+    @pl.when(reachable)
+    def _compute():
+        mask = k_pos <= q_pos
+        if window:
+            mask &= (q_pos - k_pos) < window
+        mask &= k_pos < seq_k
+        s = jax.lax.dot_general(
+            q_ref[0, 0], k_ref[0, 0],
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...][:, :1]                      # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new) * mask
+        alpha = jnp.exp(m_prev - m_new)                 # (bq, 1)
+        l_new = l_ref[...][:, :1] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0, 0],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ki == k_steps - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...][:, :1], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, window: int = 0, seq_k: int = 0,
+                           q_offset: int = -1, bq: int = 256, bk: int = 256,
+                           interpret: bool = False):
+    """q: (B, H, Sq, D); k/v: (B, KH, Sk, D), dims divisible by blocks
+    (ops.py pads).  Causal; ``q_offset`` is the absolute position of q row 0
+    (default: aligned at the TRUE sequence end, seq_k - Sq)."""
+    B, H, Sq, D = q.shape
+    KH, Sk = k.shape[1], k.shape[2]
+    G = H // KH
+    bq, bk = min(bq, Sq), min(bk, Sk)
+    grid = (B, H, Sq // bq, Sk // bk)
+    seq_k = seq_k or Sk
+    if q_offset < 0:
+        q_offset = max(seq_k - Sq, 0)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=D ** -0.5, bq=bq, bk=bk,
+                          k_steps=grid[3], q_offset=q_offset, window=window,
+                          seq_k=seq_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, _LANES), jnp.float32),
+                        pltpu.VMEM((bq, _LANES), jnp.float32),
+                        pltpu.VMEM((bq, D), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)

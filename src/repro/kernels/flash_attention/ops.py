@@ -1,0 +1,36 @@
+"""jit'd wrapper: (B, S, H, D) model layout -> kernel layout + padding."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_kernel
+from .ref import flash_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bq", "bk",
+                                             "interpret", "use_kernel"))
+def flash_attention(q, k, v, *, window: int = 0, bq: int = 256, bk: int = 256,
+                    interpret: bool = True, use_kernel: bool = True):
+    """Causal GQA attention.  q: (B, Sq, H, D); k/v: (B, Sk, KH, D) —
+    the model layout of ``repro.models.attention``."""
+    B, Sq, H, D = q.shape
+    Sk, KH = k.shape[1], k.shape[2]
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if not use_kernel:
+        o = flash_attention_ref(qt, kt, vt, window=window)
+        return o.transpose(0, 2, 1, 3)
+    bq_, bk_ = min(bq, Sq), min(bk, Sk)
+    pq, pk = (-Sq) % bq_, (-Sk) % bk_
+    if pq or pk:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pq), (0, 0)))
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    o = flash_attention_kernel(qt, kt, vt, window=window, seq_k=Sk,
+                               q_offset=max(Sk - Sq, 0),
+                               bq=bq_, bk=bk_, interpret=interpret)
+    return o[:, :, :Sq].transpose(0, 2, 1, 3)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle: full-score-matrix causal (optionally windowed) GQA
+attention, layout (B, H, S, D)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, window: int = 0, seq_k: int = 0):
+    """q: (B, H, Sq, D); k/v: (B, KH, Sk, D); causal with q and k aligned at
+    the sequence end (q_pos = Sk - Sq + arange(Sq)).  seq_k masks padding
+    beyond the true Sk (0 = no padding)."""
+    B, H, Sq, D = q.shape
+    KH, Sk = k.shape[1], k.shape[2]
+    G = H // KH
+    kr = jnp.repeat(k, G, axis=1)
+    vr = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * D ** -0.5
+    q_pos = (Sk - Sq) + jnp.arange(Sq)
+    k_pos = jnp.arange(Sk)
+    mask = k_pos[None, :] <= q_pos[:, None]
+    if window:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    if seq_k:
+        mask &= k_pos[None, :] < seq_k
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
+    return o.astype(q.dtype)

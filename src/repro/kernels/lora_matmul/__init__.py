@@ -1,0 +1,5 @@
+from .kernel import lora_matmul_kernel
+from .ops import lora_matmul
+from .ref import lora_matmul_ref
+
+__all__ = ["lora_matmul", "lora_matmul_kernel", "lora_matmul_ref"]

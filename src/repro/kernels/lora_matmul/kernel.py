@@ -1,0 +1,71 @@
+"""Fused LoRA matmul Pallas kernel: y = x W + scale * (x A^T) B^T.
+
+The low-rank path rides in the same (bm, bn) output tile as the base
+matmul — the extra arithmetic per rank is exactly the paper's
+DeltaPhi(mu, r) term, and fusing it avoids a second HBM pass over x.
+
+Grid (M/bm, N/bn, K/bk), K innermost; VMEM scratch carries the f32 output
+accumulator and the (bm, r) low-rank activation accumulator across K steps;
+on the last K step the low-rank product is folded in and the tile is
+written once.  MXU alignment: bm/bn/bk multiples of 128 (r is padded to the
+lane width by Mosaic; r itself stays tiny — the paper's ranks are 1..8).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, a_ref, b_ref, y_ref, acc_ref, z_ref, *,
+            scale: float, k_steps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    xb = x_ref[...]
+    acc_ref[...] += jnp.dot(xb, w_ref[...],
+                            preferred_element_type=jnp.float32)
+    # low-rank activation: z += x_tile @ A_tile^T   (bm, r)
+    z_ref[...] += jnp.dot(xb, a_ref[...].T,
+                          preferred_element_type=jnp.float32)
+
+    @pl.when(k == k_steps - 1)
+    def _finish():
+        y = acc_ref[...] + scale * jnp.dot(
+            z_ref[...], b_ref[...].T, preferred_element_type=jnp.float32)
+        y_ref[...] = y.astype(y_ref.dtype)
+
+
+def lora_matmul_kernel(x, w, a, b, *, scale: float, bm: int = 256,
+                       bn: int = 256, bk: int = 512,
+                       interpret: bool = False):
+    """x: (M, K); w: (K, N); a: (r, K); b: (N, r) — dims must divide by the
+    block shape (ops.py pads)."""
+    M, K = x.shape
+    N = w.shape[1]
+    r = a.shape[0]
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    grid = (M // bm, N // bn, K // bk)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),     # x
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),     # w
+            pl.BlockSpec((r, bk), lambda i, j, k: (0, k)),      # a
+            pl.BlockSpec((bn, r), lambda i, j, k: (j, 0)),      # b
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32),
+                        pltpu.VMEM((bm, r), jnp.float32)],
+        interpret=interpret,
+    )(x, w, a, b)

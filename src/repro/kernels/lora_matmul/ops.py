@@ -1,0 +1,39 @@
+"""jit'd wrapper: padding to block multiples + leading-dim flattening."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import lora_matmul_kernel
+from .ref import lora_matmul_ref
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bm", "bn", "bk",
+                                             "interpret", "use_kernel"))
+def lora_matmul(x, w, a, b, *, scale: float = 1.0, bm: int = 256,
+                bn: int = 256, bk: int = 512, interpret: bool = True,
+                use_kernel: bool = True):
+    """y = x @ w + scale * (x @ a^T) @ b^T with arbitrary leading dims on x.
+
+    On this container the kernel runs in interpret mode (CPU); on TPU set
+    interpret=False.  use_kernel=False routes to the jnp oracle.
+    """
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    N = w.shape[1]
+    x2 = x.reshape(-1, K)
+    if not use_kernel:
+        return lora_matmul_ref(x2, w, a, b, scale).reshape(*lead, N)
+
+    M = x2.shape[0]
+    bm_, bn_, bk_ = min(bm, M), min(bn, N), min(bk, K)
+    pm, pn, pk = (-M) % bm_, (-N) % bn_, (-K) % bk_
+    xp = jnp.pad(x2, ((0, pm), (0, pk)))
+    wp = jnp.pad(w, ((0, pk), (0, pn)))
+    ap = jnp.pad(a, ((0, 0), (0, pk)))
+    bp = jnp.pad(b, ((0, pn), (0, 0)))
+    y = lora_matmul_kernel(xp, wp, ap, bp, scale=scale, bm=bm_, bn=bn_,
+                           bk=bk_, interpret=interpret)
+    return y[:M, :N].reshape(*lead, N)

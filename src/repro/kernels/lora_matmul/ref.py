@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused LoRA matmul."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lora_matmul_ref(x, w, a, b, scale: float):
+    """y = x @ w + scale * (x @ a^T) @ b^T.
+
+    x: (M, K); w: (K, N); a: (r, K); b: (N, r).  f32 accumulation.
+    """
+    xf = x.astype(jnp.float32)
+    y = xf @ w.astype(jnp.float32)
+    z = xf @ a.astype(jnp.float32).T
+    y = y + scale * (z @ b.astype(jnp.float32).T)
+    return y.astype(x.dtype)

@@ -1,0 +1,36 @@
+"""jit'd wrapper: model layout -> kernel layout, pre-scaling, padding."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_scan_kernel
+from .ref import ssd_sequential_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret",
+                                             "use_kernel"))
+def ssd_scan(xh, Bm, Cm, dt, A, *, chunk: int = 256, interpret: bool = True,
+             use_kernel: bool = True):
+    """SSD forward, model layout: xh (B, S, nh, hd); Bm/Cm (B, S, N);
+    dt (B, S, nh) post-softplus; A (nh,) negative.  Returns y (B,S,nh,hd)
+    WITHOUT the D-residual (caller adds D*x, matching models.ssm)."""
+    if not use_kernel:
+        y, _ = ssd_sequential_ref(xh, Bm, Cm, dt, A)
+        return y.astype(xh.dtype)
+    B, S, nh, hd = xh.shape
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    dtf = dt.astype(jnp.float32)
+    xdt = (xh.astype(jnp.float32) * dtf[..., None]).transpose(0, 2, 1, 3)
+    g = (dtf * A[None, None, :]).transpose(0, 2, 1)
+    Bk, Ck = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+    if pad:
+        xdt = jnp.pad(xdt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        g = jnp.pad(g, ((0, 0), (0, 0), (0, pad)))
+        Bk = jnp.pad(Bk, ((0, 0), (0, pad), (0, 0)))
+        Ck = jnp.pad(Ck, ((0, 0), (0, pad), (0, 0)))
+    y = ssd_scan_kernel(xdt, g, Bk, Ck, chunk=Q, interpret=interpret)
+    return y[:, :, :S].transpose(0, 2, 1, 3).astype(xh.dtype)

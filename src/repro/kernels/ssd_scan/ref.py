@@ -1,0 +1,35 @@
+"""Oracles for the SSD kernel.
+
+``ssd_sequential_ref`` is the gold-standard per-token recurrence
+(h_t = h_{t-1} exp(A dt_t) + dt_t B_t (x) x_t ; y_t = C_t . h_t); both the
+chunked jnp implementation (models.ssm.ssd_chunked) and the Pallas kernel
+are validated against it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_sequential_ref(xh, Bm, Cm, dt, A):
+    """xh: (B, S, nh, hd); Bm/Cm: (B, S, N); dt: (B, S, nh); A: (nh,) < 0.
+
+    Returns (y (B, S, nh, hd), h_last (B, nh, hd, N)).  f32 throughout.
+    """
+    Bsz, S, nh, hd = xh.shape
+    N = Bm.shape[-1]
+    xh = xh.astype(jnp.float32)
+    Bm = Bm.astype(jnp.float32)
+    Cm = Cm.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+
+    def step(h, t):
+        decay = jnp.exp(dt[:, t] * A[None, :])                # (B, nh)
+        upd = jnp.einsum("bn,bhd,bh->bhdn", Bm[:, t], xh[:, t], dt[:, t])
+        h = h * decay[..., None, None] + upd
+        y = jnp.einsum("bn,bhdn->bhd", Cm[:, t], h)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, nh, hd, N), jnp.float32)
+    h_last, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    return ys.transpose(1, 0, 2, 3), h_last

@@ -1,0 +1,24 @@
+"""Production mesh builders (TPU v5e pods; host-device placeholders on CPU).
+
+A FUNCTION, not a module-level constant — importing this module must not
+touch jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    from jax.sharding import AxisType
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(data: int = 2, model: int = 2):
+    """Small mesh for CPU tests (requires >= data*model host devices)."""
+    from jax.sharding import AxisType
+
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)

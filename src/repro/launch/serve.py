@@ -1,0 +1,78 @@
+"""Serving driver: batched prefill + greedy decode with the (optionally
+LoRA-merged) model.  CPU demo:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gpt2-s --reduced \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gpt2-s")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--rank", type=int, default=4)
+    ap.add_argument("--lora-checkpoint", default="")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from ..configs import get_arch
+    from ..models import (Runtime, decode_step, init_lora_stack, init_params,
+                          prefill)
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(num_layers=max(4, len(cfg.pattern)))
+    rt = Runtime(attn_impl="naive")
+
+    key = jax.random.key(args.seed)
+    params = init_params(cfg, key)
+    lora = init_lora_stack(cfg, jax.random.key(args.seed + 1), args.rank)
+    if args.lora_checkpoint:
+        from ..checkpoint import restore_pytree
+        lora = restore_pytree(args.lora_checkpoint, lora)
+
+    B, P, G = args.batch, args.prompt_len, args.gen
+    prompts = jax.random.randint(key, (B, P), 5, cfg.vocab_size)
+    cache_len = P + G + (cfg.frontend_tokens if cfg.frontend else 0)
+
+    fe = (jnp.zeros((B, cfg.frontend_tokens, cfg.d_model))
+          if cfg.frontend else None)
+
+    jprefill = jax.jit(lambda p, l, t: prefill(
+        cfg, p, t, lora=l, rt=rt, frontend_emb=fe, cache_len=cache_len))
+    jdecode = jax.jit(lambda p, l, t, c, i: decode_step(
+        cfg, p, t, c, i, lora=l, rt=rt))
+
+    t0 = time.time()
+    logits, caches = jprefill(params, lora, prompts)
+    jax.block_until_ready(logits)
+    t1 = time.time()
+    tok = jnp.argmax(logits, -1)[:, None]
+    out = [tok]
+    pos0 = P + (cfg.frontend_tokens if cfg.frontend else 0)
+    for i in range(G - 1):
+        logits, caches = jdecode(params, lora, tok, caches,
+                                 jnp.int32(pos0 + i))
+        tok = jnp.argmax(logits, -1)[:, None]
+        out.append(tok)
+    gen = jnp.concatenate(out, axis=1)
+    jax.block_until_ready(gen)
+    t2 = time.time()
+    print(f"prefill {B}x{P} in {t1-t0:.2f}s; "
+          f"decoded {B}x{G} tokens in {t2-t1:.2f}s "
+          f"({B*G/(t2-t1):.1f} tok/s)")
+    print("sample token ids:", gen[0, :12].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,143 @@
+"""Step functions + abstract input specs for the launcher and dry-run.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input — weak-type-correct, shardable, no device allocation.  Decode
+shapes lower ``decode_step`` (ONE token against a seq_len KV cache), never
+``train_step``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..models import model as model_mod
+from ..models.stack import Runtime
+from ..optim import Optimizer, adamw, apply_updates
+
+PARAM_DTYPE = jnp.bfloat16
+ACT_DTYPE = jnp.bfloat16
+
+# Sliding window applied to *pure full-attention* archs for the long_500k
+# decode variant (see DESIGN.md §Input-shape applicability).
+LONG_CONTEXT_WINDOW = 8192
+
+
+def long_context_variant(cfg: ArchConfig) -> ArchConfig:
+    """Sub-quadratic variant for long_500k: unchanged for SSM/hybrid
+    (O(1)/windowed state already); sliding-window for full-attention archs."""
+    if cfg.pure_full_attention:
+        return cfg.replace(attn_window=LONG_CONTEXT_WINDOW,
+                           max_seq_len=max(cfg.max_seq_len, 1 << 20))
+    if cfg.family == "hybrid" and cfg.attn_window == 0:
+        # Jamba's attention layers keep a window at long context
+        return cfg.replace(attn_window=LONG_CONTEXT_WINDOW,
+                           max_seq_len=max(cfg.max_seq_len, 1 << 20))
+    return cfg.replace(max_seq_len=max(cfg.max_seq_len, 1 << 20))
+
+
+def arch_for_shape(cfg: ArchConfig, shape: ShapeConfig) -> ArchConfig:
+    if shape.name == "long_500k":
+        return long_context_variant(cfg)
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ArchConfig, rt: Runtime, optimizer: Optimizer):
+    """LoRA fine-tune step — the datacenter lowering of one SflLLM local
+    round's compute (see DESIGN.md §2: split + LoRA is mathematically a
+    LoRA step; grads flow ONLY to the adapters, base stays frozen)."""
+
+    def train_step(params, lora, opt_state, batch):
+        (total, metrics), grads = jax.value_and_grad(
+            lambda l: model_mod.loss_fn(cfg, params, l, batch, rt=rt),
+            has_aux=True)(lora)
+        updates, opt_state = optimizer.update(grads, opt_state, lora)
+        lora = apply_updates(lora, updates)
+        return lora, opt_state, metrics
+
+    return train_step
+
+
+def make_full_finetune_step(cfg: ArchConfig, rt: Runtime, optimizer: Optimizer):
+    """Full fine-tuning baseline (what the paper's LoRA choice avoids)."""
+
+    def train_step(params, opt_state, batch):
+        (total, metrics), grads = jax.value_and_grad(
+            lambda p: model_mod.loss_fn(cfg, p, None, batch, rt=rt),
+            has_aux=True)(params)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, rt: Runtime):
+    def prefill_step(params, lora, batch):
+        logits, caches = model_mod.prefill(
+            cfg, params, batch["tokens"], lora=lora, rt=rt,
+            frontend_emb=batch.get("frontend_emb"),
+            cache_len=batch["tokens"].shape[1]
+            + (batch["frontend_emb"].shape[1] if "frontend_emb" in batch else 0))
+        return logits, caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, rt: Runtime):
+    def decode_step(params, lora, token, caches, cur_index):
+        logits, caches = model_mod.decode_step(cfg, params, token, caches,
+                                               cur_index, lora=lora, rt=rt)
+        return logits, caches
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    F = cfg.frontend_tokens if cfg.frontend else 0
+    out = {
+        "tokens": _sds((B, S - F), jnp.int32),
+    }
+    if shape.kind == "train":
+        out["labels"] = _sds((B, S - F), jnp.int32)
+    if F:
+        out["frontend_emb"] = _sds((B, F, cfg.d_model), ACT_DTYPE)
+    return out
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, *,
+                optimizer: Optional[Optimizer] = None,
+                lora_rank: Optional[int] = None,
+                param_dtype=PARAM_DTYPE) -> Tuple[tuple, dict]:
+    """-> (args, {}) abstract argument tuple for the step of shape.kind."""
+    cfg = arch_for_shape(cfg, shape)
+    params = model_mod.abstract_params(cfg, param_dtype)
+    lora = model_mod.abstract_lora(cfg, lora_rank, param_dtype)
+    if shape.kind == "train":
+        opt = optimizer or adamw(1e-4)
+        opt_state = jax.eval_shape(opt.init, lora)
+        return (params, lora, opt_state, batch_specs(cfg, shape)), {}
+    if shape.kind == "prefill":
+        return (params, lora, batch_specs(cfg, shape)), {}
+    # decode: ONE token + seq_len cache
+    B = shape.global_batch
+    caches = model_mod.abstract_cache(cfg, B, shape.seq_len, ACT_DTYPE)
+    token = _sds((B, 1), jnp.int32)
+    cur = _sds((), jnp.int32)
+    return (params, lora, token, caches, cur), {}

@@ -1,0 +1,357 @@
+"""GQA attention: naive, chunked online-softmax (flash-style, pure JAX),
+sliding-window variants, and a KV-cache decode path.
+
+The chunked implementation is the mathematical twin of
+``repro.kernels.flash_attention`` — the Pallas kernel targets TPU VMEM
+tiling, this one is what dry-runs lower (the CPU host target cannot compile
+Pallas).  Both share the same online-softmax recurrence.
+
+KV caches store *post-rope* keys plus an absolute-position array so that
+sliding-window ring buffers stay correct at arbitrary offsets.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, dense, init_dense
+
+NEG_INF = -1e30
+
+
+def init_attention(cfg, key, dtype) -> dict:
+    d = cfg.d_model
+    h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    bias = cfg.norm == "layernorm"
+    return {
+        "wq": init_dense(ks[0], d, h * hd, dtype, bias=bias),
+        "wk": init_dense(ks[1], d, kh * hd, dtype, bias=bias),
+        "wv": init_dense(ks[2], d, kh * hd, dtype, bias=bias),
+        "wo": init_dense(ks[3], h * hd, d, dtype, bias=bias),
+    }
+
+
+def _proj_qkv(cfg, p, x, lora, lora_scale):
+    """Project and reshape to (B, S, H|KH, D), rope NOT yet applied."""
+    B, S, _ = x.shape
+    h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+
+    def _l(name):
+        return None if lora is None or name not in lora else lora[name]
+
+    q = dense(x, p["wq"]["w"], p["wq"].get("b"), _l("q"), lora_scale)
+    k = dense(x, p["wk"]["w"], p["wk"].get("b"), _l("k"), lora_scale)
+    v = dense(x, p["wv"]["w"], p["wv"].get("b"), _l("v"), lora_scale)
+    return (q.reshape(B, S, h, hd), k.reshape(B, S, kh, hd), v.reshape(B, S, kh, hd))
+
+
+# ---------------------------------------------------------------------------
+# core attention math
+# ---------------------------------------------------------------------------
+
+def _mask(q_pos, k_pos, window: int):
+    """(Sq, Sk) bool; k_pos < 0 marks padding slots."""
+    m = (k_pos[None, :] <= q_pos[:, None]) & (k_pos[None, :] >= 0)
+    if window:
+        m &= (q_pos[:, None] - k_pos[None, :]) < window
+    return m
+
+
+def naive_attention(q, k, v, q_pos, k_pos, window: int = 0) -> jax.Array:
+    """Full-score-matrix attention (small shapes / oracle / decode).
+
+    Operands stay in their input dtype with f32 MXU accumulation
+    (preferred_element_type) — for bf16 KV caches this avoids materializing
+    an f32 copy of the whole cache (decode_32k: 3x cache traffic saved,
+    EXPERIMENTS.md §Perf #8); for f32 inputs it is bit-identical to the
+    cast formulation."""
+    B, Sq, H, D = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    qr = q.reshape(B, Sq, KH, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qr, k,
+                   preferred_element_type=jnp.float32) * D ** -0.5
+    s = jnp.where(_mask(q_pos, k_pos, window)[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def _chunk_kv(k, v, k_pos, kv_chunk):
+    B, Sk, KH, D = k.shape
+    pad = (-Sk) % kv_chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=-1)
+    n = (Sk + pad) // kv_chunk
+    kc = k.reshape(B, n, kv_chunk, KH, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n, kv_chunk, KH, D).transpose(1, 0, 2, 3, 4)
+    pc = k_pos.reshape(n, kv_chunk)
+    return kc, vc, pc, pad
+
+
+def _flash_fwd_scan(q, k, v, q_pos, k_pos, window, kv_chunk,
+                    s_low_precision: bool = False):
+    """Online-softmax forward.  Returns (out (B,Sq,KH,G,D) f32,
+    lse (B,KH,G,Sq) f32).
+
+    ``s_low_precision`` keeps the score einsum in the input dtype (bf16
+    accumulation): when the TP degree does not divide the KV-head count the
+    head_dim contraction gets sharded and the score tiles are all-reduced —
+    bf16 halves that wire traffic (llama4 hillclimb, EXPERIMENTS.md §Perf).
+    """
+    B, Sq, H, D = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    kc, vc, pc, _ = _chunk_kv(k, v, k_pos, kv_chunk)
+    qs = (q if s_low_precision else q.astype(jnp.float32))
+    qs = qs.reshape(B, Sq, KH, G, D) * jnp.asarray(D ** -0.5, qs.dtype)
+    qf = qs.astype(jnp.float32) if not s_low_precision else qs
+
+    m0 = jnp.full((B, KH, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KH, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Sq, KH, G, D), jnp.float32)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        ki, vi, pi = xs
+        if s_low_precision:
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qs, ki).astype(jnp.float32)
+        else:
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, ki.astype(jnp.float32))
+        valid = _mask(q_pos, pi, window)                       # (Sq, C)
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None]) * valid[None, None, None]
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        # p rides to the MXU in bf16 (flash-kernel convention): halves the
+        # probability-tile HBM traffic of this jnp twin; acc stays f32.
+        pv = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(vi.dtype), vi,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * alpha.transpose(0, 3, 1, 2)[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, pc))
+    denom = jnp.maximum(l, 1e-30)
+    out = acc / denom.transpose(0, 3, 1, 2)[..., None]
+    lse = m + jnp.log(denom)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def _flash_attention(q, k, v, q_pos, k_pos, window: int, kv_chunk: int,
+                     s_low_precision: bool = False):
+    out, _ = _flash_fwd_scan(q, k, v, q_pos, k_pos, window, kv_chunk,
+                             s_low_precision)
+    B, Sq, H, D = q.shape
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def _flash_fwd(q, k, v, q_pos, k_pos, window, kv_chunk,
+               s_low_precision=False):
+    out, lse = _flash_fwd_scan(q, k, v, q_pos, k_pos, window, kv_chunk,
+                               s_low_precision)
+    B, Sq, H, D = q.shape
+    res = (q, k, v, q_pos, k_pos, out, lse)
+    return out.reshape(B, Sq, H, D).astype(q.dtype), res
+
+
+def _flash_bwd(window, kv_chunk, s_low_precision, res, dout):
+    """FlashAttention backward: recompute p per chunk from saved lse —
+    O(seq) residual memory instead of per-chunk probability matrices."""
+    q, k, v, q_pos, k_pos, out, lse = res
+    B, Sq, H, D = q.shape
+    Sk, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    scale = D ** -0.5
+    kc, vc, pc, pad = _chunk_kv(k, v, k_pos, kv_chunk)
+
+    qf = q.astype(jnp.float32).reshape(B, Sq, KH, G, D)
+    do = dout.astype(jnp.float32).reshape(B, Sq, KH, G, D)
+    delta = jnp.sum(do * out, axis=-1).transpose(0, 2, 3, 1)   # (B,KH,G,Sq)
+
+    dq0 = jnp.zeros((B, Sq, KH, G, D), jnp.float32)
+
+    def body(dq, xs):
+        ki, vi, pi = xs
+        kif = ki.astype(jnp.float32)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kif) * scale
+        valid = _mask(q_pos, pi, window)
+        p = jnp.exp(s - lse[..., None]) * valid[None, None, None]
+        # bf16 probability/score-grad tiles on the matmul paths (f32 accum)
+        pb = p.astype(ki.dtype)
+        dv_c = jnp.einsum("bhgqk,bqhgd->bkhd", pb, do.astype(ki.dtype),
+                          preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bqhgd,bkhd->bhgqk", do.astype(vi.dtype), vi,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[..., None]) * scale
+        dsb = ds.astype(ki.dtype)
+        dq = dq + jnp.einsum("bhgqk,bkhd->bqhgd", dsb, ki,
+                             preferred_element_type=jnp.float32)
+        dk_c = jnp.einsum("bhgqk,bqhgd->bkhd", dsb, qf.astype(ki.dtype),
+                          preferred_element_type=jnp.float32)
+        return dq, (dk_c, dv_c)
+
+    dq, (dk_c, dv_c) = jax.lax.scan(body, dq0, (kc, vc, pc))
+    n = dk_c.shape[0]
+    dk = dk_c.transpose(1, 0, 2, 3, 4).reshape(B, n * kv_chunk, KH, D)[:, :Sk]
+    dv = dv_c.transpose(1, 0, 2, 3, 4).reshape(B, n * kv_chunk, KH, D)[:, :Sk]
+    import numpy as np
+    zero_i = lambda x: np.zeros(x.shape, jax.dtypes.float0)
+    return (dq.reshape(B, Sq, H, D).astype(q.dtype), dk.astype(k.dtype),
+            dv.astype(v.dtype), zero_i(q_pos), zero_i(k_pos))
+
+
+_flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def online_attention(q, k, v, q_pos, k_pos, *, window: int = 0,
+                     kv_chunk: int = 512, q_chunk: int = 0,
+                     causal_prefix: bool = False,
+                     s_low_precision: bool = False) -> jax.Array:
+    """Flash-style online-softmax attention (custom-VJP; never materializes
+    the (Sq, Sk) score matrix in forward OR backward).
+
+    q: (B, Sq, H, D); k, v: (B, Sk, KH, D); *_pos absolute positions
+    ((Sq,), (Sk,)).  ``causal_prefix=True`` asserts q_pos == k_pos ==
+    arange (plain causal self-attention): the query-blocked path then only
+    visits the reachable KV prefix per block — skipping the fully-masked
+    upper-triangle tiles halves the quadratic work the scan version wastes.
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+
+    if q_chunk and Sq > q_chunk and Sq % q_chunk == 0:
+        nq = Sq // q_chunk
+        qb = q.reshape(B, nq, q_chunk, H, D)
+        pb = q_pos.reshape(nq, q_chunk)
+
+        if causal_prefix and Sq == Sk:
+            outs = []
+            for i in range(nq):
+                lo = max(0, (i + 1) * q_chunk - window) if window else 0
+                lo = (lo // kv_chunk) * kv_chunk        # chunk-aligned
+                hi = (i + 1) * q_chunk
+                outs.append(_flash_attention(
+                    qb[:, i], k[:, lo:hi], v[:, lo:hi], pb[i], k_pos[lo:hi],
+                    window, min(kv_chunk, hi - lo), s_low_precision))
+            return jnp.concatenate(outs, axis=1)
+
+        def _one(args):
+            qi, pi = args
+            return _flash_attention(qi, k, v, pi, k_pos, window,
+                                    min(kv_chunk, Sk), s_low_precision)
+
+        out = jax.lax.map(_one, (qb.transpose(1, 0, 2, 3, 4), pb))
+        return out.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, D)
+
+    return _flash_attention(q, k, v, q_pos, k_pos, window,
+                            min(kv_chunk, Sk), s_low_precision)
+
+
+def run_attention(q, k, v, q_pos, k_pos, *, impl: str = "chunked",
+                  window: int = 0, kv_chunk: int = 512,
+                  q_chunk: int = 0, causal_prefix: bool = False,
+                  s_low_precision: bool = False) -> jax.Array:
+    if impl == "naive":
+        return naive_attention(q, k, v, q_pos, k_pos, window)
+    return online_attention(q, k, v, q_pos, k_pos, window=window,
+                            kv_chunk=kv_chunk, q_chunk=q_chunk,
+                            causal_prefix=causal_prefix,
+                            s_low_precision=s_low_precision)
+
+
+# ---------------------------------------------------------------------------
+# block-level entry points
+# ---------------------------------------------------------------------------
+
+def self_attention(cfg, p, x, positions, *, lora=None, lora_scale=1.0,
+                   impl="chunked", kv_chunk=512, q_chunk=0,
+                   return_cache=False, cache_len: int = 0,
+                   s_low_precision: bool = False):
+    """Causal self-attention over a full sequence (train / prefill).
+
+    positions: (S,) absolute positions.  If ``return_cache``, also returns a
+    decode cache of length ``cache_len or S`` (ring-windowed when
+    cfg.attn_window is set and smaller).
+    """
+    B, S, _ = x.shape
+    q, k, v = _proj_qkv(cfg, p, x, lora, lora_scale)
+    if cfg.pos_emb == "rope":
+        q = apply_rope(q, jnp.broadcast_to(positions, (B, S)), cfg.rope_theta)
+        k = apply_rope(k, jnp.broadcast_to(positions, (B, S)), cfg.rope_theta)
+    o = run_attention(q, k, v, positions, positions, impl=impl,
+                      window=cfg.attn_window, kv_chunk=kv_chunk,
+                      q_chunk=q_chunk, causal_prefix=True,
+                      s_low_precision=s_low_precision)
+    y = dense(o.reshape(B, S, -1), p["wo"]["w"], p["wo"].get("b"),
+              None if lora is None or "o" not in lora else lora["o"], lora_scale)
+    if not return_cache:
+        return y
+    L = cache_len or S
+    if cfg.attn_window:
+        L = min(L, cfg.attn_window)
+    if L >= S:
+        kc = jnp.pad(k, ((0, 0), (0, L - S), (0, 0), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, L - S), (0, 0), (0, 0)))
+        pc = jnp.pad(positions, (0, L - S), constant_values=-1)
+    else:
+        # keep the trailing window, laid out ring-buffer style so that
+        # slot(p) == p % L matches decode_attention's write rule
+        shift = (S - L) % L
+        kc = jnp.roll(k[:, S - L:], shift, axis=1)
+        vc = jnp.roll(v[:, S - L:], shift, axis=1)
+        pc = jnp.roll(positions[S - L:], shift)
+    cache = {"k": kc, "v": vc, "pos": pc}
+    return y, cache
+
+
+def init_attn_cache(cfg, batch: int, cache_len: int, dtype) -> dict:
+    L = cache_len
+    if cfg.attn_window:
+        L = min(L, cfg.attn_window)
+    kh, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, L, kh, hd), dtype),
+        "v": jnp.zeros((batch, L, kh, hd), dtype),
+        "pos": jnp.full((L,), -1, jnp.int32),
+    }
+
+
+def decode_attention(cfg, p, x, cache, cur_index, *, lora=None,
+                     lora_scale=1.0, kv_chunk=2048, impl="naive"):
+    """One-token decode: x (B, 1, d); cur_index scalar int32 (absolute).
+
+    Writes the new KV at slot ``cur_index % L`` (ring buffer when windowed)
+    and attends over the whole cache with position-based masking.
+    """
+    B = x.shape[0]
+    L = cache["k"].shape[1]
+    q, k, v = _proj_qkv(cfg, p, x, lora, lora_scale)
+    pos = jnp.full((B, 1), cur_index, jnp.int32)
+    if cfg.pos_emb == "rope":
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    slot = jnp.mod(cur_index, L)
+    kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    pc = jax.lax.dynamic_update_slice(cache["pos"],
+                                      jnp.full((1,), cur_index, jnp.int32), (slot,))
+    # "naive" keeps the (B,H,1,L) score einsum whole so GSPMD can shard the
+    # cache sequence dim (distributed flash-decode); scores for Sq=1 are tiny.
+    q_pos = jnp.full((1,), cur_index, jnp.int32)
+    o = run_attention(q, kc, vc, q_pos, pc, impl=impl,
+                      window=cfg.attn_window, kv_chunk=min(kv_chunk, L))
+    y = dense(o.reshape(B, 1, -1), p["wo"]["w"], p["wo"].get("b"),
+              None if lora is None or "o" not in lora else lora["o"], lora_scale)
+    return y, {"k": kc, "v": vc, "pos": pc}

@@ -1,0 +1,83 @@
+"""Batched autoregressive generation: greedy / temperature / top-k / top-p,
+with the KV-cache decode path and a `lax.while_loop` inner loop (one jit).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import model as model_mod
+from .stack import Runtime
+
+
+@dataclass(frozen=True)
+class SampleConfig:
+    temperature: float = 1.0
+    top_k: int = 0                # 0 = off
+    top_p: float = 1.0            # 1.0 = off
+    greedy: bool = False
+    eos_id: int = -1              # -1 = never stop early
+
+
+def sample_logits(logits: jax.Array, key, sc: SampleConfig) -> jax.Array:
+    """logits: (B, V) -> token ids (B,)."""
+    if sc.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / max(sc.temperature, 1e-6)
+    if sc.top_k:
+        kth = jax.lax.top_k(logits, sc.top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    if sc.top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        cutoff_idx = jnp.sum(cum < sc.top_p, axis=-1, keepdims=True)
+        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    return jax.random.categorical(key, logits).astype(jnp.int32)
+
+
+def generate(cfg, params, tokens, *, lora=None, rt: Runtime = Runtime(),
+             max_new_tokens: int = 32, sc: SampleConfig = SampleConfig(),
+             frontend_emb=None, key=None):
+    """Prefill + decode loop.  tokens: (B, S_prompt) int32.
+
+    Returns (generated (B, max_new_tokens) int32, done mask (B,)).
+    """
+    key = key if key is not None else jax.random.key(0)
+    B, S = tokens.shape
+    F = frontend_emb.shape[1] if frontend_emb is not None else 0
+    total = S + F + max_new_tokens
+
+    logits, caches = model_mod.prefill(cfg, params, tokens, lora=lora, rt=rt,
+                                       frontend_emb=frontend_emb,
+                                       cache_len=total)
+    key, k0 = jax.random.split(key)
+    tok = sample_logits(logits, k0, sc)
+
+    out0 = jnp.zeros((B, max_new_tokens), jnp.int32).at[:, 0].set(tok)
+    done0 = (tok == sc.eos_id) if sc.eos_id >= 0 else jnp.zeros((B,), bool)
+
+    def cond(state):
+        i, _, _, _, done, _ = state
+        return (i < max_new_tokens) & ~jnp.all(done)
+
+    def body(state):
+        i, tok, caches, key, done, out = state
+        key, k = jax.random.split(key)
+        logits, caches = model_mod.decode_step(
+            cfg, params, tok[:, None], caches, (S + F - 1 + i).astype(jnp.int32),
+            lora=lora, rt=rt)
+        nxt = sample_logits(logits, k, sc)
+        nxt = jnp.where(done, tok, nxt)
+        out = out.at[:, i].set(jnp.where(done, 0, nxt))
+        if sc.eos_id >= 0:
+            done = done | (nxt == sc.eos_id)
+        return (i + 1, nxt, caches, key, done, out)
+
+    state = (jnp.int32(1), tok, caches, key, done0, out0)
+    _, _, _, _, done, out = jax.lax.while_loop(cond, body, state)
+    return out, done

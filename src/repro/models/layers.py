@@ -1,0 +1,190 @@
+"""Shared primitive layers: norms, rotary embeddings, MLPs, embeddings.
+
+All layers are pure functions over explicit param pytrees.  Linear layers
+route through :func:`dense`, which applies an optional LoRA adapter — the
+paper's technique is threaded through every projection this way.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# linear (+ LoRA)
+# ---------------------------------------------------------------------------
+
+def dense(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
+          lora: Optional[dict] = None, lora_scale: float = 1.0) -> jax.Array:
+    """y = x @ w (+ b) (+ lora_scale * (x @ a^T) @ b_lora^T).
+
+    ``lora`` is ``{"a": (r, in), "b": (out, r)}`` or None.  The low-rank
+    path accumulates in f32 and is cast back to the activation dtype.
+    """
+    y = jnp.einsum("...i,io->...o", x, w.astype(x.dtype))
+    if lora is not None:
+        a, bm = lora["a"], lora["b"]
+        z = jnp.einsum("...i,ri->...r", x, a.astype(x.dtype))
+        delta = jnp.einsum("...r,or->...o", z, bm.astype(x.dtype))
+        y = y + (lora_scale * delta).astype(y.dtype)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def init_dense(key, d_in: int, d_out: int, dtype, bias: bool = False,
+               scale: float | None = None) -> dict:
+    scale = scale if scale is not None else d_in ** -0.5
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def init_lora(key, d_in: int, d_out: int, rank: int, dtype) -> dict:
+    """LoRA init per Hu et al.: A ~ N(0, 1/r), B = 0 (so delta starts at 0)."""
+    ka, _ = jax.random.split(key)
+    return {
+        "a": (jax.random.normal(ka, (rank, d_in), jnp.float32) * rank ** -0.5).astype(dtype),
+        "b": jnp.zeros((d_out, rank), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# norms (computed in f32, cast back)
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(cfg, x: jax.Array, p: dict) -> jax.Array:
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, p["scale"], cfg.norm_eps)
+    return layernorm(x, p["scale"], p["bias"], cfg.norm_eps)
+
+
+def init_norm(cfg, d: int, dtype) -> dict:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S).
+
+    Angles are computed in f32 (positions up to 512k), but the rotation
+    itself runs in x's dtype: keeping bf16 values bf16 end-to-end stops
+    XLA from hoisting a full-width f32 twin of the KV cache through the
+    decode loop (EXPERIMENTS.md §Perf #8)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                                   # (D/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs   # (..., S, D/2)
+    cos = jnp.cos(angles)[..., :, None, :].astype(x.dtype)         # (...,S,1,D/2)
+    sin = jnp.sin(angles)[..., :, None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                           axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu_mlp(cfg, x: jax.Array, p: dict, lora: Optional[dict] = None,
+               lora_scale: float = 1.0) -> jax.Array:
+    def _l(name):
+        return None if lora is None or name not in lora else lora[name]
+
+    g = dense(x, p["w_gate"]["w"], lora=_l("gate"), lora_scale=lora_scale)
+    u = dense(x, p["w_up"]["w"], lora=_l("up"), lora_scale=lora_scale)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return dense(h, p["w_down"]["w"], lora=_l("down"), lora_scale=lora_scale)
+
+
+def gelu_mlp(cfg, x: jax.Array, p: dict, lora: Optional[dict] = None,
+             lora_scale: float = 1.0) -> jax.Array:
+    def _l(name):
+        return None if lora is None or name not in lora else lora[name]
+
+    h = dense(x, p["w_up"]["w"], p["w_up"].get("b"), lora=_l("up"), lora_scale=lora_scale)
+    h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(x.dtype)
+    return dense(h, p["w_down"]["w"], p["w_down"].get("b"), lora=_l("down"),
+                 lora_scale=lora_scale)
+
+
+def apply_mlp(cfg, x: jax.Array, p: dict, lora: Optional[dict] = None,
+              lora_scale: float = 1.0) -> jax.Array:
+    if cfg.mlp_kind == "swiglu":
+        return swiglu_mlp(cfg, x, p, lora, lora_scale)
+    return gelu_mlp(cfg, x, p, lora, lora_scale)
+
+
+def init_mlp(cfg, key, dtype) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    bias = cfg.norm == "layernorm"          # GPT-2 family carries biases
+    if cfg.mlp_kind == "swiglu":
+        return {
+            "w_gate": init_dense(ks[0], d, ff, dtype),
+            "w_up": init_dense(ks[1], d, ff, dtype),
+            "w_down": init_dense(ks[2], ff, d, dtype),
+        }
+    return {
+        "w_up": init_dense(ks[0], d, ff, dtype, bias=bias),
+        "w_down": init_dense(ks[1], ff, d, dtype, bias=bias),
+    }
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embeddings(cfg, key, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"tok": (jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model), jnp.float32)
+                 * 0.02).astype(dtype)}
+    if cfg.pos_emb == "learned":
+        p["pos"] = (jax.random.normal(ks[1], (cfg.max_seq_len, cfg.d_model), jnp.float32)
+                    * 0.02).astype(dtype)
+    if not cfg.tie_embeddings:
+        p["unembed"] = (jax.random.normal(ks[2], (cfg.d_model, cfg.vocab_size), jnp.float32)
+                        * cfg.d_model ** -0.5).astype(dtype)
+    return p
+
+
+def embed(cfg, p: dict, tokens: jax.Array, positions: jax.Array) -> jax.Array:
+    x = jnp.take(p["tok"], tokens, axis=0)
+    if cfg.pos_emb == "learned":
+        pos_table = p["pos"]
+        idx = jnp.clip(positions, 0, pos_table.shape[0] - 1)
+        x = x + jnp.take(pos_table, idx, axis=0)
+    return x
+
+
+def unembed(cfg, p: dict, x: jax.Array) -> jax.Array:
+    w = p["tok"].T if cfg.tie_embeddings else p["unembed"]
+    return jnp.einsum("...d,dv->...v", x, w.astype(x.dtype))

@@ -1,0 +1,221 @@
+"""Mamba2 / SSD (state-space duality) blocks — chunked scan formulation.
+
+Training/prefill uses the SSD chunked algorithm of [arXiv:2405.21060]:
+quadratic attention-form *within* chunks (MXU-friendly (Q,Q) matmuls) and a
+linear recurrence *across* chunk states — the TPU-native adaptation of the
+paper-assigned architecture.  Decode carries (conv buffer, SSM state) and
+costs O(1) per token, which is what makes the ``long_500k`` shape native
+for this family.
+
+The intra-chunk math is mirrored by ``repro.kernels.ssd_scan`` (Pallas);
+this module is the jnp twin the dry-run lowers.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense, init_dense, rmsnorm
+
+
+def _dims(cfg):
+    d_in = cfg.d_inner
+    nh = cfg.ssm_num_heads
+    N = cfg.ssm_state
+    conv_dim = d_in + 2 * N            # conv over (x, B, C), ngroups = 1
+    return d_in, nh, N, conv_dim
+
+
+def init_mamba(cfg, key, dtype) -> dict:
+    d = cfg.d_model
+    d_in, nh, N, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    # in_proj -> [z (d_in), xBC (conv_dim), dt (nh)]
+    p = {
+        "in_proj": init_dense(ks[0], d, 2 * d_in + 2 * N + nh, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_dim),
+                                     jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": {"scale": jnp.ones((d_in,), dtype)},
+        "out_proj": init_dense(ks[2], d_in, d, dtype),
+    }
+    return p
+
+
+def _split_proj(cfg, zxbcdt):
+    d_in, nh, N, conv_dim = _dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:d_in + conv_dim]
+    dt = zxbcdt[..., d_in + conv_dim:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv, width W (unrolled — W is 4)."""
+    W = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    S = xbc.shape[1]
+    out = sum(pad[:, i:i + S, :] * w[i].astype(xbc.dtype) for i in range(W))
+    return out + b.astype(xbc.dtype)
+
+
+def _conv_step(xbc1: jax.Array, buf: jax.Array, w: jax.Array,
+               b: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One-token conv: xbc1 (B, conv_dim); buf (B, W-1, conv_dim)."""
+    W = w.shape[0]
+    window = jnp.concatenate([buf, xbc1[:, None, :]], axis=1)   # (B, W, conv)
+    y = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                   w.astype(jnp.float32)) + b.astype(jnp.float32)
+    return y.astype(xbc1.dtype), window[:, 1:, :]
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: (..., Q) log-decays -> (..., Q, Q) lower-tri cumulative sums
+    L[t, s] = sum_{u=s+1..t} a_u  (t >= s), -inf above diagonal."""
+    Q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]               # cum_t - cum_s
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(tri, diff, -jnp.inf)
+
+
+def ssd_chunked(xh, Bm, Cm, dt, A, *, chunk: int,
+                h0: Optional[jax.Array] = None):
+    """SSD forward.
+
+    xh: (B, S, nh, hd); Bm/Cm: (B, S, N); dt: (B, S, nh) (post-softplus);
+    A: (nh,) negative reals.  Returns (y (B,S,nh,hd), h_last (B,nh,hd,N)).
+    """
+    Bsz, S, nh, hd = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    nc = (S + pad) // Q
+
+    xc = xh.reshape(Bsz, nc, Q, nh, hd).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+    Cc = Cm.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+    dtc = dt.reshape(Bsz, nc, Q, nh).astype(jnp.float32)
+
+    a = dtc * A[None, None, None, :]                            # (B,nc,Q,nh) log-decay
+    a = a.transpose(0, 1, 3, 2)                                 # (B,nc,nh,Q)
+    cum = jnp.cumsum(a, axis=-1)                                # within-chunk
+
+    # ---- intra-chunk (quadratic attention form) ---------------------------
+    L = jnp.exp(_segsum(a))                                     # (B,nc,nh,Q,Q)
+    CB = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)                  # (B,nc,Q,Q)
+    M = CB[:, :, None] * L                                      # (B,nc,nh,Q,Q)
+    xdt = xc * dtc[..., None]                                   # (B,nc,Q,nh,hd)
+    y_intra = jnp.einsum("bchqk,bckhd->bcqhd", M, xdt)
+
+    # ---- chunk states -------------------------------------------------------
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)                 # (B,nc,nh,Q)
+    states = jnp.einsum("bchq,bcqn,bcqhd->bchdn",
+                        decay_to_end, Bc, xdt)                  # (B,nc,nh,hd,N)
+
+    # ---- inter-chunk recurrence --------------------------------------------
+    chunk_decay = jnp.exp(cum[..., -1])                         # (B,nc,nh)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, nh, hd, N), jnp.float32)
+
+    def scan_fn(h, xs):
+        s_c, g_c = xs                                           # state, decay
+        h_new = h * g_c[..., None, None] + s_c
+        return h_new, h
+
+    (h_last, h_prevs) = jax.lax.scan(
+        scan_fn, h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)                  # (B,nc,nh,hd,N)
+
+    y_inter = jnp.einsum("bcqn,bchdn,bchq->bcqhd",
+                         Cc, h_prevs, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(Bsz, nc * Q, nh, hd)[:, :S]
+    return y, h_last
+
+
+def mamba_block(cfg, p: dict, x: jax.Array, *, lora=None, lora_scale=1.0,
+                return_state: bool = False):
+    """Full Mamba2 block (train / prefill).  x: (B, S, d_model)."""
+    B, S, _ = x.shape
+    d_in, nh, N, conv_dim = _dims(cfg)
+
+    def _l(name):
+        return None if lora is None or name not in lora else lora[name]
+
+    zxbcdt = dense(x, p["in_proj"]["w"], lora=_l("ssm_in"), lora_scale=lora_scale)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+    xh = xbc[..., :d_in].reshape(B, S, nh, cfg.ssm_head_dim)
+    Bm = xbc[..., d_in:d_in + N]
+    Cm = xbc[..., d_in + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    y, h_last = ssd_chunked(xh, Bm, Cm, dt, A, chunk=cfg.ssm_chunk)
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm(y, p["norm"]["scale"], cfg.norm_eps)
+    out = dense(y, p["out_proj"]["w"], lora=_l("ssm_out"), lora_scale=lora_scale)
+    if not return_state:
+        return out
+    # conv buffer holds the last W-1 *pre-activation* conv inputs
+    W = cfg.ssm_conv_width
+    zxbcdt_tail = dense(x[:, max(0, S - (W - 1)):],
+                        p["in_proj"]["w"], lora=_l("ssm_in"), lora_scale=lora_scale)
+    _, xbc_tail, _ = _split_proj(cfg, zxbcdt_tail)
+    pad = (W - 1) - xbc_tail.shape[1]
+    if pad > 0:
+        xbc_tail = jnp.pad(xbc_tail, ((0, 0), (pad, 0), (0, 0)))
+    state = {"ssm": h_last.astype(jnp.float32), "conv": xbc_tail}
+    return out, state
+
+
+def init_mamba_cache(cfg, batch: int, dtype) -> dict:
+    d_in, nh, N, conv_dim = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, nh, cfg.ssm_head_dim, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dtype),
+    }
+
+
+def mamba_step(cfg, p: dict, x: jax.Array, cache: dict, *, lora=None,
+               lora_scale=1.0):
+    """One-token decode.  x: (B, 1, d_model).  O(1) state update."""
+    B = x.shape[0]
+    d_in, nh, N, conv_dim = _dims(cfg)
+
+    def _l(name):
+        return None if lora is None or name not in lora else lora[name]
+
+    zxbcdt = dense(x[:, 0], p["in_proj"]["w"], lora=_l("ssm_in"),
+                   lora_scale=lora_scale)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc_conv, conv_buf = _conv_step(xbc, cache["conv"], p["conv_w"], p["conv_b"])
+    xbc_conv = jax.nn.silu(xbc_conv.astype(jnp.float32)).astype(x.dtype)
+    xh = xbc_conv[..., :d_in].reshape(B, nh, cfg.ssm_head_dim).astype(jnp.float32)
+    Bm = xbc_conv[..., d_in:d_in + N].astype(jnp.float32)
+    Cm = xbc_conv[..., d_in + N:].astype(jnp.float32)
+    dt1 = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,nh)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt1 * A[None, :])                              # (B,nh)
+    h = cache["ssm"] * decay[..., None, None] + jnp.einsum(
+        "bn,bhd,bh->bhdn", Bm, xh, dt1)
+    y = jnp.einsum("bn,bhdn->bhd", Cm, h) + xh * p["D"][None, :, None]
+    y = y.reshape(B, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm(y, p["norm"]["scale"], cfg.norm_eps)
+    out = dense(y, p["out_proj"]["w"], lora=_l("ssm_out"), lora_scale=lora_scale)
+    return out[:, None, :], {"ssm": h, "conv": conv_buf}

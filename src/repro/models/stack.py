@@ -1,0 +1,238 @@
+"""Decoder blocks + `lax.scan`-over-depth stacks.
+
+Parameters for the repeating depth pattern are stored as a tuple (one entry
+per pattern position) of block pytrees whose leaves are stacked over the
+``pattern_repeats`` axis — HLO size and compile time are then independent
+of depth (88-layer Mistral-Large compiles as one scan).  The SFL split
+point slices this stacked axis (``core/split.py``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import apply_mlp, apply_norm, init_mlp, init_norm
+
+
+@dataclass(frozen=True)
+class Runtime:
+    """Runtime/perf knobs (hillclimb levers), orthogonal to ArchConfig."""
+
+    attn_impl: str = "chunked"          # "naive" | "chunked"
+    kv_chunk: int = 512
+    q_chunk: int = 0                    # 0 = no query blocking
+    decode_kv_chunk: int = 2048
+    decode_attn_impl: str = "naive"     # "naive" shards the cache seq dim
+    moe_group: int = 128
+    capacity_factor: float = 1.25
+    remat: bool = False                 # checkpoint each scan body (train)
+    remat_policy: str = "full"          # "full" | "dots" (save matmul outs)
+    # activation sharding constraints (mesh axis names); () = no constraint.
+    # Requires an ambient mesh (jax.sharding.set_mesh) during trace.
+    dp_axes: Tuple[str, ...] = ()
+    tp_axis: Optional[str] = None
+    # beyond-paper perf levers (EXPERIMENTS.md §Perf):
+    seq_shard: bool = False             # Megatron-style sequence parallelism
+    moe_constraints: bool = False       # explicit dispatch/combine shardings
+    attn_s_bf16: bool = False           # bf16 score einsum (uneven-GQA fix)
+
+    def replace(self, **kw) -> "Runtime":
+        import dataclasses
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# single block
+# ---------------------------------------------------------------------------
+
+def init_block(cfg, pat, key, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    p: dict = {"norm1": init_norm(cfg, cfg.d_model, dtype)}
+    if pat.mixer == "attention":
+        p["mixer"] = attn_mod.init_attention(cfg, ks[0], dtype)
+    else:
+        p["mixer"] = ssm_mod.init_mamba(cfg, ks[0], dtype)
+    if pat.mlp != "none":
+        p["norm2"] = init_norm(cfg, cfg.d_model, dtype)
+        p["mlp"] = (moe_mod.init_moe(cfg, ks[1], dtype) if pat.mlp == "moe"
+                    else init_mlp(cfg, ks[1], dtype))
+    return p
+
+
+def _mixer_lora(lora):
+    if lora is None:
+        return None
+    return lora.get("mixer")
+
+
+def apply_block(cfg, pat, p: dict, x, *, positions, lora, lora_scale, rt: Runtime,
+                mode: str, cache=None, cur_index=None, cache_len: int = 0):
+    """mode: "train" | "prefill" | "decode".  Returns (x, cache_out, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(cfg, x, p["norm1"])
+    cache_out = cache
+    if pat.mixer == "attention":
+        if mode == "decode":
+            m, cache_out = attn_mod.decode_attention(
+                cfg, p["mixer"], h, cache, cur_index,
+                lora=_mixer_lora(lora), lora_scale=lora_scale,
+                kv_chunk=rt.decode_kv_chunk, impl=rt.decode_attn_impl)
+        elif mode == "prefill":
+            m, cache_out = attn_mod.self_attention(
+                cfg, p["mixer"], h, positions, lora=_mixer_lora(lora),
+                lora_scale=lora_scale, impl=rt.attn_impl, kv_chunk=rt.kv_chunk,
+                q_chunk=rt.q_chunk, return_cache=True,
+                cache_len=cache["k"].shape[1] if cache is not None else cache_len,
+                s_low_precision=rt.attn_s_bf16)
+        else:
+            m = attn_mod.self_attention(
+                cfg, p["mixer"], h, positions, lora=_mixer_lora(lora),
+                lora_scale=lora_scale, impl=rt.attn_impl, kv_chunk=rt.kv_chunk,
+                q_chunk=rt.q_chunk, s_low_precision=rt.attn_s_bf16)
+    else:  # mamba
+        if mode == "decode":
+            m, cache_out = ssm_mod.mamba_step(
+                cfg, p["mixer"], h, cache, lora=_mixer_lora(lora),
+                lora_scale=lora_scale)
+        elif mode == "prefill":
+            m, cache_out = ssm_mod.mamba_block(
+                cfg, p["mixer"], h, lora=_mixer_lora(lora),
+                lora_scale=lora_scale, return_state=True)
+        else:
+            m = ssm_mod.mamba_block(cfg, p["mixer"], h,
+                                    lora=_mixer_lora(lora), lora_scale=lora_scale)
+    x = x + m
+    if pat.mlp != "none":
+        h = apply_norm(cfg, x, p["norm2"])
+        if pat.mlp == "moe":
+            specs = ((rt.dp_axes, rt.tp_axis)
+                     if rt.moe_constraints and rt.dp_axes else None)
+            mo, aux = moe_mod.apply_moe(cfg, p["mlp"], h,
+                                        group_size=rt.moe_group,
+                                        capacity_factor=rt.capacity_factor,
+                                        shard_specs=specs)
+        else:
+            mo = apply_mlp(cfg, h, p["mlp"],
+                           None if lora is None else lora.get("mlp"),
+                           lora_scale)
+        x = x + mo
+    return x, cache_out, aux
+
+
+# ---------------------------------------------------------------------------
+# stack init
+# ---------------------------------------------------------------------------
+
+def init_stack(cfg, key, dtype) -> Tuple[dict, ...]:
+    """tuple over pattern positions; leaves stacked over repeats."""
+    P = len(cfg.pattern)
+    R = cfg.pattern_repeats
+    keys = jax.random.split(key, P * R).reshape(P, R)
+    out = []
+    for pi, pat in enumerate(cfg.pattern):
+        per_rep = [init_block(cfg, pat, keys[pi, ri], dtype) for ri in range(R)]
+        out.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_rep))
+    return tuple(out)
+
+
+def init_stack_cache(cfg, batch: int, cache_len: int, dtype) -> Tuple[Any, ...]:
+    """Decode caches, stacked over repeats, tuple over pattern positions."""
+    R = cfg.pattern_repeats
+    out = []
+    for pat in cfg.pattern:
+        if pat.mixer == "attention":
+            one = attn_mod.init_attn_cache(cfg, batch, cache_len, dtype)
+        else:
+            one = ssm_mod.init_mamba_cache(cfg, batch, dtype)
+        out.append(jax.tree.map(lambda x: jnp.broadcast_to(x, (R,) + x.shape), one))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# stack apply (scan over repeats)
+# ---------------------------------------------------------------------------
+
+def apply_stack(cfg, stack_params, x, *, positions, lora=None, rt: Runtime,
+                mode: str = "train", caches=None, cur_index=None,
+                cache_len: int = 0,
+                rep_slice: Optional[Tuple[int, int]] = None):
+    """Run (a slice of) the layer stack.
+
+    ``rep_slice=(a, b)`` runs pattern repeats [a, b) — the SFL split point
+    in repeat units.  ``caches``/returned caches follow the same slice.
+    Returns (x, new_caches, aux_loss_sum).
+    """
+    P = len(cfg.pattern)
+    lora_stack = lora if lora is not None else tuple([None] * P)
+
+    def _constrain(x):
+        if not rt.dp_axes:
+            return x
+        from jax.sharding import PartitionSpec
+        if rt.seq_shard and rt.tp_axis and mode in ("train", "prefill") \
+                and x.shape[1] % 128 == 0:
+            # sequence parallelism: between blocks the activations live
+            # sharded over (dp, tp) — GSPMD turns the Megatron TP
+            # all-reduce into reduce-scatter + all-gather (half traffic),
+            # and norms/elementwise run on seq shards.
+            spec = PartitionSpec(rt.dp_axes, rt.tp_axis,
+                                 *([None] * (x.ndim - 2)))
+        else:
+            spec = PartitionSpec(rt.dp_axes, *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(x, spec)
+
+    def body(carry, xs):
+        x, aux = carry
+        p_slices, l_slices, c_slices = xs
+        c_outs = []
+        for pi, pat in enumerate(cfg.pattern):
+            x, c_out, a = apply_block(
+                cfg, pat, p_slices[pi], x, positions=positions,
+                lora=None if l_slices is None else l_slices[pi],
+                lora_scale=cfg.lora_alpha / cfg.lora_rank, rt=rt, mode=mode,
+                cache=None if c_slices is None else c_slices[pi],
+                cur_index=cur_index, cache_len=cache_len)
+            c_outs.append(c_out)
+            aux = aux + a
+        x = _constrain(x)       # keep scan-carried activations batch-sharded
+        return (x, aux), tuple(c_outs)
+
+    if rt.remat and mode == "train":
+        if rt.remat_policy == "dots":
+            body = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        else:
+            body = jax.checkpoint(body)
+
+    params = stack_params
+    lora_xs = lora_stack
+    cache_xs = caches
+    if rep_slice is not None:
+        a, b = rep_slice
+        sl = lambda t: None if t is None else jax.tree.map(lambda v: v[a:b], t)
+        params = sl(params)
+        lora_xs = sl(lora_xs)
+        cache_xs = sl(cache_xs)
+
+    # scan requires every xs leaf to share the leading (repeat) dim
+    has_lora = lora_xs is not None and len(jax.tree.leaves(lora_xs)) > 0
+    if not has_lora:
+        # thread "no lora" through scan as a static None per step
+        def body_nl(carry, xs2):
+            p_s, c_s = xs2
+            return body(carry, (p_s, None, c_s))
+        (x, aux), cache_out = jax.lax.scan(
+            body_nl, (x, jnp.zeros((), jnp.float32)), (params, cache_xs))
+    else:
+        (x, aux), cache_out = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), (params, lora_xs, cache_xs))
+    if mode == "train":
+        cache_out = None
+    return x, cache_out, aux

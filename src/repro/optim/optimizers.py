@@ -1,0 +1,93 @@
+"""Minimal functional optimizers (optax is not available offline).
+
+Each optimizer is an (init, update) pair bundled in :class:`Optimizer`;
+``update(grads, state, params)`` returns (updates, new_state) and
+``apply_updates`` adds them — the optax convention, so swapping optax in on
+a real cluster is a one-line change.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Union[float, Callable[[jax.Array], jax.Array]]
+
+
+def _lr_at(lr: Schedule, step: jax.Array) -> jax.Array:
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]
+
+
+def sgd(lr: Schedule, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        state = {"step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            state["mu"] = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return state
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = _lr_at(lr, step)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                              state["mu"], grads)
+            updates = jax.tree.map(lambda m, g: (-lr_t * m).astype(g.dtype), mu, grads)
+            return updates, {"step": step, "mu": mu}
+        updates = jax.tree.map(lambda g: (-lr_t * g.astype(jnp.float32)).astype(g.dtype),
+                               grads)
+        return updates, {"step": step}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: Schedule, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = _lr_at(lr, step)
+        t = step.astype(jnp.float32)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        mhat_scale = 1.0 / (1 - b1 ** t)
+        vhat_scale = 1.0 / (1 - b2 ** t)
+
+        def _upd(m_, v_, p):
+            u = -lr_t * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps)
+            if weight_decay:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u.astype(p.dtype)
+
+        updates = jax.tree.map(_upd, m, v, params)
+        return updates, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm

@@ -1,0 +1,47 @@
+"""Learning-rate schedules, including MiniCPM's WSD (warmup-stable-decay)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine(lr: float, total_steps: int, final_frac: float = 0.1):
+    def f(step):
+        t = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+        return lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+
+    return f
+
+
+def linear_warmup_cosine(lr: float, warmup_steps: int, total_steps: int,
+                         final_frac: float = 0.1):
+    cos = cosine(lr, max(total_steps - warmup_steps, 1), final_frac)
+
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = lr * s / max(warmup_steps, 1)
+        return jnp.where(step <= warmup_steps, warm, cos(step - warmup_steps))
+
+    return f
+
+
+def wsd(lr: float, warmup_steps: int, stable_steps: int, decay_steps: int,
+        final_frac: float = 0.01):
+    """MiniCPM warmup-stable-decay [arXiv:2404.06395]: linear warmup, long
+    constant plateau, then a fast (exponential-ish, here linear-in-log)
+    decay to final_frac * lr."""
+
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = lr * s / max(warmup_steps, 1)
+        in_decay = step > (warmup_steps + stable_steps)
+        d = jnp.clip((s - warmup_steps - stable_steps) / max(decay_steps, 1), 0.0, 1.0)
+        decay = lr * jnp.exp(jnp.log(final_frac) * d)
+        out = jnp.where(step <= warmup_steps, warm,
+                        jnp.where(in_decay, decay, lr))
+        return out
+
+    return f

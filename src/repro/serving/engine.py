@@ -1,0 +1,158 @@
+"""Continuous-batching serving engine (vLLM-style, minimal but real).
+
+Fixed-slot design: ``max_slots`` concurrent sequences share one KV cache of
+length ``max_len``.  Requests are admitted from a queue whenever a slot
+frees; admission runs a single-sequence prefill whose KV is copied into
+the slot; every engine step then decodes ONE token for all live slots in
+one jitted, slot-vmapped call (each slot at its OWN position — the
+per-slot `pos` arrays make the ring-buffer masks independent).  EOS or
+length-out frees the slot.
+
+This is the datacenter serving loop the paper's fine-tuned adapters deploy
+into; it reuses the exact decode path the dry-run lowers for decode_32k.
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import model as model_mod
+from ..models.generate import SampleConfig, sample_logits
+from ..models.stack import Runtime
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int = 32
+    eos_id: int = -1
+    # filled by the engine
+    output: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+def _is_pos(kp) -> bool:
+    last = kp[-1]
+    return str(getattr(last, "key", getattr(last, "idx", last))) == "pos"
+
+
+class ServingEngine:
+    def __init__(self, cfg, params, *, lora=None,
+                 rt: Runtime = Runtime(attn_impl="naive"),
+                 max_slots: int = 4, max_len: int = 256,
+                 sc: SampleConfig = SampleConfig(greedy=True), seed: int = 0):
+        self.cfg, self.params, self.lora, self.rt = cfg, params, lora, rt
+        self.max_slots, self.max_len, self.sc = max_slots, max_len, sc
+        self.key = jax.random.key(seed)
+
+        base = model_mod.init_cache(cfg, max_slots, max_len, jnp.float32)
+        # tile the (R, L) position arrays per slot -> (R, max_slots, L)
+        self.caches = jax.tree_util.tree_map_with_path(
+            lambda kp, v: (jnp.broadcast_to(v[:, None], (v.shape[0],
+                                                         max_slots,
+                                                         v.shape[1])).copy()
+                           if _is_pos(kp) else v), base)
+
+        self.queue: collections.deque[Request] = collections.deque()
+        self.slots: List[Optional[Request]] = [None] * max_slots
+        self.positions = np.zeros(max_slots, np.int32)   # next write index
+        self.last_tok = np.zeros(max_slots, np.int32)
+
+        axes = jax.tree_util.tree_map_with_path(lambda kp, v: 1, self.caches)
+
+        def _decode(params, lora, toks, caches, positions):
+            def one(tok, cache_slot, pos):
+                cache_b = jax.tree_util.tree_map_with_path(
+                    lambda kp, v: v if _is_pos(kp) else v[:, None],
+                    cache_slot)
+                logits, new_cache = model_mod.decode_step(
+                    cfg, params, tok[None, None], cache_b, pos,
+                    lora=lora, rt=rt)
+                new_slot = jax.tree_util.tree_map_with_path(
+                    lambda kp, v: v if _is_pos(kp) else v[:, 0],
+                    new_cache)
+                return logits[0], new_slot
+
+            return jax.vmap(one, in_axes=(0, axes, 0),
+                            out_axes=(0, axes))(toks, caches, positions)
+
+        self._jit_decode = jax.jit(_decode)
+
+        def _prefill(params, lora, tokens):
+            logits, caches1 = model_mod.prefill(cfg, params, tokens,
+                                                lora=lora, rt=rt,
+                                                cache_len=max_len)
+            return logits[0], caches1
+
+        self._jit_prefill = jax.jit(_prefill)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _write_slot(self, s: int, cache1) -> None:
+        def copy(kp, big, one):
+            if _is_pos(kp):
+                return big.at[:, s].set(one)           # one: (R, L)
+            return big.at[:, s].set(one[:, 0])         # one: (R, 1, ...)
+
+        self.caches = jax.tree_util.tree_map_with_path(copy, self.caches,
+                                                       cache1)
+
+    def _admit(self) -> None:
+        for s in range(self.max_slots):
+            if self.slots[s] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            logits, cache1 = self._jit_prefill(self.params, self.lora, tokens)
+            self.key, k = jax.random.split(self.key)
+            tok = int(sample_logits(logits[None], k, self.sc)[0])
+            req.output.append(tok)
+            self._write_slot(s, cache1)
+            self.slots[s] = req
+            self.positions[s] = len(req.prompt)
+            self.last_tok[s] = tok
+            self._maybe_finish(s, tok)
+
+    def _maybe_finish(self, s: int, tok: int) -> None:
+        req = self.slots[s]
+        if req is None:
+            return
+        if (tok == req.eos_id) or (len(req.output) >= req.max_new_tokens):
+            req.done = True
+            self.slots[s] = None
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """Admit + one decode round for all live slots.  Returns the number
+        of live sequences decoded this step."""
+        self._admit()
+        live = [s for s in range(self.max_slots) if self.slots[s] is not None]
+        if not live:
+            return 0
+        toks = jnp.asarray(self.last_tok, jnp.int32)
+        pos = jnp.asarray(self.positions, jnp.int32)
+        logits, self.caches = self._jit_decode(self.params, self.lora, toks,
+                                               self.caches, pos)
+        self.key, k = jax.random.split(self.key)
+        nxt = np.asarray(sample_logits(logits, k, self.sc))
+        for s in live:
+            tok = int(nxt[s])
+            self.slots[s].output.append(tok)
+            self.positions[s] += 1
+            self.last_tok[s] = tok
+            self._maybe_finish(s, tok)
+        return len(live)
+
+    def run(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if not self.queue and all(s is None for s in self.slots):
+                return
+            self.step()

@@ -1,0 +1,8 @@
+from .specs import (batch_axes, batch_shardings, cache_shardings,
+                    lora_shardings, opt_state_shardings, param_spec,
+                    params_shardings)
+
+__all__ = [
+    "batch_axes", "batch_shardings", "cache_shardings", "lora_shardings",
+    "opt_state_shardings", "param_spec", "params_shardings",
+]

@@ -1,0 +1,187 @@
+"""Partition rules: params (FSDP x TP), LoRA (replicated), caches, batches.
+
+Mesh axes:
+  single-pod: ("data", "model") = (16, 16)
+  multi-pod:  ("pod", "data", "model") = (2, 16, 16)
+
+Policy (the paper-faithful baseline — §Perf iterates from here):
+  * weight matrices: FSDP-shard the d_model-ish dim over "data", tensor-
+    parallel the heads/ffn/expert dim over "model"; replicated over "pod"
+    (pods are pure data parallel; gradient all-reduce crosses pods).
+  * LoRA adapters: replicated — they are the trainable set the federated
+    server ships over the wireless link; tiny by design (the paper's point).
+  * activations / batches: batch dim over ("pod", "data").
+  * KV caches: batch over dp; kv-head dim over "model" when divisible,
+    else the sequence dim when divisible, else replicated.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _key_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_spec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Rule table keyed on parameter path suffixes.
+
+    Stacked block leaves carry a leading repeat axis (never sharded).
+    """
+    dp, tp = "data", "model"
+    dp_n = mesh.shape.get(dp, 1)
+    tp_n = mesh.shape.get(tp, 1)
+
+    def ok(dim: int, n: int) -> bool:
+        return n > 1 and dim % n == 0
+
+    # ---- embeddings ------------------------------------------------------
+    if re.search(r"embed/tok$", path):                    # (V, d)
+        return P(tp if ok(shape[0], tp_n) else None,
+                 dp if ok(shape[1], dp_n) else None)
+    if re.search(r"embed/pos$", path):                    # (S, d)
+        return P(None, tp if ok(shape[1], tp_n) else None)
+    if re.search(r"embed/unembed$", path):                # (d, V)
+        return P(dp if ok(shape[0], dp_n) else None,
+                 tp if ok(shape[1], tp_n) else None)
+
+    # ---- attention projections (R, d, out) / (R, in, d) -------------------
+    if re.search(r"(wq|wk|wv)/w$", path):
+        return P(None, dp if ok(shape[1], dp_n) else None,
+                 tp if ok(shape[2], tp_n) else None)
+    if re.search(r"wo/w$", path):
+        return P(None, tp if ok(shape[1], tp_n) else None,
+                 dp if ok(shape[2], dp_n) else None)
+    if re.search(r"(wq|wk|wv)/b$", path):
+        return P(None, tp if ok(shape[1], tp_n) else None)
+    if re.search(r"wo/b$", path):
+        return P(None, None)
+
+    # ---- MoE ---------------------------------------------------------------
+    if re.search(r"mlp/router/w$", path):                 # (R, d, E)
+        return P(None, dp if ok(shape[1], dp_n) else None, None)
+    if re.search(r"mlp/w_(gate|up)$", path) and len(shape) == 4:   # (R,E,d,ff)
+        return P(None, tp if ok(shape[1], tp_n) else None,
+                 dp if ok(shape[2], dp_n) else None, None)
+    if re.search(r"mlp/w_down$", path) and len(shape) == 4:        # (R,E,ff,d)
+        return P(None, tp if ok(shape[1], tp_n) else None, None,
+                 dp if ok(shape[3], dp_n) else None)
+
+    # ---- dense MLP (R, d, ff) / (R, ff, d) ---------------------------------
+    if re.search(r"(w_gate|w_up)(/w)?$", path) and len(shape) == 3:
+        return P(None, dp if ok(shape[1], dp_n) else None,
+                 tp if ok(shape[2], tp_n) else None)
+    if re.search(r"w_down(/w)?$", path) and len(shape) == 3:
+        return P(None, tp if ok(shape[1], tp_n) else None,
+                 dp if ok(shape[2], dp_n) else None)
+    if re.search(r"w_up/b$", path):
+        return P(None, tp if ok(shape[1], tp_n) else None)
+    if re.search(r"w_down/b$", path):
+        return P(None, None)
+
+    # ---- Mamba -------------------------------------------------------------
+    if re.search(r"mixer/in_proj/w$", path):              # (R, d, total)
+        return P(None, dp if ok(shape[1], dp_n) else None,
+                 tp if ok(shape[2], tp_n) else None)
+    if re.search(r"mixer/out_proj/w$", path):             # (R, d_in, d)
+        return P(None, tp if ok(shape[1], tp_n) else None,
+                 dp if ok(shape[2], dp_n) else None)
+    if re.search(r"mixer/conv_w$", path):                 # (R, W, conv_dim)
+        return P(None, None, tp if ok(shape[2], tp_n) else None)
+    if re.search(r"mixer/conv_b$", path):
+        return P(None, tp if ok(shape[1], tp_n) else None)
+    if re.search(r"mixer/norm/scale$", path):             # (R, d_in)
+        return P(None, tp if ok(shape[1], tp_n) else None)
+
+    # everything else (norms, A_log, D, dt_bias, shared mlp biases): replicate
+    return P(*([None] * len(shape)))
+
+
+def params_shardings(tree: Any, mesh: Mesh):
+    def f(kp, leaf):
+        spec = param_spec(_key_str(kp), leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(f, tree)
+
+
+def lora_shardings(tree: Any, mesh: Mesh):
+    """Adapters are replicated (they cross the wireless link, not ICI)."""
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, P(*([None] * len(l.shape)))), tree)
+
+
+def opt_state_shardings(opt_state: Any, lora_tree_shardings: Any, mesh: Mesh):
+    """AdamW m/v mirror the lora sharding; step is replicated."""
+    rep = NamedSharding(mesh, P())
+
+    def f(kp, leaf):
+        return rep if leaf.ndim == 0 else NamedSharding(
+            mesh, P(*([None] * leaf.ndim)))
+
+    return jax.tree_util.tree_map_with_path(f, opt_state)
+
+
+def cache_spec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    dp = batch_axes(mesh)
+    tp = "model"
+    tp_n = mesh.shape.get(tp, 1)
+    dp_n = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+
+    def ok(dim, n):
+        return n > 1 and dim % n == 0
+
+    if re.search(r"/(k|v)$", path) and len(shape) == 5:   # (R, B, L, KH, hd)
+        b_ax = dp if ok(shape[1], dp_n) else None
+        if ok(shape[3], tp_n):
+            return P(None, b_ax, None, tp, None)
+        if ok(shape[2], tp_n):
+            return P(None, b_ax, tp, None, None)
+        return P(None, b_ax, None, None, None)
+    if re.search(r"/pos$", path):                          # (R, L)
+        return P(None, None)
+    if re.search(r"/ssm$", path) and len(shape) == 5:     # (R, B, nh, hd, N)
+        return P(None, dp if ok(shape[1], dp_n) else None,
+                 tp if ok(shape[2], tp_n) else None, None, None)
+    if re.search(r"/conv$", path) and len(shape) == 4:    # (R, B, W-1, conv)
+        return P(None, dp if ok(shape[1], dp_n) else None, None,
+                 tp if ok(shape[3], tp_n) else None)
+    return P(*([None] * len(shape)))
+
+
+def cache_shardings(tree: Any, mesh: Mesh):
+    def f(kp, leaf):
+        return NamedSharding(mesh, cache_spec(_key_str(kp), leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(f, tree)
+
+
+def batch_shardings(tree: Any, mesh: Mesh):
+    dp = batch_axes(mesh)
+
+    def f(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        dim0 = leaf.shape[0]
+        n = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+        first = dp if (n > 1 and dim0 % n == 0) else None
+        return NamedSharding(mesh, P(first, *([None] * (leaf.ndim - 1))))
+
+    return jax.tree.map(f, tree)

@@ -1,0 +1,68 @@
+"""Beyond-paper lever: int8 activation compression on the SFL uplink."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import DEFAULT_SYSTEM, TrainConfig, get_arch
+from repro.core import Problem, bcd_minimize_delay, objective, sample_clients
+from repro.core.sfl import SflLLM, quantize_activations
+from repro.optim import adamw
+
+
+def test_quantize_roundtrip_error_small(key):
+    s = jax.random.normal(key, (4, 16, 64))
+    q = quantize_activations(s)
+    rel = float(jnp.abs(q - s).max() / jnp.abs(s).max())
+    assert rel < 0.02                      # int8: ~1/254 of the range
+
+
+def test_quantize_straight_through_grad(key):
+    s = jax.random.normal(key, (8,))
+    g = jax.grad(lambda x: jnp.sum(quantize_activations(x) ** 2))(s)
+    # STE: grad flows as if identity applied to the dequantized value
+    np.testing.assert_allclose(np.asarray(g),
+                               2 * np.asarray(quantize_activations(s)),
+                               atol=1e-6)
+
+
+def test_sfl_with_act_quant_converges(key):
+    K, b, S = 3, 2, 16
+    cfg = get_arch("gpt2-s").reduced(num_layers=4)
+    from repro import models as M
+
+    params = M.init_params(cfg, key)
+    lora = M.init_lora_stack(cfg, key)
+    tokens = jax.random.randint(key, (K, b, S), 0, cfg.vocab_size)
+    batches = {"tokens": tokens, "labels": tokens}
+    tc = TrainConfig(num_clients=K, batch_size=b, local_steps=4)
+    sfl = SflLLM(cfg, params, ell_c=2, train_cfg=tc, optimizer=adamw(3e-3),
+                 act_quant=True)
+    state = sfl.init_state(lora)
+    losses = []
+    for _ in range(12):
+        state, m = sfl.local_step(state, batches)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.3
+    assert np.isfinite(losses).all()
+
+
+def test_act_quant_halves_uplink_latency():
+    """bytes_per_activation 2 -> 1 halves Gamma_s and cuts the modeled
+    delay whenever the uplink term matters."""
+    envs = tuple(sample_clients(DEFAULT_SYSTEM, 0))
+    prob = Problem(cfg=get_arch("gpt2-s"), sys_cfg=DEFAULT_SYSTEM, envs=envs,
+                   seq_len=512, batch=16, local_steps=12)
+    base = bcd_minimize_delay(prob)[1][-1]
+    sys_q = dataclasses.replace(DEFAULT_SYSTEM, bytes_per_activation=1)
+    # Gamma_s is built with bytes_per_act=2 inside workload; emulate via
+    # doubled rates? No — the latency model takes bytes_per_act explicitly:
+    from repro.core.latency import split_workload
+    from repro.core.workload import layer_workloads
+
+    ws2 = layer_workloads(prob.cfg, 512, bytes_per_act=2)
+    ws1 = layer_workloads(prob.cfg, 512, bytes_per_act=1)
+    sw2 = split_workload(prob.cfg, ws2, 6, 4, 512)
+    sw1 = split_workload(prob.cfg, ws1, 6, 4, 512)
+    assert sw1.gamma_s == sw2.gamma_s / 2

@@ -1,0 +1,63 @@
+import pytest
+
+from repro.configs import ARCHS, ASSIGNED, SHAPES, get_arch, get_shape
+
+
+def test_all_assigned_present():
+    names = {c.name for c in ASSIGNED}
+    assert names == {
+        "olmoe-1b-7b", "mistral-large-123b", "jamba-1.5-large-398b",
+        "deepseek-7b", "internvl2-2b", "musicgen-large", "yi-9b",
+        "mamba2-2.7b", "minicpm-2b", "llama4-scout-17b-a16e",
+    }
+
+
+def test_shapes():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].kind == "decode"
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_config_consistency(name):
+    c = get_arch(name)
+    assert c.num_layers % len(c.pattern) == 0
+    if c.num_heads:
+        assert c.num_heads % c.num_kv_heads == 0
+        assert c.head_dim > 0
+    if c.num_experts:
+        assert 0 < c.experts_per_token <= c.num_experts
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_reduced_variants(name):
+    r = get_arch(name).reduced()
+    assert r.num_layers <= 4 or r.num_layers == len(r.pattern)
+    assert r.d_model <= 512
+    assert r.num_experts <= 4
+    assert r.family == get_arch(name).family
+
+
+def test_exact_assigned_dims():
+    m = get_arch("mistral-large-123b")
+    assert (m.num_layers, m.d_model, m.num_heads, m.num_kv_heads,
+            m.d_ff, m.vocab_size) == (88, 12288, 96, 8, 28672, 32768)
+    o = get_arch("olmoe-1b-7b")
+    assert (o.num_experts, o.experts_per_token) == (64, 8)
+    j = get_arch("jamba-1.5-large-398b")
+    kinds = [p.mixer for p in j.pattern]
+    assert kinds.count("attention") == 1 and kinds.count("mamba") == 7
+    mb = get_arch("mamba2-2.7b")
+    assert mb.ssm_state == 128 and mb.d_ff == 0 and not mb.has_attention
+    l4 = get_arch("llama4-scout-17b-a16e")
+    assert l4.experts_per_token == 1 and l4.shared_expert
+
+
+def test_unknown_raises():
+    with pytest.raises(KeyError):
+        get_arch("nope")
+    with pytest.raises(KeyError):
+        get_shape("nope")

@@ -1,0 +1,64 @@
+"""Deliverable (e) support: input_specs produce coherent abstract inputs
+for every (arch x shape) — no device allocation, decode gets ONE token +
+a seq_len cache, frontend stubs sized correctly."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED, SHAPES, get_shape
+from repro.launch.steps import arch_for_shape, input_specs
+from repro.optim import adamw
+
+
+@pytest.mark.parametrize("arch", [c.name for c in ASSIGNED])
+@pytest.mark.parametrize("shape", sorted(SHAPES))
+def test_input_specs(arch, shape):
+    from repro.configs import get_arch
+
+    shp = get_shape(shape)
+    cfg = arch_for_shape(get_arch(arch), shp)
+    args, kw = input_specs(cfg, shp, optimizer=adamw(1e-4))
+    assert kw == {}
+    # everything must be ShapeDtypeStruct (abstract, no allocation)
+    for leaf in jax.tree.leaves(args):
+        assert isinstance(leaf, jax.ShapeDtypeStruct), type(leaf)
+
+    F = cfg.frontend_tokens if cfg.frontend else 0
+    if shp.kind == "train":
+        params, lora, opt_state, batch = args
+        assert batch["tokens"].shape == (shp.global_batch, shp.seq_len - F)
+        assert batch["labels"].shape == batch["tokens"].shape
+        if F:
+            assert batch["frontend_emb"].shape == (shp.global_batch, F,
+                                                   cfg.d_model)
+        assert len(jax.tree.leaves(lora)) > 0          # adapters exist
+    elif shp.kind == "prefill":
+        params, lora, batch = args
+        assert batch["tokens"].shape == (shp.global_batch, shp.seq_len - F)
+    else:  # decode: ONE token + seq_len-bounded cache
+        params, lora, token, caches, cur = args
+        assert token.shape == (shp.global_batch, 1)
+        assert cur.shape == ()
+        for kp, leaf in jax.tree_util.tree_flatten_with_path(caches)[0]:
+            path = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                            for p in kp)
+            if path.endswith("/k") or path.endswith("/v"):
+                L = leaf.shape[2]
+                limit = min(shp.seq_len, cfg.attn_window or shp.seq_len)
+                assert L == limit, (arch, shape, path, leaf.shape)
+                assert leaf.shape[1] == shp.global_batch
+
+
+def test_long500k_variants():
+    """Pure-attention archs get a sliding window at 500k; SSM unchanged."""
+    from repro.configs import get_arch
+
+    long = get_shape("long_500k")
+    yi = arch_for_shape(get_arch("yi-9b"), long)
+    assert yi.attn_window > 0
+    mamba = arch_for_shape(get_arch("mamba2-2.7b"), long)
+    assert mamba.attn_window == 0
+    jamba = arch_for_shape(get_arch("jamba-1.5-large-398b"), long)
+    assert jamba.attn_window > 0          # its attention layers window
+    # but normal shapes keep full attention
+    assert arch_for_shape(get_arch("yi-9b"), get_shape("train_4k")).attn_window == 0

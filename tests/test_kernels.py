@@ -1,0 +1,108 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.lora_matmul import lora_matmul, lora_matmul_ref
+from repro.kernels.ssd_scan import ssd_scan, ssd_sequential_ref
+
+TOLS = {jnp.float32: dict(atol=2e-5, rtol=2e-5),
+        jnp.bfloat16: dict(atol=3e-2, rtol=3e-2)}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("M,K,N,r", [(64, 128, 96, 4), (128, 64, 128, 8),
+                                     (33, 70, 45, 1), (256, 256, 256, 6)])
+def test_lora_matmul_sweep(M, K, N, r, dtype):
+    key = jax.random.key(M + N)
+    x = jax.random.normal(key, (M, K), jnp.float32).astype(dtype)
+    w = (jax.random.normal(jax.random.key(1), (K, N)) * K ** -0.5).astype(dtype)
+    a = (jax.random.normal(jax.random.key(2), (r, K)) * K ** -0.5).astype(dtype)
+    b = jax.random.normal(jax.random.key(3), (N, r)).astype(dtype)
+    yk = lora_matmul(x, w, a, b, scale=1.5, bm=64, bn=64, bk=64)
+    yr = lora_matmul_ref(x, w, a, b, 1.5)
+    np.testing.assert_allclose(np.asarray(yk, np.float32),
+                               np.asarray(yr, np.float32), **TOLS[dtype])
+
+
+def test_lora_matmul_batched_lead_dims():
+    x = jax.random.normal(jax.random.key(0), (2, 3, 40))
+    w = jax.random.normal(jax.random.key(1), (40, 24)) * 0.1
+    a = jax.random.normal(jax.random.key(2), (4, 40)) * 0.1
+    b = jax.random.normal(jax.random.key(3), (24, 4))
+    yk = lora_matmul(x, w, a, b, scale=1.0, bm=32, bn=32, bk=32)
+    yr = lora_matmul_ref(x.reshape(-1, 40), w, a, b, 1.0).reshape(2, 3, 24)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Sq,Sk,H,KH,D,win",
+                         [(2, 64, 64, 4, 2, 32, 0),
+                          (1, 64, 128, 4, 1, 64, 0),
+                          (2, 64, 64, 8, 8, 32, 24),
+                          (1, 40, 72, 2, 1, 16, 0),
+                          (1, 128, 128, 4, 2, 128, 33)])
+def test_flash_attention_sweep(B, Sq, Sk, H, KH, D, win, dtype):
+    key = jax.random.key(Sq + Sk)
+    q = jax.random.normal(key, (B, Sq, H, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(jax.random.key(1), (B, Sk, KH, D),
+                          jnp.float32).astype(dtype)
+    v = jax.random.normal(jax.random.key(2), (B, Sk, KH, D),
+                          jnp.float32).astype(dtype)
+    o = flash_attention(q, k, v, window=win, bq=32, bk=32)
+    oref = flash_attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                               v.transpose(0, 2, 1, 3),
+                               window=win).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(oref, np.float32), **TOLS[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,nh,hd,N,Q", [(2, 64, 4, 32, 16, 16),
+                                           (1, 100, 2, 16, 8, 32),
+                                           (2, 31, 3, 8, 4, 16),
+                                           (1, 256, 2, 64, 32, 64)])
+def test_ssd_scan_sweep(B, S, nh, hd, N, Q, dtype):
+    key = jax.random.key(S)
+    xh = jax.random.normal(key, (B, S, nh, hd), jnp.float32).astype(dtype)
+    Bm = (jax.random.normal(jax.random.key(1), (B, S, N)) * N ** -0.5).astype(dtype)
+    Cm = (jax.random.normal(jax.random.key(2), (B, S, N)) * N ** -0.5).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(jax.random.key(3), (B, S, nh)))
+    A = -jnp.exp(jnp.linspace(0.0, 1.5, nh))
+    yk = ssd_scan(xh, Bm, Cm, dt, A, chunk=Q)
+    yr, _ = ssd_sequential_ref(xh, Bm, Cm, dt, A)
+    tol = dict(atol=1e-4, rtol=1e-3) if dtype == jnp.float32 else \
+        dict(atol=8e-2, rtol=8e-2)
+    np.testing.assert_allclose(np.asarray(yk, np.float32),
+                               np.asarray(yr, np.float32), **tol)
+
+
+def test_kernels_match_model_twins(key):
+    """The jnp twins inside the model (chunked attention / ssd_chunked) and
+    the kernels agree with each other through the shared oracles."""
+    from repro.models.attention import online_attention
+    from repro.models.ssm import ssd_chunked
+
+    B, Sq, H, KH, D = 1, 64, 4, 2, 32
+    q = jax.random.normal(key, (B, Sq, H, D))
+    k = jax.random.normal(jax.random.key(1), (B, Sq, KH, D))
+    v = jax.random.normal(jax.random.key(2), (B, Sq, KH, D))
+    pos = jnp.arange(Sq)
+    o_model = online_attention(q, k, v, pos, pos, kv_chunk=16)
+    o_kernel = flash_attention(q, k, v, bq=32, bk=32)
+    np.testing.assert_allclose(np.asarray(o_model), np.asarray(o_kernel),
+                               atol=2e-5, rtol=2e-5)
+
+    S, nh, hd, N = 64, 2, 16, 8
+    xh = jax.random.normal(key, (1, S, nh, hd))
+    Bm = jax.random.normal(jax.random.key(1), (1, S, N)) * N ** -0.5
+    Cm = jax.random.normal(jax.random.key(2), (1, S, N)) * N ** -0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.key(3), (1, S, nh)))
+    A = -jnp.exp(jnp.linspace(0.0, 1.0, nh))
+    y_model, _ = ssd_chunked(xh, Bm, Cm, dt, A, chunk=16)
+    y_kernel = ssd_scan(xh, Bm, Cm, dt, A, chunk=16)
+    np.testing.assert_allclose(np.asarray(y_model), np.asarray(y_kernel),
+                               atol=1e-4, rtol=1e-3)

@@ -1,0 +1,107 @@
+"""Latency model (eqs. 8-17): hand-computed values + structural properties."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs import DEFAULT_SYSTEM, get_arch
+from repro.core.channel import ClientEnv
+from repro.core.latency import (latency_report, local_round_latency,
+                                split_workload, t_act_upload, t_client_bp,
+                                t_client_fp, t_lora_upload, t_server_fp,
+                                total_latency)
+from repro.core.workload import layer_workloads, lm_head_flops
+
+
+def _env(f=1e9, kappa=1 / 1024):
+    return ClientEnv(f_hz=f, kappa=kappa, d_main_m=100, d_fed_m=10,
+                     gain_main=1.0, gain_fed=1.0)
+
+
+def test_eq8_hand_computed():
+    cfg = get_arch("gpt2-s")
+    ws = layer_workloads(cfg, 512)
+    sw = split_workload(cfg, ws, ell_c=3, rank=4, seq_len=512)
+    env = _env()
+    b = 16
+    expected = b * env.kappa * (sw.phi_c_f + sw.dphi_c_f) / env.f_hz
+    assert t_client_fp(sw, env, b) == pytest.approx(expected)
+    # BP is exactly 2x FP (paper's assumption)
+    assert t_client_bp(sw, env, b) == pytest.approx(2 * expected)
+
+
+def test_split_conservation():
+    """phi_c + phi_s == total + LM head, for every split."""
+    cfg = get_arch("gpt2-s")
+    ws = layer_workloads(cfg, 512)
+    total = sum(w.rho for w in ws) + lm_head_flops(cfg, 512)
+    for ell in range(1, cfg.num_layers):
+        sw = split_workload(cfg, ws, ell, 4, 512)
+        assert sw.phi_c_f + sw.phi_s_f == pytest.approx(total)
+
+
+def test_gamma_is_split_layer_activation():
+    cfg = get_arch("gpt2-s")
+    ws = layer_workloads(cfg, 512)
+    for ell in (1, 5, 11):
+        sw = split_workload(cfg, ws, ell, 4, 512)
+        assert sw.gamma_s == ws[ell - 1].psi == 512 * cfg.d_model * 2
+
+
+def test_latency_monotone_in_rank():
+    cfg = get_arch("gpt2-s")
+    ws = layer_workloads(cfg, 512)
+    env = [_env()]
+    prev = 0.0
+    for r in (1, 2, 4, 8):
+        sw = split_workload(cfg, ws, 6, r, 512)
+        t = local_round_latency(sw, env, [1e6], DEFAULT_SYSTEM, 16)
+        assert t > prev
+        prev = t
+
+
+def test_lora_upload_linear_in_rank():
+    cfg = get_arch("gpt2-s")
+    ws = layer_workloads(cfg, 512)
+    sw1 = split_workload(cfg, ws, 6, 1, 512)
+    sw4 = split_workload(cfg, ws, 6, 4, 512)
+    assert t_lora_upload(sw4, 1e6) == pytest.approx(4 * t_lora_upload(sw1, 1e6))
+
+
+def test_eq16_composition():
+    cfg = get_arch("gpt2-s")
+    ws = layer_workloads(cfg, 512)
+    sw = split_workload(cfg, ws, 6, 4, 512)
+    envs = [_env(1e9), _env(1.5e9)]
+    rates = [1e6, 2e6]
+    b, K = 16, 2
+    t1 = max(t_client_fp(sw, e, b) + t_act_upload(sw, r, b)
+             for e, r in zip(envs, rates))
+    t2 = max(t_client_bp(sw, e, b) for e in envs)
+    sfp = t_server_fp(sw, DEFAULT_SYSTEM, K, b)
+    expected = t1 + sfp + 2 * sfp + t2
+    got = local_round_latency(sw, envs, rates, DEFAULT_SYSTEM, b)
+    assert got == pytest.approx(expected)
+
+
+def test_eq17_total():
+    cfg = get_arch("gpt2-s")
+    ws = layer_workloads(cfg, 512)
+    sw = split_workload(cfg, ws, 6, 4, 512)
+    envs = [_env()]
+    t_local = local_round_latency(sw, envs, [1e6], DEFAULT_SYSTEM, 16)
+    t3 = t_lora_upload(sw, 5e5)
+    got = total_latency(sw, envs, [1e6], [5e5], DEFAULT_SYSTEM, 16,
+                        local_steps=12, global_rounds=30)
+    assert got == pytest.approx(30 * (12 * t_local + t3))
+
+
+def test_report_keys():
+    cfg = get_arch("gpt2-s")
+    envs = [_env(), _env(1.2e9)]
+    rep = latency_report(cfg, DEFAULT_SYSTEM, envs, [1e6, 1e6], [1e6, 1e6],
+                         ell_c=6, rank=4, seq_len=512, b=16, local_steps=12,
+                         global_rounds=30.0)
+    for k in ("t1", "t2", "t3", "t_local", "total", "per_client"):
+        assert k in rep
+    assert len(rep["per_client"]) == 2

@@ -1,0 +1,67 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core.lora import (adapter_bytes_per_layer, count_params,
+                             merge_adapter, split_tree, concat_tree)
+from repro.models.layers import dense, init_lora
+from repro import models as M
+
+
+def test_merge_equivalence(key):
+    """forward-with-adapter == forward-with-merged-weights."""
+    d_in, d_out, r = 32, 48, 4
+    w = jax.random.normal(key, (d_in, d_out)) * d_in ** -0.5
+    lora = init_lora(key, d_in, d_out, r, jnp.float32)
+    lora = {**lora, "b": jax.random.normal(key, (d_out, r)) * 0.1}
+    x = jax.random.normal(jax.random.key(1), (5, d_in))
+    scale = 2.0
+    y1 = dense(x, w, lora=lora, lora_scale=scale)
+    y2 = x @ merge_adapter(w, lora, scale)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+
+
+def test_lora_b_zero_init_is_identity(key):
+    """Freshly initialized adapters must not change the model (B = 0)."""
+    cfg = get_arch("gpt2-s").reduced()
+    params = M.init_params(cfg, key)
+    lora = M.init_lora_stack(cfg, jax.random.key(3))
+    tokens = jax.random.randint(key, (2, 16), 0, cfg.vocab_size)
+    rt = M.Runtime(attn_impl="naive")
+    l0, _ = M.forward(cfg, params, tokens, lora=None, rt=rt)
+    l1, _ = M.forward(cfg, params, tokens, lora=lora, rt=rt)
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1), atol=1e-6)
+
+
+def test_lora_param_count_linear_in_rank():
+    cfg = get_arch("gpt2-s")
+    n1 = M.lora_num_params(cfg, 1)
+    n4 = M.lora_num_params(cfg, 4)
+    assert n4 == 4 * n1
+    # paper protocol: q,v per layer -> r*(d + h*hd) + r*(d + kh*hd) each layer
+    d = cfg.d_model
+    expected = cfg.num_layers * 1 * ((d + d) + (d + d))
+    assert n1 == expected
+
+
+def test_adapter_bytes_per_layer():
+    cfg = get_arch("mamba2-2.7b")
+    per = adapter_bytes_per_layer(cfg, rank=2)
+    assert len(per) == cfg.num_layers
+    assert all(b > 0 for b in per)       # ssm_in/ssm_out targets exist
+    cfg2 = get_arch("yi-9b")
+    per2 = adapter_bytes_per_layer(cfg2, rank=2)
+    d, kh, hd, h = cfg2.d_model, cfg2.num_kv_heads, cfg2.head_dim, cfg2.num_heads
+    assert per2[0] == 2 * ((d + h * hd) + (d + kh * hd)) * 4
+
+
+def test_split_concat_roundtrip(key):
+    cfg = get_arch("gpt2-s").reduced(num_layers=4)
+    lora = M.init_lora_stack(cfg, key)
+    c, s = split_tree(lora, 1)
+    back = concat_tree(c, s)
+    for a, b in zip(jax.tree.leaves(lora), jax.tree.leaves(back)):
+        assert a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert count_params(c) + count_params(s) == count_params(lora)

@@ -1,0 +1,111 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import DEFAULT_SYSTEM, get_arch
+from repro.core.aggregation import fedavg
+from repro.core.channel import min_power_for_rate, rate_for_power
+from repro.core.convergence import fit_convergence_model
+from repro.core.latency import split_workload
+from repro.core.workload import layer_workloads, lm_head_flops
+from repro.kernels.lora_matmul import lora_matmul, lora_matmul_ref
+
+COMMON = settings(max_examples=25, deadline=None)
+
+
+@COMMON
+@given(p=st.floats(1e-6, 10.0), bw=st.floats(1e3, 1e7), g=st.floats(1e-12, 1.0))
+def test_rate_power_inverse(p, bw, g):
+    noise = DEFAULT_SYSTEM.noise_psd_w_hz
+    r = rate_for_power(p, bw, g, noise)
+    p_back = min_power_for_rate(r, bw, g, noise)
+    assert p_back == pytest.approx(p, rel=1e-6)
+
+
+@COMMON
+@given(p1=st.floats(1e-6, 1.0), p2=st.floats(1e-6, 1.0),
+       bw=st.floats(1e3, 1e6))
+def test_rate_monotone_in_power(p1, p2, bw):
+    noise = DEFAULT_SYSTEM.noise_psd_w_hz
+    lo, hi = sorted([p1, p2])
+    assert (rate_for_power(lo, bw, 1e-9, noise)
+            <= rate_for_power(hi, bw, 1e-9, noise) + 1e-12)
+
+
+@COMMON
+@given(w=st.lists(st.floats(0.01, 10.0), min_size=2, max_size=5),
+       seed=st.integers(0, 100))
+def test_fedavg_in_convex_hull(w, seed):
+    rng = np.random.default_rng(seed)
+    trees = [{"x": jnp.asarray(rng.normal(size=(3, 2)), jnp.float32)}
+             for _ in w]
+    avg = fedavg(trees, w)["x"]
+    stack = np.stack([np.asarray(t["x"]) for t in trees])
+    assert (np.asarray(avg) <= stack.max(0) + 1e-5).all()
+    assert (np.asarray(avg) >= stack.min(0) - 1e-5).all()
+
+
+@COMMON
+@given(ell=st.integers(1, 11), rank=st.integers(1, 16))
+def test_workload_conservation(ell, rank):
+    cfg = get_arch("gpt2-s")
+    ws = layer_workloads(cfg, 256)
+    sw = split_workload(cfg, ws, ell, rank, 256)
+    total = sum(w.rho for w in ws) + lm_head_flops(cfg, 256)
+    assert sw.phi_c_f + sw.phi_s_f == pytest.approx(total)
+    total_lora = rank * sum(w.drho for w in ws)
+    assert sw.dphi_c_f + sw.dphi_s_f == pytest.approx(total_lora)
+    assert sw.dtheta_c >= 0 and sw.gamma_s > 0
+
+
+@COMMON
+@given(e_inf=st.floats(1.0, 50.0), c=st.floats(1.0, 100.0),
+       alpha=st.floats(0.2, 1.8))
+def test_convergence_fit_recovers(e_inf, c, alpha):
+    ranks = np.array([1, 2, 4, 6, 8, 16], float)
+    steps = e_inf + c * ranks ** (-alpha)
+    model = fit_convergence_model(ranks, steps)
+    pred = np.array([model(r) for r in ranks])
+    np.testing.assert_allclose(pred, steps, rtol=0.05, atol=0.5)
+    # monotone decreasing in rank
+    assert model(1) >= model(8) - 1e-9
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 3), k=st.integers(1, 3), n=st.integers(1, 3),
+       r=st.sampled_from([1, 2, 4]), seed=st.integers(0, 50))
+def test_lora_matmul_property(m, k, n, r, seed):
+    M, K, N = 16 * m + 3, 16 * k + 1, 16 * n + 5
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, N)) * K ** -0.5, jnp.float32)
+    a = jnp.asarray(rng.normal(size=(r, K)) * K ** -0.5, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(N, r)), jnp.float32)
+    yk = lora_matmul(x, w, a, b, scale=0.7, bm=16, bn=16, bk=16)
+    yr = lora_matmul_ref(x, w, a, b, 0.7)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr),
+                               atol=3e-5, rtol=3e-5)
+
+
+@COMMON
+@given(seed=st.integers(0, 1000))
+def test_attention_mask_properties(seed):
+    from repro.models.attention import _mask
+
+    rng = np.random.default_rng(seed)
+    Sq, Sk = int(rng.integers(1, 20)), int(rng.integers(1, 20))
+    q_pos = jnp.asarray(np.sort(rng.integers(0, 30, Sq)))
+    k_pos = jnp.asarray(rng.integers(-1, 30, Sk))
+    w = int(rng.integers(0, 10))
+    m = np.asarray(_mask(q_pos, k_pos, w))
+    kp = np.asarray(k_pos)
+    qp = np.asarray(q_pos)
+    for i in range(Sq):
+        for j in range(Sk):
+            expect = kp[j] >= 0 and kp[j] <= qp[i]
+            if w:
+                expect = expect and (qp[i] - kp[j]) < w
+            assert m[i, j] == expect

@@ -1,0 +1,94 @@
+"""Resource allocation: Algorithm 2/3 behaviour, power-control optimality,
+baseline ordering (Section VII-C)."""
+import numpy as np
+import pytest
+
+from repro.configs import DEFAULT_SYSTEM, get_arch
+from repro.core import (Problem, baseline, bcd_minimize_delay,
+                        greedy_subchannels, objective, sample_clients,
+                        solve_power_control, solve_power_control_slsqp)
+from repro.core.split import mu_vector, valid_splits, check_mu
+
+
+@pytest.fixture(scope="module")
+def prob():
+    envs = tuple(sample_clients(DEFAULT_SYSTEM, 0))
+    return Problem(cfg=get_arch("gpt2-s"), sys_cfg=DEFAULT_SYSTEM, envs=envs,
+                   seq_len=512, batch=16, local_steps=12)
+
+
+def test_greedy_constraints(prob):
+    alloc = greedy_subchannels(prob, ell_c=6, rank=4)
+    K = len(prob.envs)
+    # C2: every subchannel assigned to exactly one client
+    assert (alloc.assign_main >= 0).all() and (alloc.assign_main < K).all()
+    assert (alloc.assign_fed >= 0).all() and (alloc.assign_fed < K).all()
+    # Phase 1 guarantee: every client holds >= 1 subchannel on each link
+    assert set(alloc.assign_main) == set(range(K))
+    assert set(alloc.assign_fed) == set(range(K))
+
+
+def test_power_constraints_respected(prob):
+    alloc = solve_power_control(prob, greedy_subchannels(prob, 6, 4))
+    s = prob.sys_cfg
+    assert (alloc.power_main <= s.p_max_w * (1 + 1e-6)).all()
+    assert alloc.power_main.sum() <= s.p_th_w * (1 + 1e-6)
+    assert (alloc.power_fed <= s.p_max_w * (1 + 1e-6)).all()
+    assert alloc.power_fed.sum() <= s.p_th_w * (1 + 1e-6)
+
+
+def test_bisection_matches_slsqp(prob):
+    a0 = greedy_subchannels(prob, 6, 4)
+    t_bis = objective(prob, solve_power_control(prob, a0))
+    t_slsqp = objective(prob, solve_power_control_slsqp(prob, a0))
+    assert t_bis <= t_slsqp * 1.01       # exact solve is never worse
+
+
+def test_bcd_monotone_and_beats_baselines(prob):
+    alloc, hist = bcd_minimize_delay(prob)
+    assert all(hist[i + 1] <= hist[i] * (1 + 1e-9) for i in range(len(hist) - 1))
+    t_star = hist[-1]
+    rng = np.random.default_rng(0)
+    for which in "abcd":
+        ts = [objective(prob, baseline(prob, which, np.random.default_rng(s)))
+              for s in range(5)]
+        assert t_star <= min(ts) * 1.001, which
+    # paper ordering: full-random (a) is the worst baseline on average
+    means = {w: np.mean([objective(prob, baseline(prob, w,
+                                                  np.random.default_rng(s)))
+                         for s in range(8)]) for w in "abcd"}
+    assert means["a"] == max(means.values())
+
+
+def test_more_bandwidth_reduces_delay(prob):
+    import dataclasses
+
+    base = bcd_minimize_delay(prob)[1][-1]
+    sys2 = dataclasses.replace(DEFAULT_SYSTEM, total_bandwidth_hz=2e6)
+    prob2 = dataclasses.replace(prob, sys_cfg=sys2)
+    assert bcd_minimize_delay(prob2)[1][-1] < base
+
+
+def test_faster_server_reduces_delay(prob):
+    import dataclasses
+
+    base = bcd_minimize_delay(prob)[1][-1]
+    sys2 = dataclasses.replace(DEFAULT_SYSTEM, f_server_hz=50e9)
+    prob2 = dataclasses.replace(prob, sys_cfg=sys2)
+    assert bcd_minimize_delay(prob2)[1][-1] < base
+
+
+def test_mu_vector_c3():
+    cfg = get_arch("gpt2-s")
+    mu = mu_vector(cfg, 5)
+    assert check_mu(mu) == 5
+    with pytest.raises(ValueError):
+        check_mu((0, 1))
+    assert valid_splits(cfg) == list(range(1, 12))
+
+
+def test_jamba_splits_pattern_aligned():
+    cfg = get_arch("jamba-1.5-large-398b")
+    vs = valid_splits(cfg)
+    assert all(v % 8 == 0 for v in vs)
+    assert vs[0] == 8 and vs[-1] == 64

@@ -1,0 +1,112 @@
+"""Additional SFL system behaviour: non-IID convergence, straggler-aware
+greedy allocation, sharding rule units."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import DEFAULT_SYSTEM, TrainConfig, get_arch
+from repro.core import Problem, greedy_subchannels, sample_clients
+from repro.core.channel import ClientEnv, subchannel_bandwidths
+from repro.core.sfl import SflLLM
+from repro.data import WordTokenizer, dirichlet_partition, e2e_splits, sfl_batches
+from repro import models as M
+from repro.optim import adamw
+
+
+def test_sfl_noniid_dirichlet_converges(key):
+    """Paper Section VII-B: SflLLM is robust to data heterogeneity."""
+    K, b, S = 3, 4, 48
+    cfg = get_arch("gpt2-s").reduced(num_layers=4)
+    train, _, _ = e2e_splits(600, 50, 50)
+    tok = WordTokenizer.from_corpus([e.text for e in train])
+    # label each example by its restaurant name -> skewed split
+    names = sorted({e.mr.split("]")[0] for e in train})
+    labels = [names.index(e.mr.split("]")[0]) for e in train]
+    parts_idx = dirichlet_partition(labels, K, alpha=0.3, rng=0)
+    parts = [np.array(train, dtype=object)[i] for i in parts_idx]
+    assert all(len(p) > 0 for p in parts)
+    data = sfl_batches(tok, parts, b, S, rng=0)
+
+    params = M.init_params(cfg, key)
+    lora = M.init_lora_stack(cfg, key)
+    tc = TrainConfig(num_clients=K, batch_size=b, local_steps=4)
+    sfl = SflLLM(cfg, params, ell_c=2, train_cfg=tc, optimizer=adamw(3e-3))
+    state = sfl.init_state(lora)
+    state, losses = sfl.train(state, data, global_rounds=4,
+                              sample_counts=[len(p) for p in parts])
+    assert losses[-1] < losses[0] - 0.1
+
+
+def test_greedy_feeds_stragglers():
+    """Algorithm 2 phase 1: the weakest-compute client gets the widest
+    main-link subchannel; the farthest client the widest fed-link one."""
+    sys_cfg = DEFAULT_SYSTEM
+    envs = (
+        ClientEnv(f_hz=1.0e9, kappa=1 / 1024, d_main_m=100, d_fed_m=5,
+                  gain_main=1e-10, gain_fed=1e-9),
+        ClientEnv(f_hz=1.6e9, kappa=1 / 1024, d_main_m=100, d_fed_m=19,
+                  gain_main=1e-10, gain_fed=1e-9),
+        ClientEnv(f_hz=1.3e9, kappa=1 / 1024, d_main_m=100, d_fed_m=12,
+                  gain_main=1e-10, gain_fed=1e-9),
+    )
+    prob = Problem(cfg=get_arch("gpt2-s"), sys_cfg=sys_cfg, envs=envs,
+                   seq_len=512, batch=16, local_steps=12)
+    alloc = greedy_subchannels(prob, ell_c=6, rank=4)
+    bw_m = alloc.bw_main(sys_cfg)
+    bw_f = alloc.bw_fed(sys_cfg)
+    # weakest client (0) must end with >= the bandwidth of the strongest (1)
+    assert bw_m[0] >= bw_m[1]
+    # farthest-from-fed client (1) gets at least as much fed bandwidth
+    assert bw_f[1] >= bw_f[0]
+
+
+def test_param_spec_rules():
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import make_debug_mesh  # needs >= 4 devices? no:
+    # build a fake mesh-shape object is overkill; use a 1x1 mesh on CPU
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    from repro.sharding.specs import param_spec
+
+    # divisibility guard: dims not divisible by the axis stay unsharded
+    assert param_spec("layers/0/mixer/wq/w", (2, 100, 64), mesh) == P(None, None, None)
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+
+    m = FakeMesh()
+    assert param_spec("layers/0/mixer/wq/w", (2, 4096, 4096), m) == \
+        P(None, "data", "model")
+    assert param_spec("layers/0/mixer/wo/w", (2, 4096, 4096), m) == \
+        P(None, "model", "data")
+    assert param_spec("layers/0/mlp/w_gate", (2, 16, 4096, 1024), m) == \
+        P(None, "model", "data", None)
+    assert param_spec("embed/tok", (50304, 2048), m) == P("model", "data")
+    assert param_spec("layers/0/norm1/scale", (2, 4096), m) == P(None, None)
+    # uneven head dim (e.g. 40 heads * 128 = 5120 divisible, but 100 is not)
+    assert param_spec("layers/0/mixer/wk/w", (2, 4096, 100), m) == \
+        P(None, "data", None)
+
+
+def test_cache_spec_rules():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.specs import cache_spec
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+
+    m = FakeMesh()
+    # KH divisible by tp -> shard heads
+    assert cache_spec("0/k", (2, 128, 32768, 32, 128), m) == \
+        P(None, ("data",), None, "model", None)
+    # KH=8 not divisible -> shard the sequence dim
+    assert cache_spec("0/k", (2, 128, 32768, 8, 128), m) == \
+        P(None, ("data",), "model", None, None)
+    # ssm state: heads over tp
+    assert cache_spec("1/ssm", (2, 128, 80, 64, 128), m) == \
+        P(None, ("data",), "model", None, None)

@@ -1,0 +1,79 @@
+"""Deliverable (f): per-assigned-architecture smoke tests — a REDUCED
+same-family variant runs one forward/train step and one prefill+decode
+step on CPU, asserting output shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED
+from repro import models as M
+from repro.optim import adamw, apply_updates
+
+RT = M.Runtime(attn_impl="naive", capacity_factor=8.0)
+
+
+def _batch(cfg, key, B=2, S=32):
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.frontend:
+        batch["frontend_emb"] = 0.1 * jax.random.normal(
+            key, (B, cfg.frontend_tokens, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", [c.name for c in ASSIGNED])
+def test_train_step_smoke(arch, key):
+    from repro.configs import get_arch
+
+    cfg = get_arch(arch).reduced()
+    params = M.init_params(cfg, key)
+    lora = M.init_lora_stack(cfg, key)
+    batch = _batch(cfg, key)
+
+    def loss(l):
+        return M.loss_fn(cfg, params, l, batch, rt=RT)
+
+    (total, m), grads = jax.value_and_grad(loss, has_aux=True)(lora)
+    assert np.isfinite(float(total)), arch
+    assert np.isfinite(float(m["loss"]))
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, f"{arch}: no gradient signal"
+    opt = adamw(1e-3)
+    upd, _ = opt.update(grads, opt.init(lora), lora)
+    lora2 = apply_updates(lora, upd)
+    total2, _ = loss(lora2)
+    assert np.isfinite(float(total2))
+
+
+@pytest.mark.parametrize("arch", [c.name for c in ASSIGNED])
+def test_forward_shapes(arch, key):
+    from repro.configs import get_arch
+
+    cfg = get_arch(arch).reduced()
+    params = M.init_params(cfg, key)
+    batch = _batch(cfg, key, B=2, S=16)
+    logits, aux = M.forward(cfg, params, batch["tokens"], rt=RT,
+                            frontend_emb=batch.get("frontend_emb"))
+    S_total = 16 + (cfg.frontend_tokens if cfg.frontend else 0)
+    assert logits.shape == (2, S_total, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any()), arch
+
+
+@pytest.mark.parametrize("arch", [c.name for c in ASSIGNED])
+def test_prefill_decode_smoke(arch, key):
+    from repro.configs import get_arch
+
+    cfg = get_arch(arch).reduced()
+    params = M.init_params(cfg, key)
+    lora = M.init_lora_stack(cfg, key)
+    B, S = 2, 17
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    logits, caches = M.prefill(cfg, params, tokens[:, :-1], lora=lora, rt=RT,
+                               cache_len=S + 4)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+    logits2, caches = M.decode_step(cfg, params, tokens[:, -1:], caches,
+                                    jnp.int32(S - 1), lora=lora, rt=RT)
+    assert logits2.shape == (B, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits2).any()), arch

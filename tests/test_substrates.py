@@ -1,0 +1,141 @@
+"""Optimizers, schedules, data pipeline, checkpointing, workload model."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore_pytree, save_pytree
+from repro.configs import get_arch
+from repro.core.workload import layer_workloads
+from repro.data import (WordTokenizer, batches, dirichlet_partition,
+                        e2e_splits, encode_example, iid_partition, sfl_batches)
+from repro.models.model import IGNORE_ID
+from repro.optim import (adamw, apply_updates, clip_by_global_norm, cosine,
+                         sgd, wsd)
+
+
+# ---------------------------------------------------------------------------
+# optim
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("opt_fn", [lambda: sgd(0.1), lambda: sgd(0.05, 0.9),
+                                    lambda: adamw(0.1),
+                                    lambda: adamw(0.1, weight_decay=0.01)])
+def test_optimizers_minimize_quadratic(opt_fn):
+    opt = opt_fn()
+    params = {"x": jnp.array([3.0, -2.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = jax.tree.map(lambda p: 2 * p, params)
+        upd, state = opt.update(grads, state, params)
+        params = apply_updates(params, upd)
+    assert float(jnp.abs(params["x"]).max()) < 0.05
+
+
+def test_wsd_schedule_shape():
+    f = wsd(1.0, warmup_steps=10, stable_steps=50, decay_steps=20)
+    assert float(f(jnp.int32(5))) == pytest.approx(0.5)
+    assert float(f(jnp.int32(30))) == pytest.approx(1.0)
+    assert float(f(jnp.int32(60))) == pytest.approx(1.0)
+    assert float(f(jnp.int32(80))) == pytest.approx(0.01, rel=0.01)
+
+
+def test_cosine_schedule_endpoints():
+    f = cosine(2.0, total_steps=100, final_frac=0.1)
+    assert float(f(jnp.int32(0))) == pytest.approx(2.0)
+    assert float(f(jnp.int32(100))) == pytest.approx(0.2)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full(4, 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    n2 = float(jnp.sqrt(jnp.sum(clipped["a"] ** 2)))
+    assert n2 == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_partitions_disjoint_and_cover():
+    parts = iid_partition(103, 4, 0)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == 103 and len(set(allidx.tolist())) == 103
+    labels = np.random.default_rng(0).integers(0, 5, 200)
+    dparts = dirichlet_partition(labels, 4, 0.5, 0)
+    alld = np.concatenate(dparts)
+    assert sorted(alld.tolist()) == list(range(200))
+
+
+def test_encode_masks_conditioning():
+    tr, _, _ = e2e_splits(50, 10, 10)
+    tok = WordTokenizer.from_corpus([e.text for e in tr])
+    x, y = encode_example(tok, tr[0], 64)
+    assert x.shape == (64,) and y.shape == (64,)
+    n_mr = len(tok.encode(tr[0].mr)) + 1
+    assert (y[:n_mr] == IGNORE_ID).all()       # MR + <sep> masked
+    assert (y != IGNORE_ID).sum() > 0          # reference labeled
+
+
+def test_sfl_batch_shapes():
+    tr, _, _ = e2e_splits(60, 10, 10)
+    tok = WordTokenizer.from_corpus([e.text for e in tr])
+    parts = [np.array(tr, dtype=object)[i] for i in iid_partition(60, 3)]
+    it = sfl_batches(tok, parts, 4, 32)
+    b = next(it)
+    assert b["tokens"].shape == (3, 4, 32)
+    assert b["labels"].shape == (3, 4, 32)
+
+
+def test_corpus_determinism():
+    a, _, _ = e2e_splits(20, 5, 5, seed=7)
+    b, _, _ = e2e_splits(20, 5, 5, seed=7)
+    assert [e.text for e in a] == [e.text for e in b]
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path, key):
+    cfg = get_arch("gpt2-s").reduced()
+    from repro import models as M
+
+    lora = M.init_lora_stack(cfg, key, dtype=jnp.bfloat16)
+    path = os.path.join(tmp_path, "ck.msgpack")
+    save_pytree(path, lora)
+    restored = restore_pytree(path, jax.tree.map(jnp.zeros_like, lora))
+    for a, b in zip(jax.tree.leaves(lora), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_missing_leaf_raises(tmp_path):
+    p = os.path.join(tmp_path, "x.msgpack")
+    save_pytree(p, {"a": jnp.ones(3)})
+    with pytest.raises(KeyError):
+        restore_pytree(p, {"a": jnp.zeros(3), "b": jnp.zeros(2)})
+
+
+# ---------------------------------------------------------------------------
+# workload model
+# ---------------------------------------------------------------------------
+
+def test_window_reduces_attention_flops():
+    cfg = get_arch("yi-9b")
+    full = layer_workloads(cfg, 32768)[0].rho
+    win = layer_workloads(cfg.replace(attn_window=4096), 32768)[0].rho
+    assert win < full
+
+
+def test_moe_flops_count_active_only():
+    moe = get_arch("olmoe-1b-7b")
+    ws = layer_workloads(moe, 1024)[0]
+    dense_equiv = 2 * 1024 * moe.experts_per_token * 3 * moe.d_model * moe.d_ff
+    router = 2 * 1024 * moe.d_model * moe.num_experts
+    attn_part = ws.rho - dense_equiv - router
+    assert attn_part > 0   # rho = attn + router + active experts only
