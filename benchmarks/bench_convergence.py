@@ -3,6 +3,10 @@ reach a target loss, on the synthetic E2E task with a reduced GPT-2.
 
 Also fits the E(r) convergence model (core.convergence) from the measured
 (rank, steps) pairs — the calibration the paper performs offline for P4.
+
+Training goes through launch.engine (one compiled scan per round); a
+dedicated row compares steps/sec of the seed-style per-step Python loop
+against the compiled round engine on the same workload ("engine/speedup").
 """
 from __future__ import annotations
 
@@ -13,8 +17,9 @@ import numpy as np
 
 from repro.configs import TrainConfig, get_arch
 from repro.core.convergence import fit_convergence_model
-from repro.core.sfl import CentralizedLoRA
-from repro.data import WordTokenizer, batches, e2e_splits
+from repro.core.sfl import CentralizedLoRA, SflLLM
+from repro.data import WordTokenizer, batches, e2e_splits, iid_partition, sfl_batches
+from repro.launch.engine import CentralizedRound, SflRound, Trainer
 from repro import models as M
 from repro.optim import adamw
 
@@ -35,22 +40,26 @@ def run(seed: int = 0):
     val_iter = batches(tok, val, 32, S, rng=123)
     val_batch = next(val_iter)
 
+    from repro.models.model import loss_fn
+    eval_loss = jax.jit(lambda l, bt: loss_fn(
+        cfg, params, l, bt, rt=M.Runtime(attn_impl="naive"))[1]["loss"])
+
     curves = {}
     for rank in RANKS:
         lora = M.init_lora_stack(cfg, jax.random.key(seed + 1), rank=rank)
         cen = CentralizedLoRA(cfg, params, tc, adamw(4e-3))
-        state, opt = cen.init_state(lora)
+        state = cen.init_state(lora)
         data = batches(tok, train, B, S, rng=seed)
         losses = []
+
+        def on_round(e, st, h, losses=losses):
+            losses.append(float(eval_loss(st[0], val_batch)))
+
+        trainer = Trainer(CentralizedRound(cen), local_steps=EVAL_EVERY,
+                          callback=on_round)
         t0 = time.time()
-        for step in range(STEPS):
-            state, opt, m = cen.step(state, opt, next(data))
-            if (step + 1) % EVAL_EVERY == 0:
-                from repro.models.model import loss_fn
-                _, em = jax.jit(lambda l, bt: loss_fn(
-                    cfg, params, l, bt, rt=M.Runtime(attn_impl="naive")))(
-                        state, val_batch)
-                losses.append(float(em["loss"]))
+        state, _ = trainer.fit(state, data,
+                               global_rounds=STEPS // EVAL_EVERY)
         curves[rank] = (losses, time.time() - t0)
     return curves
 
@@ -66,7 +75,65 @@ def steps_to_target(curves, target=None):
     return target, out
 
 
+def engine_speedup(seed: int = 0, steps: int = 48, local_steps: int = 6,
+                   K: int = 3):
+    """steps/sec before (per-step jit dispatch + Python-loop FedAvg) vs
+    after (one jitted scan + in-graph FedAvg per round), same SFL workload."""
+    cfg = get_arch("gpt2-s").reduced(num_layers=4)
+    train, _, _ = e2e_splits(1200, 100, 100, seed=seed)
+    tok = WordTokenizer.from_corpus([e.text for e in train])
+    parts = [np.array(train, dtype=object)[i]
+             for i in iid_partition(len(train), K, seed)]
+    counts = [len(p) for p in parts]
+    key = jax.random.key(seed)
+    params = M.init_params(cfg, key)
+    lora = M.init_lora_stack(cfg, jax.random.key(seed + 1), rank=4)
+    tc = TrainConfig(num_clients=K, batch_size=4, local_steps=local_steps)
+    rounds = steps // local_steps
+
+    def measure(fn):
+        fn()                               # warmup round (compile)
+        t0 = time.time()
+        n = fn()
+        return n / (time.time() - t0)
+
+    # before: the seed execution model — host round-trips K*I times/round
+    sfl = SflLLM(cfg, params, ell_c=2, train_cfg=tc, optimizer=adamw(3e-3),
+                 donate=False)
+    data = sfl_batches(tok, parts, 4, S, rng=seed)
+
+    def per_step_loop():
+        state = sfl.init_state(lora)
+        for _ in range(rounds):
+            for _ in range(local_steps):
+                state, m = sfl.local_step(state, next(data))
+            state = sfl.aggregate(state, counts)
+        jax.block_until_ready(state.lora_client)
+        return rounds * local_steps
+
+    # after: the compiled round engine (scan + in-graph FedAvg, donation on)
+    sfl_after = SflLLM(cfg, params, ell_c=2, train_cfg=tc,
+                       optimizer=adamw(3e-3), donate=True)
+
+    def compiled_rounds():
+        state = sfl_after.init_state(lora)
+        trainer = Trainer(SflRound(sfl_after, counts),
+                          local_steps=local_steps)
+        state, h = trainer.fit(state, data, global_rounds=rounds)
+        jax.block_until_ready(state.lora_client)
+        return len(h.losses)
+
+    before = measure(per_step_loop)
+    after = measure(compiled_rounds)
+    return before, after
+
+
 def main(emit):
+    before, after = engine_speedup()
+    emit("engine/speedup", 0.0,
+         f"steps_per_sec_before={before:.2f};steps_per_sec_after={after:.2f};"
+         f"speedup={after / before:.2f}x")
+
     curves = run()
     target, s2t = steps_to_target(curves)
     for rank, (losses, wall) in curves.items():

@@ -14,6 +14,7 @@ import numpy as np
 from repro.configs import DEFAULT_SYSTEM, get_arch
 from repro.core import (Problem, baseline, bcd_minimize_delay, objective,
                         sample_clients)
+from repro.launch.engine import modeled_total_seconds
 
 SEQ, BATCH, I = 512, 16, 12
 N_BASELINE_SEEDS = 4
@@ -26,9 +27,11 @@ def _prob(sys_cfg, seed=0):
 
 
 def _eval(prob):
+    """proposed: the allocator's pick, priced by the same eq. 17 model the
+    engine logs per round; baselines a-d: the paper's comparison points."""
     row = {}
-    _, hist = bcd_minimize_delay(prob)
-    row["proposed"] = hist[-1]
+    alloc, _ = bcd_minimize_delay(prob)
+    row["proposed"] = modeled_total_seconds(prob, alloc)
     for w in "abcd":
         ts = [objective(prob, baseline(prob, w, np.random.default_rng(s)))
               for s in range(N_BASELINE_SEEDS)]

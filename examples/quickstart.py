@@ -9,6 +9,7 @@ import numpy as np
 from repro.configs import TrainConfig, get_arch
 from repro.core.sfl import SflLLM
 from repro.data import WordTokenizer, e2e_splits, iid_partition, sfl_batches
+from repro.launch.engine import SflRound, Trainer
 from repro import models as M
 from repro.optim import adamw
 
@@ -31,8 +32,10 @@ tc = TrainConfig(num_clients=K, batch_size=BATCH, local_steps=6)
 sfl = SflLLM(cfg, params, ell_c=2, train_cfg=tc, optimizer=adamw(3e-3))
 state = sfl.init_state(lora)
 
-# 4. train: E global rounds x I local steps + FedAvg aggregation ----------
-state, losses = sfl.train(state, data, global_rounds=3,
-                          sample_counts=[len(p) for p in parts],
-                          log_every=6)
-print(f"\nloss: {losses[0]:.3f} -> {losses[-1]:.3f} over {len(losses)} steps")
+# 4. train: E global rounds, each ONE jitted call (scan over I local steps
+#    + in-graph FedAvg), through the unified engine ------------------------
+trainer = Trainer(SflRound(sfl, [len(p) for p in parts]),
+                  local_steps=tc.local_steps, log_every=1)
+state, hist = trainer.fit(state, data, global_rounds=3)
+print(f"\nloss: {hist.losses[0]:.3f} -> {hist.losses[-1]:.3f} over "
+      f"{len(hist.losses)} steps ({hist.steps_per_sec:.2f} steps/s)")

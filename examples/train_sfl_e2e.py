@@ -1,7 +1,8 @@
 """End-to-end driver (deliverable b): the complete SflLLM pipeline —
 resource allocation chooses (split, rank), then split-federated LoRA
-fine-tuning of a GPT-2-family model on the synthetic E2E corpus for a few
-hundred steps with validation tracking and checkpointing.
+fine-tuning of a GPT-2-family model on the synthetic E2E corpus through the
+compiled round engine (one jitted scan + FedAvg per global round), with
+validation tracking, the modeled wireless wall clock, and checkpointing.
 
 Default is a CPU-sized model (~3 min).  ``--full`` trains the real GPT2-S
 (124M, the paper's model) — hours on CPU, minutes on accelerators.
@@ -14,11 +15,12 @@ import time
 import jax
 import numpy as np
 
-from repro.checkpoint import save_pytree
 from repro.configs import DEFAULT_SYSTEM, TrainConfig, get_arch
-from repro.core import Problem, bcd_minimize_delay, sample_clients
+from repro.core import (Problem, bcd_minimize_delay, latency_report,
+                        sample_clients)
 from repro.core.sfl import SflLLM
 from repro.data import WordTokenizer, batches, e2e_splits, iid_partition, sfl_batches
+from repro.launch.engine import SflRound, Trainer
 from repro import models as M
 from repro.optim import adamw
 
@@ -52,7 +54,7 @@ alloc, hist = bcd_minimize_delay(prob)
 print(f"allocator: split l_c={alloc.ell_c}, rank r={alloc.rank}, "
       f"modeled delay {hist[-1]:.0f}s over the wireless network")
 
-# ---- SFL training ----------------------------------------------------------
+# ---- SFL training through the round engine --------------------------------
 key = jax.random.key(0)
 params = M.init_params(cfg, key)
 lora = M.init_lora_stack(cfg, key, rank=alloc.rank)
@@ -63,23 +65,33 @@ sfl = SflLLM(cfg, params, ell_c=alloc.ell_c, train_cfg=tc,
 state = sfl.init_state(lora)
 
 rounds = max(1, args.steps // args.local_steps)
+report = latency_report(
+    cfg, DEFAULT_SYSTEM, envs, alloc.rates_main(DEFAULT_SYSTEM, envs),
+    alloc.rates_fed(DEFAULT_SYSTEM, envs), alloc.ell_c, alloc.rank,
+    args.seq, args.batch, args.local_steps, rounds)
 t0 = time.time()
 val_hist = []
 
 
-def on_step(st, hist_losses):
-    if len(hist_losses) % args.local_steps == 0:
-        vl = float(sfl.eval_loss(st, val_batch))
-        val_hist.append(vl)
-        print(f"  step {len(hist_losses):4d}  train {hist_losses[-1]:.4f}  "
-              f"val {vl:.4f}  ({time.time()-t0:.0f}s)")
+def on_round(e, st, h):
+    vl = float(sfl.eval_loss(st, val_batch))
+    val_hist.append(vl)
+    print(f"  step {len(h.losses):4d}  train {h.losses[-1]:.4f}  "
+          f"val {vl:.4f}  ({time.time()-t0:.0f}s; modeled "
+          f"{h.modeled_seconds:.0f}s)")
 
 
-state, losses = sfl.train(state, data, global_rounds=rounds,
-                          sample_counts=[len(p) for p in parts],
-                          callback=on_step)
-print(f"\ntrained {len(losses)} steps in {time.time()-t0:.0f}s; "
+trainer = Trainer(SflRound(sfl, [len(p) for p in parts]),
+                  local_steps=args.local_steps, round_latency=report,
+                  callback=on_round)
+state, hist = trainer.fit(state, data, global_rounds=rounds)
+print(f"\ntrained {len(hist.losses)} steps in {hist.wall_seconds:.0f}s "
+      f"({hist.steps_per_sec:.2f} steps/s); "
       f"val loss {val_hist[0]:.3f} -> {val_hist[-1]:.3f}")
+
+# schema consumed by examples/serve_lora.py (post-aggregation all clients
+# are identical, so client 0 stands for the broadcast global adapter)
+from repro.checkpoint import save_pytree
 
 save_pytree(args.out, {"lora_server": state.lora_server,
                        "lora_client0": jax.tree.map(lambda v: v[0],

@@ -443,3 +443,15 @@ class HloCostModel:
 
 def analyze_hlo(text: str) -> Cost:
     return HloCostModel(text).total()
+
+
+def xla_cost_analysis(compiled) -> Dict[str, float]:
+    """XLA's own per-device cost dict, version-normalized.
+
+    ``compiled.cost_analysis()`` returns a list of per-partition dicts on
+    older jax and a flat dict on newer jax; callers comparing against this
+    module's trip-count-aware numbers get a plain dict either way."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}

@@ -1,6 +1,6 @@
 """The paper's primary contribution: SflLLM — split federated LoRA
 fine-tuning (Algorithm 1) + joint resource allocation (Algorithms 2-3)."""
-from .aggregation import fedavg
+from .aggregation import broadcast_stacked, fedavg, fedavg_stacked
 from .channel import ClientEnv, sample_clients
 from .convergence import ConvergenceModel, DEFAULT_E, fit_convergence_model
 from .latency import latency_report, local_round_latency, split_workload, total_latency
@@ -13,7 +13,7 @@ from .split import mu_vector, valid_splits
 from .workload import layer_workloads, lm_head_flops
 
 __all__ = [
-    "fedavg", "ClientEnv", "sample_clients", "ConvergenceModel", "DEFAULT_E",
+    "fedavg", "fedavg_stacked", "broadcast_stacked", "ClientEnv", "sample_clients", "ConvergenceModel", "DEFAULT_E",
     "fit_convergence_model", "latency_report", "local_round_latency",
     "split_workload", "total_latency", "adapter_bytes_per_layer",
     "count_params", "merge_adapter", "split_tree", "Allocation", "Problem",

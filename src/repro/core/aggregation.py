@@ -24,6 +24,30 @@ def fedavg(client_trees: Sequence[Any], weights: Sequence[float]) -> Any:
     return jax.tree.map(_avg, *client_trees)
 
 
+def fedavg_stacked(stacked: Any, weights: jax.Array) -> Any:
+    """Eq. 7 over a *stacked* client axis, in-graph.
+
+    Every leaf carries a leading K axis; the weighted average is a single
+    tensordot reduction per leaf instead of K tree unstackings, so it can
+    live inside a jitted round (and the reduction lowers to one psum when
+    the client axis is sharded over a mesh)."""
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.maximum(w.sum(), 1e-12)
+
+    def _avg(v):
+        acc = jnp.tensordot(w, v.astype(jnp.float32), axes=(0, 0))
+        return acc.astype(v.dtype)
+
+    return jax.tree.map(_avg, stacked)
+
+
+def broadcast_stacked(global_tree: Any, num_clients: int) -> Any:
+    """Federated server -> clients, stacked form: global adapter replicated
+    along a new leading K axis (in-graph counterpart of :func:`broadcast`)."""
+    return jax.tree.map(
+        lambda v: jnp.broadcast_to(v, (num_clients,) + v.shape), global_tree)
+
+
 def broadcast(global_tree: Any, num_clients: int) -> list:
     """Federated server -> clients: every client gets the global adapter."""
     return [jax.tree.map(lambda x: x, global_tree) for _ in range(num_clients)]

@@ -12,6 +12,13 @@ Faithful split-federated semantics:
 * every I local steps the federated server aggregates the client adapters
   (eq. 7, ``core.aggregation.fedavg``) and broadcasts the result.
 
+The round engine compiles one whole global round — ``lax.scan`` over the I
+local steps followed by in-graph FedAvg — into a single jitted call
+(``train_round``), so the host dispatches once per round instead of K*I
+times.  State buffers are donated between rounds, and when a mesh with a
+``("clients",)`` axis is supplied the vmapped client FP/BP runs
+data-parallel across devices (see ``sharding.specs.sfl_state_shardings``).
+
 The information flow is exactly the paper's: the server function only ever
 receives split-layer activations + labels (never raw tokens), and clients
 only ever receive activation gradients.  Client compute is batched with
@@ -33,7 +40,7 @@ from ..models.layers import apply_norm, embed, unembed
 from ..models.model import IGNORE_ID
 from ..models.stack import Runtime
 from ..optim import Optimizer, apply_updates
-from .aggregation import fedavg
+from .aggregation import broadcast_stacked, fedavg_stacked
 from .lora import split_tree
 from .split import layers_to_reps
 
@@ -78,7 +85,8 @@ class SflLLM:
                  train_cfg: TrainConfig, optimizer: Optimizer,
                  rt: Runtime = Runtime(attn_impl="naive"),
                  aux_coef: Optional[float] = None,
-                 act_quant: bool = False):
+                 act_quant: bool = False,
+                 mesh=None, donate: bool = True):
         self.cfg = cfg
         self.tc = train_cfg
         self.rt = rt
@@ -87,6 +95,8 @@ class SflLLM:
         self.ell_c = ell_c
         self.aux_coef = cfg.router_aux_coef if aux_coef is None else aux_coef
         self.act_quant = act_quant
+        self.mesh = mesh              # optional ("clients",) mesh (launch.mesh)
+        self.donate = donate
         # frozen weights, physically partitioned
         self.client_base = {
             "embed": params["embed"],
@@ -99,6 +109,8 @@ class SflLLM:
         }
         self._jit_local_step = jax.jit(self._local_step)
         self._jit_eval = jax.jit(self._eval_loss)
+        self._jit_round = jax.jit(self._train_round,
+                                  donate_argnums=(0,) if donate else ())
 
     # ------------------------------------------------------------------
     def init_state(self, lora_template) -> SflState:
@@ -109,13 +121,26 @@ class SflLLM:
         lc, ls = split_tree(lora_template, self.rep_split)
         K = self.tc.num_clients
         lc_k = jax.tree.map(lambda v: jnp.broadcast_to(v, (K,) + v.shape).copy(), lc)
-        return SflState(
+        state = SflState(
             lora_client=lc_k,
             lora_server=ls,
             opt_client=self.opt.init(lc_k),
             opt_server=self.opt.init(ls),
             step=jnp.zeros((), jnp.int32),
         )
+        return self.shard_state(state)
+
+    def shard_state(self, state: SflState) -> SflState:
+        """Place the state on the client-axis mesh (no-op without a mesh).
+
+        The jitted round follows the committed input shardings, so placing
+        the K-stacked client adapter + optimizer leaves as
+        ``P("clients", ...)`` makes the whole vmapped client FP/BP run
+        data-parallel over devices."""
+        if self.mesh is None:
+            return state
+        from ..sharding.specs import sfl_state_shardings
+        return jax.device_put(state, sfl_state_shardings(state, self.mesh))
 
     # ------------------------------------------------------------------
     def _client_forward(self, lora_c, tokens, frontend_emb):
@@ -199,17 +224,43 @@ class SflLLM:
         return new, {"loss": loss, "total": total}
 
     # ------------------------------------------------------------------
-    def aggregate(self, state: SflState, sample_counts) -> SflState:
-        """Federated-server round (eq. 7): FedAvg client adapters, broadcast."""
-        K = self.tc.num_clients
-        clients = [jax.tree.map(lambda v: v[k], state.lora_client)
-                   for k in range(K)]
-        global_c = fedavg(clients, list(sample_counts))
-        lc_k = jax.tree.map(lambda v: jnp.broadcast_to(v, (K,) + v.shape).copy(),
-                            global_c)
+    def _aggregate(self, state: SflState, weights: jax.Array) -> SflState:
+        """Federated-server round (eq. 7), fully in-graph: one weighted
+        tensordot reduction over the stacked client axis + broadcast."""
+        global_c = fedavg_stacked(state.lora_client, weights)
+        lc_k = broadcast_stacked(global_c, self.tc.num_clients)
         return SflState(lora_client=lc_k, lora_server=state.lora_server,
                         opt_client=state.opt_client,
                         opt_server=state.opt_server, step=state.step)
+
+    def aggregate(self, state: SflState, sample_counts) -> SflState:
+        """FedAvg client adapters + broadcast (eq. 7)."""
+        return self._aggregate(state,
+                               jnp.asarray(list(sample_counts), jnp.float32))
+
+    # ------------------------------------------------------------------
+    def _train_round(self, state: SflState, round_batches, weights):
+        """One compiled global round: lax.scan over the I local steps, then
+        in-graph FedAvg — a single XLA program per round instead of K*I
+        host dispatches.
+
+        round_batches: tokens (I, K, b, S), labels (I, K, b, S), optional
+        frontend_emb (I, K, b, F, d); weights: (K,) sample counts."""
+        state, metrics = jax.lax.scan(self._local_step, state, round_batches)
+        return self._aggregate(state, weights), metrics
+
+    def train_round(self, state: SflState, round_batches, sample_counts):
+        """Run one jitted global round.  Returns (state, metrics) with
+        metrics["loss"] of shape (I,).  State buffers are donated when the
+        runtime was built with donate=True — do not reuse the input state."""
+        batches = {k: jnp.asarray(v) for k, v in round_batches.items()
+                   if v is not None}
+        weights = jnp.asarray(list(sample_counts), jnp.float32)
+        if self.mesh is not None:
+            from ..sharding.specs import round_batch_shardings
+            batches = jax.device_put(
+                batches, round_batch_shardings(batches, self.mesh))
+        return self._jit_round(state, batches, weights)
 
     # ------------------------------------------------------------------
     def local_step(self, state, batches):
@@ -217,17 +268,22 @@ class SflLLM:
 
     def train(self, state: SflState, data_iter, *, global_rounds: int,
               sample_counts, log_every: int = 0, callback=None):
-        """E global rounds x I local steps (Algorithm 1)."""
+        """E global rounds x I local steps (Algorithm 1) — one jitted call
+        per global round (scan over local steps + in-graph FedAvg)."""
+        from ..data.pipeline import stack_rounds
+
         history = []
         for e in range(global_rounds):
-            for i in range(self.tc.local_steps):
-                state, metrics = self.local_step(state, next(data_iter))
-                history.append(float(metrics["loss"]))
+            round_batches = stack_rounds(data_iter, self.tc.local_steps)
+            state, metrics = self.train_round(state, round_batches,
+                                              sample_counts)
+            losses = [float(x) for x in jax.device_get(metrics["loss"])]
+            for i, loss in enumerate(losses):
+                history.append(loss)
                 if log_every and len(history) % log_every == 0:
-                    print(f"round {e} step {i} loss {history[-1]:.4f}")
-                if callback is not None:
-                    callback(state, history)
-            state = self.aggregate(state, sample_counts)
+                    print(f"round {e} step {i} loss {loss:.4f}")
+            if callback is not None:
+                callback(state, history)
         return state, history
 
     # ------------------------------------------------------------------
@@ -253,7 +309,8 @@ class CentralizedLoRA:
     """Pooled-data LoRA fine-tuning — the paper's comparison baseline."""
 
     def __init__(self, cfg: ArchConfig, params: dict, train_cfg: TrainConfig,
-                 optimizer: Optimizer, rt: Runtime = Runtime(attn_impl="naive")):
+                 optimizer: Optimizer, rt: Runtime = Runtime(attn_impl="naive"),
+                 donate: bool = True):
         from ..models.model import loss_fn
 
         self.cfg, self.tc, self.rt, self.opt = cfg, train_cfg, rt, optimizer
@@ -266,10 +323,30 @@ class CentralizedLoRA:
             upd, opt_state = optimizer.update(grads, opt_state, lora)
             return apply_updates(lora, upd), opt_state, m
 
+        def round_(carry, round_batches):
+            def body(c, batch):
+                lora, opt_state = c
+                lora, opt_state, m = step(lora, opt_state, batch)
+                return (lora, opt_state), m
+            return jax.lax.scan(body, carry, round_batches)
+
         self._jit_step = jax.jit(step)
+        self._jit_round = jax.jit(round_,
+                                  donate_argnums=(0,) if donate else ())
 
     def init_state(self, lora):
+        # fresh buffers: train_round donates state, which must never delete
+        # the caller's template arrays
+        lora = jax.tree.map(jnp.copy, lora)
         return lora, self.opt.init(lora)
 
     def step(self, lora, opt_state, batch):
         return self._jit_step(lora, opt_state, batch)
+
+    def train_round(self, state, round_batches):
+        """One compiled round: scan over the leading step axis of
+        round_batches (tokens/labels (I, B, S)).  state = (lora, opt_state);
+        input buffers are donated."""
+        batches = {k: jnp.asarray(v) for k, v in round_batches.items()
+                   if v is not None}
+        return self._jit_round(state, batches)

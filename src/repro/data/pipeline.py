@@ -48,6 +48,17 @@ def batches(tok: WordTokenizer, examples: Sequence[Example], batch_size: int,
             return
 
 
+def stack_rounds(data_iter: Iterator[Dict], local_steps: int) -> Dict:
+    """Pull I batches and stack them on a new leading step axis — the xs of
+    the compiled round's ``lax.scan`` (core.sfl.train_round).
+
+    Works for centralized batches (B, S) -> (I, B, S) and stacked SFL
+    batches (K, b, S) -> (I, K, b, S)."""
+    steps = [next(data_iter) for _ in range(local_steps)]
+    keys = steps[0].keys()
+    return {k: np.stack([s[k] for s in steps]) for k in keys}
+
+
 def sfl_batches(tok: WordTokenizer, parts: List[Sequence[Example]],
                 batch_size: int, seq_len: int, rng=0) -> Iterator[Dict]:
     """Per-client stacked batches (K, b, S) for the SflLLM runtime."""

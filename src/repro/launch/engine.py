@@ -1,0 +1,205 @@
+"""Unified round-based training engine.
+
+Every trainer in the repo — the paper's SflLLM (Algorithm 1), the
+centralized LoRA baseline, and the datacenter pod lowering — executes the
+same outer shape: E global rounds, each a single *compiled* call that scans
+the I local steps (plus, for SFL, in-graph FedAvg).  This module owns that
+outer loop once:
+
+* round loop with prefetch: the next round's stacked batches are built on
+  the host while the device executes the current round (jax async
+  dispatch — we only block on the loss floats after staging the next xs);
+* logging / loss history;
+* checkpoint hooks (``checkpoint.save_pytree`` every N rounds);
+* modeled per-round wall clock over the wireless network (core.latency
+  eq. 16-17), accumulated next to the measured wall clock so runs report
+  both "what the hardware did" and "what the paper's network would take".
+
+The three trainers plug in via small adapters exposing
+``run_round(state, round_batches) -> (state, metrics)`` where
+``metrics["loss"]`` has shape (I,).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..data.pipeline import stack_rounds
+
+
+# ---------------------------------------------------------------------------
+# trainer adapters
+# ---------------------------------------------------------------------------
+
+class SflRound:
+    """Adapter: core.sfl.SflLLM — compiled scan + in-graph FedAvg."""
+
+    def __init__(self, sfl, sample_counts):
+        self.sfl = sfl
+        self.sample_counts = list(sample_counts)
+
+    def run_round(self, state, round_batches):
+        return self.sfl.train_round(state, round_batches, self.sample_counts)
+
+    def checkpoint_payload(self, state) -> dict:
+        return {"lora_server": state.lora_server,
+                "lora_client": state.lora_client}
+
+
+class CentralizedRound:
+    """Adapter: core.sfl.CentralizedLoRA — compiled scan over pooled
+    batches (I, B, S).  state = (lora, opt_state)."""
+
+    def __init__(self, cen):
+        self.cen = cen
+
+    def run_round(self, state, round_batches):
+        return self.cen.train_round(state, round_batches)
+
+    def checkpoint_payload(self, state) -> dict:
+        return {"lora": state[0]}
+
+
+class PodRound:
+    """Adapter: the datacenter lowering — one LoRA train step sharded over
+    an N-device ("data", "model") mesh, scanned I times per round.
+
+    state = (lora, opt_state); params stay frozen and are passed once."""
+
+    def __init__(self, cfg, params, rt, optimizer, mesh, *,
+                 donate: bool = True):
+        from ..sharding import (lora_shardings, opt_state_shardings,
+                                params_shardings, stacked_batch_shardings)
+        from .steps import make_train_step
+
+        self.optimizer = optimizer
+        self.mesh = mesh
+        step = make_train_step(cfg, rt, optimizer)
+
+        def round_(params, carry, round_batches):
+            def body(c, batch):
+                lora, opt_state = c
+                lora, opt_state, m = step(params, lora, opt_state, batch)
+                return (lora, opt_state), m
+            return jax.lax.scan(body, carry, round_batches)
+
+        self._round = jax.jit(round_, donate_argnums=(1,) if donate else ())
+        self._params = jax.device_put(params, params_shardings(params, mesh))
+        self._lora_sh = lambda t: lora_shardings(t, mesh)
+        self._opt_sh = lambda t: opt_state_shardings(t, None, mesh)
+        self._batch_sh = lambda t: stacked_batch_shardings(t, mesh)
+
+    def init_state(self, lora):
+        opt_state = self.optimizer.init(lora)
+        return (jax.device_put(lora, self._lora_sh(lora)),
+                jax.device_put(opt_state, self._opt_sh(opt_state)))
+
+    def run_round(self, state, round_batches):
+        batches = {k: jnp.asarray(v) for k, v in round_batches.items()}
+        batches = jax.device_put(batches, self._batch_sh(batches))
+        return self._round(self._params, state, batches)
+
+    def checkpoint_payload(self, state) -> dict:
+        return {"lora": state[0]}
+
+
+# ---------------------------------------------------------------------------
+# modeled wall clock (paper Section V)
+# ---------------------------------------------------------------------------
+
+def modeled_round_seconds(report: Dict[str, Any], local_steps: int) -> float:
+    """Per-global-round modeled delay from a core.latency.latency_report:
+    I local rounds (eq. 16) + the federated LoRA upload (eq. 15)."""
+    return local_steps * report["t_local"] + report["t3"]
+
+
+def modeled_total_seconds(prob, alloc) -> float:
+    """Total modeled training delay of an allocation (eq. 17 with E(r)) —
+    the quantity benchmarks sweep; identical to core.resource.objective."""
+    from ..core.resource import objective
+    return objective(prob, alloc)
+
+
+# ---------------------------------------------------------------------------
+# the driver
+# ---------------------------------------------------------------------------
+
+@dataclass
+class TrainHistory:
+    losses: List[float] = field(default_factory=list)
+    round_losses: List[float] = field(default_factory=list)   # mean per round
+    wall_seconds: float = 0.0
+    modeled_seconds: float = 0.0          # wireless-network wall clock
+    steps_per_sec: float = 0.0
+
+
+class Trainer:
+    """Round-loop driver all trainers plug into.
+
+    algo            adapter with run_round(state, round_batches)
+    local_steps     I — batches stacked per compiled round
+    log_every       print every N rounds (0 = silent)
+    round_latency   optional core.latency.latency_report dict; accumulates
+                    the modeled wireless wall clock per round
+    checkpoint_path/checkpoint_every
+                    save algo.checkpoint_payload(state) every N rounds
+    callback        callback(round_idx, state, history) after each round
+    """
+
+    def __init__(self, algo, *, local_steps: int, log_every: int = 0,
+                 round_latency: Optional[Dict[str, Any]] = None,
+                 checkpoint_path: str = "", checkpoint_every: int = 0,
+                 callback: Optional[Callable] = None):
+        self.algo = algo
+        self.local_steps = local_steps
+        self.log_every = log_every
+        self.round_latency = round_latency
+        self.checkpoint_path = checkpoint_path
+        self.checkpoint_every = checkpoint_every
+        self.callback = callback
+
+    # ------------------------------------------------------------------
+    def fit(self, state, data_iter: Iterator[Dict], *, global_rounds: int):
+        history = TrainHistory()
+        per_round = (modeled_round_seconds(self.round_latency,
+                                           self.local_steps)
+                     if self.round_latency else 0.0)
+        t0 = time.time()
+        staged = stack_rounds(data_iter, self.local_steps)
+        for e in range(global_rounds):
+            state, metrics = self.algo.run_round(state, staged)
+            if e + 1 < global_rounds:       # prefetch while the device runs
+                staged = stack_rounds(data_iter, self.local_steps)
+            losses = np.asarray(jax.device_get(metrics["loss"]),
+                                np.float64).reshape(-1)
+            history.losses.extend(float(x) for x in losses)
+            history.round_losses.append(float(losses.mean()))
+            history.modeled_seconds += per_round
+            if self.log_every and (e + 1) % self.log_every == 0:
+                msg = (f"round {e + 1}/{global_rounds}  "
+                       f"loss {losses[-1]:.4f}")
+                if per_round:
+                    msg += f"  modeled {history.modeled_seconds:.1f}s"
+                print(msg)
+            if (self.checkpoint_path and self.checkpoint_every
+                    and (e + 1) % self.checkpoint_every == 0):
+                self._save(state)
+            if self.callback is not None:
+                self.callback(e, state, history)
+        history.wall_seconds = time.time() - t0
+        steps = len(history.losses)
+        if history.wall_seconds > 0:
+            history.steps_per_sec = steps / history.wall_seconds
+        if self.checkpoint_path and not self.checkpoint_every:
+            self._save(state)
+        return state, history
+
+    def _save(self, state) -> None:
+        from ..checkpoint import save_pytree
+        save_pytree(self.checkpoint_path,
+                    self.algo.checkpoint_payload(state))

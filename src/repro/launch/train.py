@@ -1,13 +1,15 @@
-"""SflLLM training driver.
+"""SflLLM training driver — argument parsing over launch.engine.Trainer.
 
 Two modes:
   * ``--mode sfl`` (default): the paper's Algorithm 1 — K clients + main
-    server + federated server, simulated faithfully (core.sfl), with the
-    resource allocator picking split/rank and reporting the modeled wall
-    clock of every round over the wireless network.
+    server + federated server (core.sfl), one jitted call per global round
+    (scan over the I local steps + in-graph FedAvg), with the resource
+    allocator picking split/rank and the engine reporting the modeled
+    wireless wall clock of every round.  With multiple devices the client
+    axis is sharded over a ("clients",) mesh.
   * ``--mode pod``: the datacenter lowering — one jit-compiled LoRA train
-    step sharded over an N-device mesh (what the dry-run proves at 256/512
-    chips runs here on however many host devices exist).
+    step sharded over an N-device ("data", "model") mesh, scanned I times
+    per round.
 
 Example (CPU, ~1 min):
   PYTHONPATH=src python -m repro.launch.train --arch gpt2-s --reduced \
@@ -16,14 +18,12 @@ Example (CPU, ~1 min):
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 
-def main() -> None:
+def build_argparser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gpt2-s")
     ap.add_argument("--reduced", action="store_true",
@@ -38,15 +38,23 @@ def main() -> None:
     ap.add_argument("--split", type=int, default=0, help="0 = allocator picks")
     ap.add_argument("--local-steps", type=int, default=6)
     ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--log-every", type=int, default=1, help="rounds")
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    return ap
+
+
+def main() -> None:
+    args = build_argparser().parse_args()
 
     from ..configs import DEFAULT_SYSTEM, TrainConfig, get_arch
-    from ..core import Problem, bcd_minimize_delay, sample_clients
+    from ..core import (Problem, bcd_minimize_delay, latency_report,
+                        sample_clients)
     from ..core.sfl import SflLLM
     from ..data import WordTokenizer, e2e_splits, iid_partition, sfl_batches
     from ..models import Runtime, init_lora_stack, init_params
     from ..optim import adamw
+    from .engine import PodRound, SflRound, Trainer
+    from .mesh import make_client_mesh, make_mesh_compat
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -67,6 +75,7 @@ def main() -> None:
     lora = init_lora_stack(cfg, jax.random.key(args.seed + 1), args.rank)
     tc = TrainConfig(num_clients=args.clients, batch_size=args.batch,
                      local_steps=args.local_steps, learning_rate=args.lr)
+    rounds = max(1, args.steps // args.local_steps)
 
     # resource allocation (paper Algorithm 3) picks split + validates rank --
     envs = tuple(sample_clients(DEFAULT_SYSTEM, args.seed))
@@ -80,52 +89,48 @@ def main() -> None:
           f"modeled total delay {hist[-1]:.1f}s (using split={ell_c})")
 
     if args.mode == "sfl":
+        # client-axis data parallelism when the device count divides K
+        n_dev = len(jax.devices())
+        mesh = (make_client_mesh() if n_dev > 1
+                and args.clients % n_dev == 0 else None)
+        if mesh is not None:
+            print(f"sharding the client axis over {n_dev} devices")
         sfl = SflLLM(cfg, params, ell_c=ell_c, train_cfg=tc,
                      optimizer=adamw(args.lr),
-                     rt=Runtime(attn_impl="naive"))
+                     rt=Runtime(attn_impl="naive"), mesh=mesh)
         state = sfl.init_state(lora)
-        t0 = time.time()
-        rounds = max(1, args.steps // args.local_steps)
-        state, losses = sfl.train(state, data, global_rounds=rounds,
-                                  sample_counts=[len(p) for p in parts],
-                                  log_every=args.local_steps)
-        print(f"{len(losses)} steps in {time.time()-t0:.1f}s; "
-              f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
-        if args.checkpoint:
-            from ..checkpoint import save_pytree
-            save_pytree(args.checkpoint,
-                        {"lora_server": state.lora_server,
-                         "lora_client": state.lora_client})
-            print("saved", args.checkpoint)
+        report = latency_report(
+            cfg, DEFAULT_SYSTEM, envs, alloc.rates_main(DEFAULT_SYSTEM, envs),
+            alloc.rates_fed(DEFAULT_SYSTEM, envs), ell_c, alloc.rank,
+            args.seq, args.batch, args.local_steps, rounds)
+        algo = SflRound(sfl, [len(p) for p in parts])
     else:
-        from ..sharding import (batch_shardings, lora_shardings,
-                                opt_state_shardings, params_shardings)
-        from .steps import make_train_step
-
         n = len(jax.devices())
-        model_n = 1
-        data_n = n // model_n
-        mesh = jax.make_mesh((data_n, model_n), ("data", "model"))
-        opt = adamw(args.lr)
-        step = make_train_step(cfg, Runtime(attn_impl="naive"), opt)
-        opt_state = opt.init(lora)
-        jstep = jax.jit(step, in_shardings=(
-            params_shardings(params, mesh), lora_shardings(lora, mesh),
-            opt_state_shardings(opt_state, None, mesh),
-            batch_shardings({"tokens": jnp.zeros((1, 1), jnp.int32),
-                             "labels": jnp.zeros((1, 1), jnp.int32)}, mesh)))
-        t0 = time.time()
-        losses = []
-        for i in range(args.steps):
-            kb = next(data)
-            batch = {"tokens": jnp.asarray(kb["tokens"].reshape(-1, args.seq)),
-                     "labels": jnp.asarray(kb["labels"].reshape(-1, args.seq))}
-            lora, opt_state, m = jstep(params, lora, opt_state, batch)
-            losses.append(float(m["loss"]))
-            if i % 5 == 0:
-                print(f"step {i} loss {losses[-1]:.4f}")
-        print(f"{args.steps} steps in {time.time()-t0:.1f}s; "
-              f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+        mesh = make_mesh_compat((n, 1), ("data", "model"))
+        algo = PodRound(cfg, params, Runtime(attn_impl="naive"),
+                        adamw(args.lr), mesh)
+        state = algo.init_state(lora)
+        report = None
+
+        pooled = data
+        def _pool(it=pooled):
+            for kb in it:
+                yield {"tokens": kb["tokens"].reshape(-1, args.seq),
+                       "labels": kb["labels"].reshape(-1, args.seq)}
+        data = _pool()
+
+    trainer = Trainer(algo, local_steps=args.local_steps,
+                      log_every=args.log_every, round_latency=report,
+                      checkpoint_path=args.checkpoint)
+    state, hist = trainer.fit(state, data, global_rounds=rounds)
+    msg = (f"{len(hist.losses)} steps in {hist.wall_seconds:.1f}s "
+           f"({hist.steps_per_sec:.2f} steps/s); "
+           f"loss {hist.losses[0]:.3f} -> {hist.losses[-1]:.3f}")
+    if hist.modeled_seconds:
+        msg += f"; modeled wireless wall clock {hist.modeled_seconds:.1f}s"
+    print(msg)
+    if args.checkpoint:
+        print("saved", args.checkpoint)
 
 
 if __name__ == "__main__":

@@ -1,8 +1,14 @@
-from .specs import (batch_axes, batch_shardings, cache_shardings,
-                    lora_shardings, opt_state_shardings, param_spec,
-                    params_shardings)
+from .specs import (CLIENT_AXIS, batch_axes, batch_shardings,
+                    cache_shardings, client_batch_shardings,
+                    client_stacked_shardings, lora_shardings,
+                    opt_state_shardings, param_spec, params_shardings,
+                    replicated_shardings, round_batch_shardings,
+                    sfl_state_shardings, stacked_batch_shardings)
 
 __all__ = [
-    "batch_axes", "batch_shardings", "cache_shardings", "lora_shardings",
+    "CLIENT_AXIS", "batch_axes", "batch_shardings", "cache_shardings",
+    "client_batch_shardings", "client_stacked_shardings", "lora_shardings",
     "opt_state_shardings", "param_spec", "params_shardings",
+    "replicated_shardings", "round_batch_shardings", "sfl_state_shardings",
+    "stacked_batch_shardings",
 ]

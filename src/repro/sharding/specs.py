@@ -185,3 +185,81 @@ def batch_shardings(tree: Any, mesh: Mesh):
         return NamedSharding(mesh, P(first, *([None] * (leaf.ndim - 1))))
 
     return jax.tree.map(f, tree)
+
+
+# ---------------------------------------------------------------------------
+# client-axis sharding (the SFL scale lever: K parallel clients over devices)
+# ---------------------------------------------------------------------------
+
+CLIENT_AXIS = "clients"
+
+
+def _client_spec(shape: Tuple[int, ...], mesh: Mesh, stacked_dim: int,
+                 axis: str = CLIENT_AXIS) -> P:
+    """Shard dimension ``stacked_dim`` (the K-client axis) over ``axis``
+    when divisible; everything else replicated."""
+    n = mesh.shape.get(axis, 1)
+    if (len(shape) > stacked_dim and n > 1
+            and shape[stacked_dim] % n == 0):
+        spec = [None] * len(shape)
+        spec[stacked_dim] = axis
+        return P(*spec)
+    return P(*([None] * len(shape)))
+
+
+def client_stacked_shardings(tree: Any, mesh: Mesh, axis: str = CLIENT_AXIS):
+    """Leaves with a leading K axis (stacked client adapters / optimizer
+    moments): shard dim 0 over the client mesh axis; scalars replicated."""
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, _client_spec(l.shape, mesh, 0, axis)),
+        tree)
+
+
+def replicated_shardings(tree: Any, mesh: Mesh):
+    return jax.tree.map(lambda l: NamedSharding(mesh, P()), tree)
+
+
+def sfl_state_shardings(state: Any, mesh: Mesh, axis: str = CLIENT_AXIS):
+    """SflState partitioning for the compiled round engine: the K-stacked
+    client adapter + its optimizer moments are data-parallel over the
+    ``("clients",)`` axis; the shared server adapter and step counter are
+    replicated (they cross the split, not the client axis)."""
+    from ..core.sfl import SflState
+
+    return SflState(
+        lora_client=client_stacked_shardings(state.lora_client, mesh, axis),
+        lora_server=replicated_shardings(state.lora_server, mesh),
+        opt_client=client_stacked_shardings(state.opt_client, mesh, axis),
+        opt_server=replicated_shardings(state.opt_server, mesh),
+        step=NamedSharding(mesh, P()),
+    )
+
+
+def client_batch_shardings(tree: Any, mesh: Mesh, axis: str = CLIENT_AXIS):
+    """Per-step SFL batches (K, b, S): shard the leading client dim."""
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, _client_spec(l.shape, mesh, 0, axis)),
+        tree)
+
+
+def round_batch_shardings(tree: Any, mesh: Mesh, axis: str = CLIENT_AXIS):
+    """Stacked round batches (I, K, b, S): the scan axis I stays on-host
+    order (unsharded), the client axis (dim 1) goes data-parallel."""
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, _client_spec(l.shape, mesh, 1, axis)),
+        tree)
+
+
+def stacked_batch_shardings(tree: Any, mesh: Mesh):
+    """Pod-mode stacked round batches (I, B, S): scan axis unsharded, the
+    batch dim (dim 1) over the data axes."""
+    dp = batch_axes(mesh)
+    n = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+
+    def f(leaf):
+        if leaf.ndim >= 2 and n > 1 and leaf.shape[1] % n == 0:
+            return NamedSharding(
+                mesh, P(None, dp, *([None] * (leaf.ndim - 2))))
+        return NamedSharding(mesh, P(*([None] * leaf.ndim)))
+
+    return jax.tree.map(f, tree)

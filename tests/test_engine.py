@@ -1,0 +1,216 @@
+"""The compiled round engine: one jitted scan + in-graph FedAvg per global
+round must reproduce the seed per-step execution model exactly, and the
+unified launch.engine.Trainer must drive every trainer."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import TrainConfig, get_arch
+from repro.core.aggregation import broadcast_stacked, fedavg, fedavg_stacked
+from repro.core.sfl import CentralizedLoRA, SflLLM
+from repro.data.pipeline import stack_rounds
+from repro.launch.engine import CentralizedRound, SflRound, Trainer
+from repro.optim import adamw, sgd
+from repro import models as M
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _setup(key, K=3, b=2, S=16, I=4, layers=4):
+    cfg = get_arch("gpt2-s").reduced(num_layers=layers)
+    params = M.init_params(cfg, key)
+    lora = M.init_lora_stack(cfg, jax.random.key(7))
+    rng = np.random.default_rng(0)
+    tokens = rng.integers(0, cfg.vocab_size, (I, K, b, S)).astype(np.int32)
+    return cfg, params, lora, {"tokens": tokens, "labels": tokens.copy()}
+
+
+def test_fedavg_stacked_matches_fedavg_nonuniform():
+    """Vectorized eq. 7 == the per-client fedavg, non-uniform D_k."""
+    key = jax.random.key(3)
+    K = 4
+    leaves = {"a": jax.random.normal(key, (K, 5, 3)),
+              "b": jax.random.normal(jax.random.key(4), (K, 7))}
+    counts = [11.0, 2.0, 30.0, 7.0]
+    got = fedavg_stacked(leaves, jnp.asarray(counts))
+    clients = [jax.tree.map(lambda v: v[k], leaves) for k in range(K)]
+    want = fedavg(clients, counts)
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=1e-6)
+
+
+def test_broadcast_stacked():
+    t = {"a": jnp.arange(6.0).reshape(2, 3)}
+    out = broadcast_stacked(t, 5)
+    assert out["a"].shape == (5, 2, 3)
+    np.testing.assert_allclose(np.asarray(out["a"][4]), np.asarray(t["a"]))
+
+
+def test_train_round_matches_per_step_loop(key):
+    """The tentpole regression: one compiled round (scan + in-graph FedAvg)
+    == the seed's I local_step dispatches + aggregate, within 1e-4."""
+    K, I = 3, 4
+    counts = [3.0, 1.0, 2.0]
+    cfg, params, lora, rb = _setup(key, K=K, I=I)
+    tc = TrainConfig(num_clients=K, batch_size=2, local_steps=I)
+
+    loop = SflLLM(cfg, params, ell_c=2, train_cfg=tc, optimizer=adamw(3e-3),
+                  donate=False)
+    st = loop.init_state(lora)
+    loop_losses = []
+    for i in range(I):
+        st, m = loop.local_step(st, {k: jnp.asarray(v[i])
+                                     for k, v in rb.items()})
+        loop_losses.append(float(m["loss"]))
+    st_loop = loop.aggregate(st, counts)
+
+    comp = SflLLM(cfg, params, ell_c=2, train_cfg=tc, optimizer=adamw(3e-3))
+    st_comp, metrics = comp.train_round(comp.init_state(lora), rb, counts)
+
+    np.testing.assert_allclose(np.asarray(metrics["loss"]),
+                               np.asarray(loop_losses), atol=1e-4)
+    for a, b in zip(jax.tree.leaves(st_loop.lora_client),
+                    jax.tree.leaves(st_comp.lora_client)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    for a, b in zip(jax.tree.leaves(st_loop.lora_server),
+                    jax.tree.leaves(st_comp.lora_server)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_aggregate_is_vectorized_but_equivalent(key):
+    """sfl.aggregate (now one tensordot) still implements eq. 7."""
+    K = 3
+    cfg, params, lora, rb = _setup(key, K=K, I=1)
+    tc = TrainConfig(num_clients=K, batch_size=2, local_steps=1)
+    sfl = SflLLM(cfg, params, ell_c=2, train_cfg=tc, optimizer=sgd(0.1),
+                 donate=False)
+    st, _ = sfl.local_step(sfl.init_state(lora),
+                           {k: jnp.asarray(v[0]) for k, v in rb.items()})
+    counts = [5.0, 1.0, 4.0]
+    agg = sfl.aggregate(st, counts)
+    clients = [jax.tree.map(lambda v: v[k], st.lora_client)
+               for k in range(K)]
+    want = fedavg(clients, counts)
+    got0 = jax.tree.map(lambda v: v[0], agg.lora_client)
+    for g, w in zip(jax.tree.leaves(got0), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=1e-6)
+    # broadcast: every client identical
+    for leaf in jax.tree.leaves(agg.lora_client):
+        np.testing.assert_allclose(np.asarray(leaf[0]), np.asarray(leaf[-1]))
+
+
+def test_stack_rounds_shapes():
+    it = iter([{"tokens": np.zeros((3, 2, 8), np.int32)} for _ in range(5)])
+    out = stack_rounds(it, 4)
+    assert out["tokens"].shape == (4, 3, 2, 8)
+    assert next(it)["tokens"].shape == (3, 2, 8)     # exactly 4 consumed
+
+
+def test_trainer_drives_sfl(key):
+    K, I = 3, 3
+    cfg, params, lora, rb = _setup(key, K=K, I=I)
+    tc = TrainConfig(num_clients=K, batch_size=2, local_steps=I)
+    sfl = SflLLM(cfg, params, ell_c=2, train_cfg=tc, optimizer=adamw(3e-3))
+    data = iter(lambda: {k: v[0] for k, v in rb.items()}, None)
+    seen = []
+    trainer = Trainer(SflRound(sfl, [1.0] * K), local_steps=I,
+                      round_latency={"t_local": 2.0, "t3": 0.5},
+                      callback=lambda e, st, h: seen.append(e))
+    state, hist = trainer.fit(sfl.init_state(lora), data, global_rounds=2)
+    assert len(hist.losses) == 2 * I
+    assert seen == [0, 1]
+    assert hist.modeled_seconds == pytest.approx(2 * (I * 2.0 + 0.5))
+    assert hist.steps_per_sec > 0
+    assert np.isfinite(hist.losses).all()
+
+
+def test_trainer_drives_centralized_and_learns(key):
+    cfg = get_arch("gpt2-s").reduced(num_layers=4)
+    params = M.init_params(cfg, key)
+    lora = M.init_lora_stack(cfg, jax.random.key(7))
+    B, S, I = 4, 16, 4
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": np.asarray(tokens), "labels": np.asarray(tokens)}
+    data = iter(lambda: batch, None)                 # memorize one batch
+    cen = CentralizedLoRA(cfg, params, TrainConfig(batch_size=B),
+                          adamw(3e-3))
+    trainer = Trainer(CentralizedRound(cen), local_steps=I)
+    state, hist = trainer.fit(cen.init_state(lora), data, global_rounds=4)
+    assert len(hist.losses) == 4 * I
+    assert hist.losses[-1] < hist.losses[0] - 0.1
+
+
+def test_trainer_checkpoints(key, tmp_path):
+    K, I = 3, 2
+    cfg, params, lora, rb = _setup(key, K=K, I=I)
+    tc = TrainConfig(num_clients=K, batch_size=2, local_steps=I)
+    sfl = SflLLM(cfg, params, ell_c=2, train_cfg=tc, optimizer=adamw(3e-3))
+    data = iter(lambda: {k: v[0] for k, v in rb.items()}, None)
+    path = str(tmp_path / "ck.msgpack")
+    trainer = Trainer(SflRound(sfl, [1.0] * K), local_steps=I,
+                      checkpoint_path=path)
+    state, _ = trainer.fit(sfl.init_state(lora), data, global_rounds=1)
+    assert os.path.exists(path)
+    from repro.checkpoint import restore_pytree
+    tpl = {"lora_server": state.lora_server, "lora_client": state.lora_client}
+    got = restore_pytree(path, tpl)
+    for a, b in zip(jax.tree.leaves(got["lora_server"]),
+                    jax.tree.leaves(state.lora_server)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+SHARD_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import TrainConfig, get_arch
+    from repro.core.sfl import SflLLM
+    from repro.launch.mesh import make_client_mesh
+    from repro.optim import adamw
+    from repro import models as M
+
+    K, b, S, I = 4, 2, 16, 2
+    cfg = get_arch("gpt2-s").reduced(num_layers=4)
+    key = jax.random.key(0)
+    params = M.init_params(cfg, key)
+    lora = M.init_lora_stack(cfg, jax.random.key(7))
+    tc = TrainConfig(num_clients=K, batch_size=b, local_steps=I)
+    rng = np.random.default_rng(0)
+    tokens = rng.integers(0, cfg.vocab_size, (I, K, b, S)).astype(np.int32)
+    rb = {"tokens": tokens, "labels": tokens}
+    counts = [1.0, 2.0, 3.0, 4.0]
+
+    ref = SflLLM(cfg, params, ell_c=2, train_cfg=tc, optimizer=adamw(3e-3))
+    st_ref, m_ref = ref.train_round(ref.init_state(lora), rb, counts)
+
+    mesh = make_client_mesh()
+    assert mesh.shape["clients"] == 4
+    sh = SflLLM(cfg, params, ell_c=2, train_cfg=tc, optimizer=adamw(3e-3),
+                mesh=mesh)
+    st = sh.init_state(lora)
+    spec = jax.tree.leaves(st.lora_client)[0].sharding.spec
+    assert spec[0] == "clients", spec
+    st_sh, m_sh = sh.train_round(st, rb, counts)
+    err = float(jnp.abs(m_sh["loss"] - m_ref["loss"]).max())
+    d = max(float(jnp.abs(a - b).max()) for a, b in
+            zip(jax.tree.leaves(st_ref.lora_client),
+                jax.tree.leaves(st_sh.lora_client)))
+    print("LOSSERR", err, "ADAPTERR", d)
+    assert err < 1e-4 and d < 1e-4, (err, d)
+""")
+
+
+def test_client_axis_sharding_matches_single_device():
+    """Needs multiple host devices -> subprocess (device count locks at
+    first jax init), same pattern as test_moe_shard_map."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", SHARD_SCRIPT],
+                         capture_output=True, text=True, env=env, timeout=420)
+    assert out.returncode == 0, (out.stdout[-1000:], out.stderr[-2000:])
+    assert "LOSSERR" in out.stdout
