@@ -13,6 +13,7 @@ Usage: PYTHONPATH=src python -m benchmarks.run [--only table4,fig5 ...]
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -39,10 +40,13 @@ def main() -> None:
         list(SUITES)
 
     print("name,us_per_call,derived")
+    rows = []
 
     def emit(name, us, derived):
         print(f"{name},{us:.1f},{derived}")
         sys.stdout.flush()
+        rows.append({"name": name, "us_per_call": round(float(us), 1),
+                     "derived": str(derived)})
 
     for name in picked:
         t0 = time.time()
@@ -53,6 +57,17 @@ def main() -> None:
             traceback.print_exc()
             emit(f"{name}/_suite_wall", (time.time() - t0) * 1e6,
                  f"FAILED:{e!r}")
+
+    # perf-trajectory snapshot: the kernel + engine rows land in a JSON
+    # file CI archives per commit, so fused-vs-unfused wall time and
+    # steps/sec regressions are diffable from this PR onward
+    kern = [r for r in rows
+            if r["name"].startswith(("kernel/", "engine/"))]
+    if kern:
+        with open("BENCH_kernels.json", "w") as f:
+            json.dump({"unix_time": int(time.time()), "rows": kern}, f,
+                      indent=2)
+        print(f"wrote BENCH_kernels.json ({len(kern)} rows)", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -38,7 +38,7 @@ from ..configs.base import ArchConfig, TrainConfig
 from ..models import stack as stack_mod
 from ..models.layers import apply_norm, embed, unembed
 from ..models.model import IGNORE_ID
-from ..models.stack import Runtime
+from ..models.stack import Runtime, default_train_runtime
 from ..optim import Optimizer, apply_updates
 from .aggregation import broadcast_stacked, fedavg_stacked
 from .lora import split_tree
@@ -83,13 +83,15 @@ class SflLLM:
 
     def __init__(self, cfg: ArchConfig, params: dict, ell_c: int,
                  train_cfg: TrainConfig, optimizer: Optimizer,
-                 rt: Runtime = Runtime(attn_impl="naive"),
+                 rt: Optional[Runtime] = None,
                  aux_coef: Optional[float] = None,
                  act_quant: bool = False,
                  mesh=None, donate: bool = True):
         self.cfg = cfg
         self.tc = train_cfg
-        self.rt = rt
+        # default: the fast-path runtime (chunked attention + fused LoRA
+        # projections); pass an explicit Runtime to override
+        self.rt = default_train_runtime() if rt is None else rt
         self.opt = optimizer
         self.rep_split = layers_to_reps(cfg, ell_c)
         self.ell_c = ell_c
@@ -309,10 +311,11 @@ class CentralizedLoRA:
     """Pooled-data LoRA fine-tuning — the paper's comparison baseline."""
 
     def __init__(self, cfg: ArchConfig, params: dict, train_cfg: TrainConfig,
-                 optimizer: Optimizer, rt: Runtime = Runtime(attn_impl="naive"),
+                 optimizer: Optimizer, rt: Optional[Runtime] = None,
                  donate: bool = True):
         from ..models.model import loss_fn
 
+        rt = default_train_runtime() if rt is None else rt
         self.cfg, self.tc, self.rt, self.opt = cfg, train_cfg, rt, optimizer
         self.params = params
 

@@ -1,0 +1,14 @@
+"""Shared backend auto-detection for the Pallas kernel wrappers."""
+from __future__ import annotations
+
+import jax
+
+
+def auto_interpret() -> bool:
+    """Pallas interpret mode off exactly when a TPU backend is attached.
+
+    Every kernel wrapper (`lora_matmul`, `flash_attention`, `ssd_scan`)
+    resolves ``interpret=None`` through this one predicate so a new native
+    backend only needs to be added here.
+    """
+    return jax.default_backend() != "tpu"

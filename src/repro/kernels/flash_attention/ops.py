@@ -6,6 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ..backend import auto_interpret
 from .kernel import flash_attention_kernel
 from .ref import flash_attention_ref
 
@@ -13,9 +14,14 @@ from .ref import flash_attention_ref
 @functools.partial(jax.jit, static_argnames=("window", "bq", "bk",
                                              "interpret", "use_kernel"))
 def flash_attention(q, k, v, *, window: int = 0, bq: int = 256, bk: int = 256,
-                    interpret: bool = True, use_kernel: bool = True):
+                    interpret: "bool | None" = None, use_kernel: bool = True):
     """Causal GQA attention.  q: (B, Sq, H, D); k/v: (B, Sk, KH, D) —
-    the model layout of ``repro.models.attention``."""
+    the model layout of ``repro.models.attention``.
+
+    ``interpret=None`` auto-detects: the native kernel on TPU, the Pallas
+    interpreter elsewhere — callers never need to know the flag."""
+    if interpret is None:
+        interpret = auto_interpret()
     B, Sq, H, D = q.shape
     Sk, KH = k.shape[1], k.shape[2]
     qt = q.transpose(0, 2, 1, 3)

@@ -1,5 +1,9 @@
-from .kernel import lora_matmul_kernel
-from .ops import lora_matmul
+from .kernel import (lora_matmul_dx_kernel, lora_matmul_kernel,
+                     lora_rank_reduce_kernel)
+from .ops import auto_interpret, lora_matmul
 from .ref import lora_matmul_ref
+from .tune import best_blocks
 
-__all__ = ["lora_matmul", "lora_matmul_kernel", "lora_matmul_ref"]
+__all__ = ["auto_interpret", "best_blocks", "lora_matmul",
+           "lora_matmul_dx_kernel", "lora_matmul_kernel",
+           "lora_matmul_ref", "lora_rank_reduce_kernel"]

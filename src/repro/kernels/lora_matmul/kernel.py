@@ -1,14 +1,25 @@
-"""Fused LoRA matmul Pallas kernel: y = x W + scale * (x A^T) B^T.
+"""Fused LoRA matmul Pallas kernels: forward, dX, and rank reductions.
 
-The low-rank path rides in the same (bm, bn) output tile as the base
-matmul — the extra arithmetic per rank is exactly the paper's
-DeltaPhi(mu, r) term, and fusing it avoids a second HBM pass over x.
+Forward: y = x W + scale * (x A^T) B^T.  The low-rank path rides in the
+same (bm, bn) output tile as the base matmul — the extra arithmetic per
+rank is exactly the paper's DeltaPhi(mu, r) term, and fusing it avoids a
+second HBM pass over x.
 
 Grid (M/bm, N/bn, K/bk), K innermost; VMEM scratch carries the f32 output
 accumulator and the (bm, r) low-rank activation accumulator across K steps;
 on the last K step the low-rank product is folded in and the tile is
 written once.  MXU alignment: bm/bn/bk multiples of 128 (r is padded to the
 lane width by Mosaic; r itself stays tiny — the paper's ranks are 1..8).
+
+Backward (ops.py wires these into a custom VJP):
+
+* ``lora_matmul_dx_kernel`` — dX = dY W^T + scale * (dY B) A, the mirror
+  image of the forward: one tiled pass over W read in its native (K, N)
+  layout (the contraction over N uses dot_general, no HBM transpose) with
+  the rank-r correction accumulated in the same VMEM scratch scheme.
+* ``lora_rank_reduce_kernel`` — out = u^T v for a rank-thin u, the shape
+  of both adapter grads (dA = scale * (dY B)^T X, dB^T = scale *
+  (X A^T)^T dY): the (r, bn) accumulator lives in VMEM across the M sweep.
 """
 from __future__ import annotations
 
@@ -69,3 +80,114 @@ def lora_matmul_kernel(x, w, a, b, *, scale: float, bm: int = 256,
                         pltpu.VMEM((bm, r), jnp.float32)],
         interpret=interpret,
     )(x, w, a, b)
+
+
+# ---------------------------------------------------------------------------
+# backward: dX
+# ---------------------------------------------------------------------------
+
+def _dx_kernel(dy_ref, w_ref, a_ref, b_ref, dx_ref, acc_ref, z_ref, *,
+               scale: float, n_steps: int):
+    n = pl.program_id(2)
+
+    @pl.when(n == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    dyb = dy_ref[...]
+    # dY_tile (bm, bn) contracted with W_tile (bk, bn) over the shared N
+    # blocks — W stays in its forward (K, N) layout, no HBM transpose.
+    acc_ref[...] += jax.lax.dot_general(
+        dyb, w_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    # low-rank grad activation: z += dY_tile @ B_tile   (bm, r)
+    z_ref[...] += jnp.dot(dyb, b_ref[...],
+                          preferred_element_type=jnp.float32)
+
+    @pl.when(n == n_steps - 1)
+    def _finish():
+        dx = acc_ref[...] + scale * jnp.dot(
+            z_ref[...], a_ref[...], preferred_element_type=jnp.float32)
+        dx_ref[...] = dx.astype(dx_ref.dtype)
+
+
+def lora_matmul_dx_kernel(dy, w, a, b, *, scale: float, bm: int = 256,
+                          bn: int = 256, bk: int = 512,
+                          interpret: bool = False):
+    """dX = dY @ W^T + scale * (dY @ B) @ A.
+
+    dy: (M, N); w: (K, N)-layout base weight (i.e. forward layout); a:
+    (r, K); b: (N, r) — dims must divide by the block shape (ops.py pads).
+    """
+    M, N = dy.shape
+    K = w.shape[0]
+    r = a.shape[0]
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    grid = (M // bm, K // bk, N // bn)
+
+    return pl.pallas_call(
+        functools.partial(_dx_kernel, scale=scale, n_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, n: (i, n)),     # dy
+            pl.BlockSpec((bk, bn), lambda i, j, n: (j, n)),     # w
+            pl.BlockSpec((r, bk), lambda i, j, n: (0, j)),      # a
+            pl.BlockSpec((bn, r), lambda i, j, n: (n, 0)),      # b
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j, n: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, K), dy.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bk), jnp.float32),
+                        pltpu.VMEM((bm, r), jnp.float32)],
+        interpret=interpret,
+    )(dy, w, a, b)
+
+
+# ---------------------------------------------------------------------------
+# backward: dA / dB rank reductions
+# ---------------------------------------------------------------------------
+
+def _rank_reduce_kernel(u_ref, v_ref, o_ref, acc_ref, *, m_steps: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # operands stream from HBM in their native dtype; the upcast happens
+    # per-tile in VMEM so the adapter grad is f32-exact at no HBM cost
+    acc_ref[...] += jax.lax.dot_general(
+        u_ref[...].astype(jnp.float32), v_ref[...].astype(jnp.float32),
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == m_steps - 1)
+    def _finish():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def lora_rank_reduce_kernel(u, v, *, bm: int = 256, bn: int = 256,
+                            interpret: bool = False):
+    """out = u^T @ v — the adapter-grad reduction.
+
+    u: (M, r) rank-thin; v: (M, N).  Returns (r, N) f32: the (r, bn)
+    accumulator stays in VMEM scratch across the whole M sweep, so the
+    rank-sized grad is written to HBM exactly once per N tile.
+    """
+    M, r = u.shape
+    N = v.shape[1]
+    bm, bn = min(bm, M), min(bn, N)
+    grid = (N // bn, M // bm)
+
+    return pl.pallas_call(
+        functools.partial(_rank_reduce_kernel, m_steps=grid[1]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, r), lambda i, j: (j, 0)),         # u
+            pl.BlockSpec((bm, bn), lambda i, j: (j, i)),        # v
+        ],
+        out_specs=pl.BlockSpec((r, bn), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((r, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((r, bn), jnp.float32)],
+        interpret=interpret,
+    )(u, v)

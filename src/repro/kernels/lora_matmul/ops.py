@@ -1,39 +1,152 @@
-"""jit'd wrapper: padding to block multiples + leading-dim flattening."""
+"""Differentiable fused LoRA matmul: dispatch, padding, and custom VJP.
+
+``lora_matmul`` is the public entry the model's dense dispatch
+(``models.layers.dense(..., impl="fused")``) routes every LoRA-adapted
+projection through:
+
+* forward  — one fused Pallas pass (kernel.py) computing
+  y = x W + scale * (x A^T) B^T per output tile;
+* backward — dX rides one fused tiled pass over W in its native (K, N)
+  layout plus the rank-r correction (dY B) A; dA/dB are rank-sized
+  reductions accumulated in VMEM scratch (``lora_rank_reduce_kernel``).
+  dW stays plain jnp so XLA dead-code-eliminates it when the base weight
+  is frozen — the SFL trainers differentiate adapters only;
+* dispatch — ``interpret`` and ``use_kernel`` default to backend
+  auto-detection (native kernels on TPU, the jnp oracle through the same
+  custom VJP elsewhere — interpret-mode Pallas is debug-speed only), and
+  block sizes default to the memoized autotuner in tune.py.
+"""
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from .kernel import lora_matmul_kernel
+from ..backend import auto_interpret
+from .kernel import (lora_matmul_dx_kernel, lora_matmul_kernel,
+                     lora_rank_reduce_kernel)
 from .ref import lora_matmul_ref
+from .tune import best_blocks
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "bm", "bn", "bk",
-                                             "interpret", "use_kernel"))
-def lora_matmul(x, w, a, b, *, scale: float = 1.0, bm: int = 256,
-                bn: int = 256, bk: int = 512, interpret: bool = True,
-                use_kernel: bool = True):
+class _FusedCfg(NamedTuple):
+    """Static (hashable) kernel config — the custom VJP's nondiff arg."""
+    scale: float
+    bm: int
+    bn: int
+    bk: int
+    interpret: bool
+    use_kernel: bool
+
+
+def _pad2(x, pr: int, pc: int):
+    return jnp.pad(x, ((0, pr), (0, pc))) if (pr or pc) else x
+
+
+def _blocks_pads(cfg: _FusedCfg, M: int, K: int, N: int):
+    bm, bn, bk = min(cfg.bm, M), min(cfg.bn, N), min(cfg.bk, K)
+    return bm, bn, bk, (-M) % bm, (-N) % bn, (-K) % bk
+
+
+def _fwd_value(cfg: _FusedCfg, x2, w, a, b):
+    if not cfg.use_kernel:
+        return lora_matmul_ref(x2, w, a, b, cfg.scale)
+    M, K = x2.shape
+    N = w.shape[1]
+    w, a, b = (t.astype(x2.dtype) for t in (w, a, b))
+    bm, bn, bk, pm, pn, pk = _blocks_pads(cfg, M, K, N)
+    y = lora_matmul_kernel(_pad2(x2, pm, pk), _pad2(w, pk, pn),
+                           _pad2(a, 0, pk), _pad2(b, pn, 0),
+                           scale=cfg.scale, bm=bm, bn=bn, bk=bk,
+                           interpret=cfg.interpret)
+    return y[:M, :N]
+
+
+def _bwd_value(cfg: _FusedCfg, x2, w, a, b, dy):
+    scale = cfg.scale
+    xf = x2.astype(jnp.float32)
+    dyf = dy.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    # dW in plain jnp: XLA DCEs the whole product when the caller never
+    # differentiates the frozen base weight (LoRA-only training).
+    dw = (xf.T @ dyf).astype(w.dtype)
+    z = xf @ af.T                                 # (M, r) fwd recompute
+    z2 = dyf @ b.astype(jnp.float32)              # (M, r)
+    if not cfg.use_kernel:
+        dx = dyf @ w.astype(jnp.float32).T + scale * (z2 @ af)
+        da = scale * (z2.T @ xf)
+        db = scale * (dyf.T @ z)
+        return (dx.astype(x2.dtype), dw, da.astype(a.dtype),
+                db.astype(b.dtype))
+    M, K = x2.shape
+    N = w.shape[1]
+    bm, bn, bk, pm, pn, pk = _blocks_pads(cfg, M, K, N)
+    dyp = _pad2(dy, pm, pn)
+    dx = lora_matmul_dx_kernel(
+        dyp, _pad2(w.astype(dy.dtype), pk, pn), _pad2(a.astype(dy.dtype), 0, pk),
+        _pad2(b.astype(dy.dtype), pn, 0), scale=scale, bm=bm, bn=bn, bk=bk,
+        interpret=cfg.interpret)[:M, :K]
+    # the big operands (x, dY) stream into the rank reductions in their
+    # native dtype — an f32 HBM copy of either would cost the very bytes
+    # the fusion saves; the kernel upcasts per-tile in VMEM instead, and
+    # the rank-thin z/z2 ride in as f32 (they are (M, r), negligible)
+    da = scale * lora_rank_reduce_kernel(
+        _pad2(z2, pm, 0), _pad2(x2, pm, pk), bm=bm, bn=bk,
+        interpret=cfg.interpret)[:, :K]
+    dbT = lora_rank_reduce_kernel(
+        _pad2(z, pm, 0), dyp, bm=bm, bn=bn,
+        interpret=cfg.interpret)[:, :N]
+    return (dx.astype(x2.dtype), dw, da.astype(a.dtype),
+            (scale * dbT.T).astype(b.dtype))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _fused_lora_matmul(cfg: _FusedCfg, x2, w, a, b):
+    return _fwd_value(cfg, x2, w, a, b)
+
+
+def _fused_fwd(cfg: _FusedCfg, x2, w, a, b):
+    return _fwd_value(cfg, x2, w, a, b), (x2, w, a, b)
+
+
+def _fused_bwd(cfg: _FusedCfg, res, dy):
+    return _bwd_value(cfg, *res, dy)
+
+
+_fused_lora_matmul.defvjp(_fused_fwd, _fused_bwd)
+
+
+def lora_matmul(x, w, a, b, *, scale: float = 1.0,
+                bm: Optional[int] = None, bn: Optional[int] = None,
+                bk: Optional[int] = None, interpret: Optional[bool] = None,
+                use_kernel: Optional[bool] = None):
     """y = x @ w + scale * (x @ a^T) @ b^T with arbitrary leading dims on x.
 
-    On this container the kernel runs in interpret mode (CPU); on TPU set
-    interpret=False.  use_kernel=False routes to the jnp oracle.
+    Differentiable end to end (custom VJP with fused backward kernels;
+    forward and backward validated against the jnp oracle in
+    tests/test_kernels.py).  Every knob defaults to auto-detection:
+    ``interpret`` from the backend, ``use_kernel`` to native-TPU only, and
+    block sizes from the memoized autotuner (tune.best_blocks).
     """
     lead = x.shape[:-1]
     K = x.shape[-1]
     N = w.shape[1]
     x2 = x.reshape(-1, K)
-    if not use_kernel:
-        return lora_matmul_ref(x2, w, a, b, scale).reshape(*lead, N)
-
     M = x2.shape[0]
-    bm_, bn_, bk_ = min(bm, M), min(bn, N), min(bk, K)
-    pm, pn, pk = (-M) % bm_, (-N) % bn_, (-K) % bk_
-    xp = jnp.pad(x2, ((0, pm), (0, pk)))
-    wp = jnp.pad(w, ((0, pk), (0, pn)))
-    ap = jnp.pad(a, ((0, 0), (0, pk)))
-    bp = jnp.pad(b, ((0, pn), (0, 0)))
-    y = lora_matmul_kernel(xp, wp, ap, bp, scale=scale, bm=bm_, bn=bn_,
-                           bk=bk_, interpret=interpret)
-    return y[:M, :N].reshape(*lead, N)
+    explicit_interpret = interpret is not None
+    if interpret is None:
+        interpret = auto_interpret()
+    if use_kernel is None:
+        # an explicit interpret flag means the caller is asking for the
+        # kernel (in interpret mode or natively); otherwise off-TPU rides
+        # the jnp path of the same custom VJP — identical fused math, no
+        # interpreter overhead in the hot loop
+        use_kernel = explicit_interpret or not interpret
+    if use_kernel and (bm is None or bn is None or bk is None):
+        tm, tn, tk = best_blocks(M, K, N, a.shape[0], x.dtype)
+        bm, bn, bk = bm or tm, bn or tn, bk or tk
+    cfg = _FusedCfg(float(scale), int(bm or 256), int(bn or 256),
+                    int(bk or 512), bool(interpret), bool(use_kernel))
+    return _fused_lora_matmul(cfg, x2, w, a, b).reshape(*lead, N)

@@ -1,0 +1,108 @@
+"""Block-size autotuner for the fused LoRA kernels, memoized per process.
+
+``best_blocks`` sweeps (bm, bn, bk) candidates for one (M, K, N, r, dtype)
+problem shape and caches the winner, so every (projection shape x dtype)
+pair in a model pays the sweep at most once per process.  On a TPU backend
+the candidates are timed against the real kernel; elsewhere (CPU dry runs,
+interpret mode) timing a Python-interpreted kernel is meaningless, so a
+padding-waste heuristic picks the tiles.  Either way the point is the
+same: the kernel is never launched with pathological tiles — a bk that
+blows the VMEM budget, or 256-wide blocks wrapped around a 33-row ragged
+matmul that would waste 7/8 of every MXU pass on padding.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Blocks = Tuple[int, int, int]
+
+_CACHE: Dict[Tuple[int, int, int, int, str, str], Blocks] = {}
+
+_CANDIDATES: Tuple[Blocks, ...] = (
+    (128, 128, 128), (128, 128, 256), (128, 256, 256), (256, 128, 256),
+    (256, 256, 256), (256, 256, 512), (512, 256, 256), (128, 256, 512),
+)
+_VMEM_BUDGET = 12 * 1024 * 1024        # leave headroom under ~16 MB/core
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+
+
+def _vmem_bytes(bm: int, bn: int, bk: int, r: int, itemsize: int) -> int:
+    """Per-step VMEM footprint: double-buffered input tiles + f32 scratch."""
+    tiles = itemsize * (bm * bk + bk * bn + r * bk + bn * r)
+    scratch = 4 * (bm * bn + bm * r)
+    out = itemsize * bm * bn
+    return 2 * tiles + scratch + out
+
+
+def _pad_up(d: int, b: int) -> int:
+    return -(-d // b) * b
+
+
+def _heuristic_key(M: int, K: int, N: int, c: Blocks):
+    """Rank by padded-FLOP waste, then fewer K steps (fewer scratch
+    round trips), then larger output tiles (MXU utilization)."""
+    bm, bn, bk = c
+    padded = _pad_up(M, bm) * _pad_up(K, bk) * _pad_up(N, bn)
+    return (padded, _pad_up(K, bk) // bk, -(bm * bn))
+
+
+def _time_candidates(M: int, K: int, N: int, r: int, dtype,
+                     cands: List[Blocks]) -> Blocks:
+    """Time the real kernel per candidate (TPU path); min-of-3 wall time."""
+    from .kernel import lora_matmul_kernel
+
+    best, best_t = cands[0], float("inf")
+    for bm, bn, bk in cands:
+        Mp, Kp, Np = _pad_up(M, bm), _pad_up(K, bk), _pad_up(N, bn)
+        x = jnp.zeros((Mp, Kp), dtype)
+        w = jnp.zeros((Kp, Np), dtype)
+        a = jnp.zeros((r, Kp), dtype)
+        b = jnp.zeros((Np, r), dtype)
+        try:
+            fn = jax.jit(lambda x, w, a, b, bm=bm, bn=bn, bk=bk:
+                         lora_matmul_kernel(x, w, a, b, scale=1.0, bm=bm,
+                                            bn=bn, bk=bk, interpret=False))
+            fn(x, w, a, b).block_until_ready()          # compile
+            t = float("inf")
+            for _ in range(3):
+                t0 = time.perf_counter()
+                fn(x, w, a, b).block_until_ready()
+                t = min(t, time.perf_counter() - t0)
+        except Exception:                               # noqa: BLE001
+            continue            # tile shape the backend rejects — skip it
+        if t < best_t:
+            best, best_t = (bm, bn, bk), t
+    return best
+
+
+def best_blocks(M: int, K: int, N: int, r: int, dtype=jnp.float32,
+                backend: str | None = None) -> Blocks:
+    """Memoized (bm, bn, bk) for one fused-LoRA problem shape."""
+    backend = backend or jax.default_backend()
+    key = (int(M), int(K), int(N), int(r), jnp.dtype(dtype).name, backend)
+    hit = _CACHE.get(key)
+    if hit is not None:
+        return hit
+    itemsize = jnp.dtype(dtype).itemsize
+    cands: List[Blocks] = []
+    for bm, bn, bk in _CANDIDATES:
+        c = (min(bm, M), min(bn, N), min(bk, K))
+        if _vmem_bytes(*c, r=max(int(r), 1), itemsize=itemsize) > _VMEM_BUDGET:
+            continue
+        if c not in cands:
+            cands.append(c)
+    if not cands:
+        cands = [(min(128, M), min(128, N), min(128, K))]
+    if backend == "tpu":
+        best = _time_candidates(M, K, N, r, dtype, cands)
+    else:
+        best = min(cands, key=lambda c: _heuristic_key(M, K, N, c))
+    _CACHE[key] = best
+    return best

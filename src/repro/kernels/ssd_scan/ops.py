@@ -6,17 +6,23 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ..backend import auto_interpret
 from .kernel import ssd_scan_kernel
 from .ref import ssd_sequential_ref
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret",
                                              "use_kernel"))
-def ssd_scan(xh, Bm, Cm, dt, A, *, chunk: int = 256, interpret: bool = True,
-             use_kernel: bool = True):
+def ssd_scan(xh, Bm, Cm, dt, A, *, chunk: int = 256,
+             interpret: "bool | None" = None, use_kernel: bool = True):
     """SSD forward, model layout: xh (B, S, nh, hd); Bm/Cm (B, S, N);
     dt (B, S, nh) post-softplus; A (nh,) negative.  Returns y (B,S,nh,hd)
-    WITHOUT the D-residual (caller adds D*x, matching models.ssm)."""
+    WITHOUT the D-residual (caller adds D*x, matching models.ssm).
+
+    ``interpret=None`` auto-detects: the native kernel on TPU, the Pallas
+    interpreter elsewhere."""
+    if interpret is None:
+        interpret = auto_interpret()
     if not use_kernel:
         y, _ = ssd_sequential_ref(xh, Bm, Cm, dt, A)
         return y.astype(xh.dtype)

@@ -73,10 +73,12 @@ class PodRound:
 
     def __init__(self, cfg, params, rt, optimizer, mesh, *,
                  donate: bool = True):
+        from ..models.stack import default_train_runtime
         from ..sharding import (lora_shardings, opt_state_shardings,
                                 params_shardings, stacked_batch_shardings)
         from .steps import make_train_step
 
+        rt = default_train_runtime() if rt is None else rt
         self.optimizer = optimizer
         self.mesh = mesh
         step = make_train_step(cfg, rt, optimizer)

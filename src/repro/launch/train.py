@@ -51,7 +51,7 @@ def main() -> None:
                         sample_clients)
     from ..core.sfl import SflLLM
     from ..data import WordTokenizer, e2e_splits, iid_partition, sfl_batches
-    from ..models import Runtime, init_lora_stack, init_params
+    from ..models import init_lora_stack, init_params
     from ..optim import adamw
     from .engine import PodRound, SflRound, Trainer
     from .mesh import make_client_mesh, make_mesh_compat
@@ -96,8 +96,7 @@ def main() -> None:
         if mesh is not None:
             print(f"sharding the client axis over {n_dev} devices")
         sfl = SflLLM(cfg, params, ell_c=ell_c, train_cfg=tc,
-                     optimizer=adamw(args.lr),
-                     rt=Runtime(attn_impl="naive"), mesh=mesh)
+                     optimizer=adamw(args.lr), mesh=mesh)
         state = sfl.init_state(lora)
         report = latency_report(
             cfg, DEFAULT_SYSTEM, envs, alloc.rates_main(DEFAULT_SYSTEM, envs),
@@ -107,7 +106,7 @@ def main() -> None:
     else:
         n = len(jax.devices())
         mesh = make_mesh_compat((n, 1), ("data", "model"))
-        algo = PodRound(cfg, params, Runtime(attn_impl="naive"),
+        algo = PodRound(cfg, params, None,      # None -> fast train defaults
                         adamw(args.lr), mesh)
         state = algo.init_state(lora)
         report = None

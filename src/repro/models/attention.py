@@ -36,7 +36,7 @@ def init_attention(cfg, key, dtype) -> dict:
     }
 
 
-def _proj_qkv(cfg, p, x, lora, lora_scale):
+def _proj_qkv(cfg, p, x, lora, lora_scale, dense_impl="einsum"):
     """Project and reshape to (B, S, H|KH, D), rope NOT yet applied."""
     B, S, _ = x.shape
     h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -44,9 +44,12 @@ def _proj_qkv(cfg, p, x, lora, lora_scale):
     def _l(name):
         return None if lora is None or name not in lora else lora[name]
 
-    q = dense(x, p["wq"]["w"], p["wq"].get("b"), _l("q"), lora_scale)
-    k = dense(x, p["wk"]["w"], p["wk"].get("b"), _l("k"), lora_scale)
-    v = dense(x, p["wv"]["w"], p["wv"].get("b"), _l("v"), lora_scale)
+    q = dense(x, p["wq"]["w"], p["wq"].get("b"), _l("q"), lora_scale,
+              impl=dense_impl)
+    k = dense(x, p["wk"]["w"], p["wk"].get("b"), _l("k"), lora_scale,
+              impl=dense_impl)
+    v = dense(x, p["wv"]["w"], p["wv"].get("b"), _l("v"), lora_scale,
+              impl=dense_impl)
     return (q.reshape(B, S, h, hd), k.reshape(B, S, kh, hd), v.reshape(B, S, kh, hd))
 
 
@@ -263,6 +266,13 @@ def run_attention(q, k, v, q_pos, k_pos, *, impl: str = "chunked",
                   s_low_precision: bool = False) -> jax.Array:
     if impl == "naive":
         return naive_attention(q, k, v, q_pos, k_pos, window)
+    if k.shape[1] <= kv_chunk and q_chunk == 0 and not s_low_precision:
+        # degenerate chunking: the whole KV fits in one chunk, so the
+        # online-softmax scan buys nothing and its backward's per-chunk
+        # probability recompute is pure extra arithmetic — the direct form
+        # is exact attention over the same mask and lets XLA keep p for
+        # the backward (score matrix is <= one chunk wide by construction)
+        return naive_attention(q, k, v, q_pos, k_pos, window)
     return online_attention(q, k, v, q_pos, k_pos, window=window,
                             kv_chunk=kv_chunk, q_chunk=q_chunk,
                             causal_prefix=causal_prefix,
@@ -276,7 +286,7 @@ def run_attention(q, k, v, q_pos, k_pos, *, impl: str = "chunked",
 def self_attention(cfg, p, x, positions, *, lora=None, lora_scale=1.0,
                    impl="chunked", kv_chunk=512, q_chunk=0,
                    return_cache=False, cache_len: int = 0,
-                   s_low_precision: bool = False):
+                   s_low_precision: bool = False, dense_impl: str = "einsum"):
     """Causal self-attention over a full sequence (train / prefill).
 
     positions: (S,) absolute positions.  If ``return_cache``, also returns a
@@ -284,7 +294,7 @@ def self_attention(cfg, p, x, positions, *, lora=None, lora_scale=1.0,
     cfg.attn_window is set and smaller).
     """
     B, S, _ = x.shape
-    q, k, v = _proj_qkv(cfg, p, x, lora, lora_scale)
+    q, k, v = _proj_qkv(cfg, p, x, lora, lora_scale, dense_impl)
     if cfg.pos_emb == "rope":
         q = apply_rope(q, jnp.broadcast_to(positions, (B, S)), cfg.rope_theta)
         k = apply_rope(k, jnp.broadcast_to(positions, (B, S)), cfg.rope_theta)
@@ -293,7 +303,8 @@ def self_attention(cfg, p, x, positions, *, lora=None, lora_scale=1.0,
                       q_chunk=q_chunk, causal_prefix=True,
                       s_low_precision=s_low_precision)
     y = dense(o.reshape(B, S, -1), p["wo"]["w"], p["wo"].get("b"),
-              None if lora is None or "o" not in lora else lora["o"], lora_scale)
+              None if lora is None or "o" not in lora else lora["o"], lora_scale,
+              impl=dense_impl)
     if not return_cache:
         return y
     L = cache_len or S
@@ -327,7 +338,8 @@ def init_attn_cache(cfg, batch: int, cache_len: int, dtype) -> dict:
 
 
 def decode_attention(cfg, p, x, cache, cur_index, *, lora=None,
-                     lora_scale=1.0, kv_chunk=2048, impl="naive"):
+                     lora_scale=1.0, kv_chunk=2048, impl="naive",
+                     dense_impl: str = "einsum"):
     """One-token decode: x (B, 1, d); cur_index scalar int32 (absolute).
 
     Writes the new KV at slot ``cur_index % L`` (ring buffer when windowed)
@@ -335,7 +347,7 @@ def decode_attention(cfg, p, x, cache, cur_index, *, lora=None,
     """
     B = x.shape[0]
     L = cache["k"].shape[1]
-    q, k, v = _proj_qkv(cfg, p, x, lora, lora_scale)
+    q, k, v = _proj_qkv(cfg, p, x, lora, lora_scale, dense_impl)
     pos = jnp.full((B, 1), cur_index, jnp.int32)
     if cfg.pos_emb == "rope":
         q = apply_rope(q, pos, cfg.rope_theta)
@@ -353,5 +365,6 @@ def decode_attention(cfg, p, x, cache, cur_index, *, lora=None,
     o = run_attention(q, kc, vc, q_pos, pc, impl=impl,
                       window=cfg.attn_window, kv_chunk=min(kv_chunk, L))
     y = dense(o.reshape(B, 1, -1), p["wo"]["w"], p["wo"].get("b"),
-              None if lora is None or "o" not in lora else lora["o"], lora_scale)
+              None if lora is None or "o" not in lora else lora["o"], lora_scale,
+              impl=dense_impl)
     return y, {"k": kc, "v": vc, "pos": pc}

@@ -16,21 +16,49 @@ import jax.numpy as jnp
 # linear (+ LoRA)
 # ---------------------------------------------------------------------------
 
+def _cast_like(x: jax.Array, t: jax.Array) -> jax.Array:
+    """Cast ``t`` to x's dtype only when it differs — the guard keeps the
+    intent visible in the code and guarantees no convert op is traced for
+    already-matching params (callers hoist real mismatches out of the
+    depth scan, see ``stack.apply_stack``)."""
+    return t if t.dtype == x.dtype else t.astype(x.dtype)
+
+
+# Backends where ``impl="fused"`` actually routes through the Pallas
+# kernels.  Elsewhere (CPU dry runs) the dispatch falls back to the einsum
+# composition: the custom-VJP boundary costs ~10% in lost XLA fusion with
+# nothing to buy back when no real kernel runs behind it.  Tests extend
+# this tuple to force the fused custom-VJP path on CPU.
+FUSED_DENSE_BACKENDS = ("tpu",)
+
+
+def _fused_dense_active() -> bool:
+    return jax.default_backend() in FUSED_DENSE_BACKENDS
+
+
 def dense(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
-          lora: Optional[dict] = None, lora_scale: float = 1.0) -> jax.Array:
+          lora: Optional[dict] = None, lora_scale: float = 1.0,
+          impl: str = "einsum") -> jax.Array:
     """y = x @ w (+ b) (+ lora_scale * (x @ a^T) @ b_lora^T).
 
-    ``lora`` is ``{"a": (r, in), "b": (out, r)}`` or None.  The low-rank
-    path accumulates in f32 and is cast back to the activation dtype.
+    ``lora`` is ``{"a": (r, in), "b": (out, r)}`` or None.  ``impl``
+    selects the adapted-projection path: "einsum" runs the base matmul and
+    the low-rank pair as separate einsums; "fused" routes through
+    ``kernels.lora_matmul`` — one pass over x per projection (custom VJP,
+    autotuned tiles) on the backends in ``FUSED_DENSE_BACKENDS``, the
+    einsum path elsewhere.
     """
-    y = jnp.einsum("...i,io->...o", x, w.astype(x.dtype))
-    if lora is not None:
-        a, bm = lora["a"], lora["b"]
-        z = jnp.einsum("...i,ri->...r", x, a.astype(x.dtype))
-        delta = jnp.einsum("...r,or->...o", z, bm.astype(x.dtype))
-        y = y + (lora_scale * delta).astype(y.dtype)
+    if impl == "fused" and lora is not None and _fused_dense_active():
+        from ..kernels.lora_matmul import lora_matmul
+        y = lora_matmul(x, w, lora["a"], lora["b"], scale=float(lora_scale))
+    else:
+        y = jnp.einsum("...i,io->...o", x, _cast_like(x, w))
+        if lora is not None:
+            z = jnp.einsum("...i,ri->...r", x, _cast_like(x, lora["a"]))
+            delta = jnp.einsum("...r,or->...o", z, _cast_like(x, lora["b"]))
+            y = y + (lora_scale * delta).astype(y.dtype)
     if b is not None:
-        y = y + b.astype(y.dtype)
+        y = y + _cast_like(y, b)
     return y
 
 
@@ -115,32 +143,36 @@ def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def swiglu_mlp(cfg, x: jax.Array, p: dict, lora: Optional[dict] = None,
-               lora_scale: float = 1.0) -> jax.Array:
+               lora_scale: float = 1.0, dense_impl: str = "einsum") -> jax.Array:
     def _l(name):
         return None if lora is None or name not in lora else lora[name]
 
-    g = dense(x, p["w_gate"]["w"], lora=_l("gate"), lora_scale=lora_scale)
-    u = dense(x, p["w_up"]["w"], lora=_l("up"), lora_scale=lora_scale)
+    g = dense(x, p["w_gate"]["w"], lora=_l("gate"), lora_scale=lora_scale,
+              impl=dense_impl)
+    u = dense(x, p["w_up"]["w"], lora=_l("up"), lora_scale=lora_scale,
+              impl=dense_impl)
     h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
-    return dense(h, p["w_down"]["w"], lora=_l("down"), lora_scale=lora_scale)
+    return dense(h, p["w_down"]["w"], lora=_l("down"), lora_scale=lora_scale,
+                 impl=dense_impl)
 
 
 def gelu_mlp(cfg, x: jax.Array, p: dict, lora: Optional[dict] = None,
-             lora_scale: float = 1.0) -> jax.Array:
+             lora_scale: float = 1.0, dense_impl: str = "einsum") -> jax.Array:
     def _l(name):
         return None if lora is None or name not in lora else lora[name]
 
-    h = dense(x, p["w_up"]["w"], p["w_up"].get("b"), lora=_l("up"), lora_scale=lora_scale)
+    h = dense(x, p["w_up"]["w"], p["w_up"].get("b"), lora=_l("up"),
+              lora_scale=lora_scale, impl=dense_impl)
     h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(x.dtype)
     return dense(h, p["w_down"]["w"], p["w_down"].get("b"), lora=_l("down"),
-                 lora_scale=lora_scale)
+                 lora_scale=lora_scale, impl=dense_impl)
 
 
 def apply_mlp(cfg, x: jax.Array, p: dict, lora: Optional[dict] = None,
-              lora_scale: float = 1.0) -> jax.Array:
+              lora_scale: float = 1.0, dense_impl: str = "einsum") -> jax.Array:
     if cfg.mlp_kind == "swiglu":
-        return swiglu_mlp(cfg, x, p, lora, lora_scale)
-    return gelu_mlp(cfg, x, p, lora, lora_scale)
+        return swiglu_mlp(cfg, x, p, lora, lora_scale, dense_impl)
+    return gelu_mlp(cfg, x, p, lora, lora_scale, dense_impl)
 
 
 def init_mlp(cfg, key, dtype) -> dict:
@@ -187,4 +219,4 @@ def embed(cfg, p: dict, tokens: jax.Array, positions: jax.Array) -> jax.Array:
 
 def unembed(cfg, p: dict, x: jax.Array) -> jax.Array:
     w = p["tok"].T if cfg.tie_embeddings else p["unembed"]
-    return jnp.einsum("...d,dv->...v", x, w.astype(x.dtype))
+    return jnp.einsum("...d,dv->...v", x, _cast_like(x, w))

@@ -145,7 +145,7 @@ def ssd_chunked(xh, Bm, Cm, dt, A, *, chunk: int,
 
 
 def mamba_block(cfg, p: dict, x: jax.Array, *, lora=None, lora_scale=1.0,
-                return_state: bool = False):
+                return_state: bool = False, dense_impl: str = "einsum"):
     """Full Mamba2 block (train / prefill).  x: (B, S, d_model)."""
     B, S, _ = x.shape
     d_in, nh, N, conv_dim = _dims(cfg)
@@ -153,7 +153,8 @@ def mamba_block(cfg, p: dict, x: jax.Array, *, lora=None, lora_scale=1.0,
     def _l(name):
         return None if lora is None or name not in lora else lora[name]
 
-    zxbcdt = dense(x, p["in_proj"]["w"], lora=_l("ssm_in"), lora_scale=lora_scale)
+    zxbcdt = dense(x, p["in_proj"]["w"], lora=_l("ssm_in"),
+                   lora_scale=lora_scale, impl=dense_impl)
     z, xbc, dt = _split_proj(cfg, zxbcdt)
     xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
     xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
@@ -168,13 +169,15 @@ def mamba_block(cfg, p: dict, x: jax.Array, *, lora=None, lora_scale=1.0,
     y = y.reshape(B, S, d_in).astype(x.dtype)
     y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
     y = rmsnorm(y, p["norm"]["scale"], cfg.norm_eps)
-    out = dense(y, p["out_proj"]["w"], lora=_l("ssm_out"), lora_scale=lora_scale)
+    out = dense(y, p["out_proj"]["w"], lora=_l("ssm_out"),
+                lora_scale=lora_scale, impl=dense_impl)
     if not return_state:
         return out
     # conv buffer holds the last W-1 *pre-activation* conv inputs
     W = cfg.ssm_conv_width
     zxbcdt_tail = dense(x[:, max(0, S - (W - 1)):],
-                        p["in_proj"]["w"], lora=_l("ssm_in"), lora_scale=lora_scale)
+                        p["in_proj"]["w"], lora=_l("ssm_in"),
+                        lora_scale=lora_scale, impl=dense_impl)
     _, xbc_tail, _ = _split_proj(cfg, zxbcdt_tail)
     pad = (W - 1) - xbc_tail.shape[1]
     if pad > 0:
@@ -192,7 +195,7 @@ def init_mamba_cache(cfg, batch: int, dtype) -> dict:
 
 
 def mamba_step(cfg, p: dict, x: jax.Array, cache: dict, *, lora=None,
-               lora_scale=1.0):
+               lora_scale=1.0, dense_impl: str = "einsum"):
     """One-token decode.  x: (B, 1, d_model).  O(1) state update."""
     B = x.shape[0]
     d_in, nh, N, conv_dim = _dims(cfg)
@@ -201,7 +204,7 @@ def mamba_step(cfg, p: dict, x: jax.Array, cache: dict, *, lora=None,
         return None if lora is None or name not in lora else lora[name]
 
     zxbcdt = dense(x[:, 0], p["in_proj"]["w"], lora=_l("ssm_in"),
-                   lora_scale=lora_scale)
+                   lora_scale=lora_scale, impl=dense_impl)
     z, xbc, dt = _split_proj(cfg, zxbcdt)
     xbc_conv, conv_buf = _conv_step(xbc, cache["conv"], p["conv_w"], p["conv_b"])
     xbc_conv = jax.nn.silu(xbc_conv.astype(jnp.float32)).astype(x.dtype)
@@ -217,5 +220,6 @@ def mamba_step(cfg, p: dict, x: jax.Array, cache: dict, *, lora=None,
     y = y.reshape(B, d_in).astype(x.dtype)
     y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
     y = rmsnorm(y, p["norm"]["scale"], cfg.norm_eps)
-    out = dense(y, p["out_proj"]["w"], lora=_l("ssm_out"), lora_scale=lora_scale)
+    out = dense(y, p["out_proj"]["w"], lora=_l("ssm_out"),
+                lora_scale=lora_scale, impl=dense_impl)
     return out[:, None, :], {"ssm": h, "conv": conv_buf}

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from . import attention as attn_mod
 from . import moe as moe_mod
 from . import ssm as ssm_mod
-from .layers import apply_mlp, apply_norm, init_mlp, init_norm
+from .layers import _cast_like, apply_mlp, apply_norm, init_mlp, init_norm
 
 
 @dataclass(frozen=True)
@@ -25,6 +25,7 @@ class Runtime:
     """Runtime/perf knobs (hillclimb levers), orthogonal to ArchConfig."""
 
     attn_impl: str = "chunked"          # "naive" | "chunked"
+    dense_impl: str = "einsum"          # "einsum" | "fused" (kernels.lora_matmul)
     kv_chunk: int = 512
     q_chunk: int = 0                    # 0 = no query blocking
     decode_kv_chunk: int = 2048
@@ -45,6 +46,15 @@ class Runtime:
     def replace(self, **kw) -> "Runtime":
         import dataclasses
         return dataclasses.replace(self, **kw)
+
+
+def default_train_runtime() -> Runtime:
+    """The trainers' fast-path defaults: chunked online-softmax attention
+    (never materializes the S x S score matrix), every LoRA-adapted
+    projection through the fused ``kernels.lora_matmul`` dispatch, and the
+    cheap "dots" policy if rematerialization is switched on."""
+    return Runtime(attn_impl="chunked", dense_impl="fused",
+                   remat_policy="dots")
 
 
 # ---------------------------------------------------------------------------
@@ -82,31 +92,36 @@ def apply_block(cfg, pat, p: dict, x, *, positions, lora, lora_scale, rt: Runtim
             m, cache_out = attn_mod.decode_attention(
                 cfg, p["mixer"], h, cache, cur_index,
                 lora=_mixer_lora(lora), lora_scale=lora_scale,
-                kv_chunk=rt.decode_kv_chunk, impl=rt.decode_attn_impl)
+                kv_chunk=rt.decode_kv_chunk, impl=rt.decode_attn_impl,
+                dense_impl=rt.dense_impl)
         elif mode == "prefill":
             m, cache_out = attn_mod.self_attention(
                 cfg, p["mixer"], h, positions, lora=_mixer_lora(lora),
                 lora_scale=lora_scale, impl=rt.attn_impl, kv_chunk=rt.kv_chunk,
                 q_chunk=rt.q_chunk, return_cache=True,
                 cache_len=cache["k"].shape[1] if cache is not None else cache_len,
-                s_low_precision=rt.attn_s_bf16)
+                s_low_precision=rt.attn_s_bf16, dense_impl=rt.dense_impl)
         else:
             m = attn_mod.self_attention(
                 cfg, p["mixer"], h, positions, lora=_mixer_lora(lora),
                 lora_scale=lora_scale, impl=rt.attn_impl, kv_chunk=rt.kv_chunk,
-                q_chunk=rt.q_chunk, s_low_precision=rt.attn_s_bf16)
+                q_chunk=rt.q_chunk, s_low_precision=rt.attn_s_bf16,
+                dense_impl=rt.dense_impl)
     else:  # mamba
         if mode == "decode":
             m, cache_out = ssm_mod.mamba_step(
                 cfg, p["mixer"], h, cache, lora=_mixer_lora(lora),
-                lora_scale=lora_scale)
+                lora_scale=lora_scale, dense_impl=rt.dense_impl)
         elif mode == "prefill":
             m, cache_out = ssm_mod.mamba_block(
                 cfg, p["mixer"], h, lora=_mixer_lora(lora),
-                lora_scale=lora_scale, return_state=True)
+                lora_scale=lora_scale, return_state=True,
+                dense_impl=rt.dense_impl)
         else:
             m = ssm_mod.mamba_block(cfg, p["mixer"], h,
-                                    lora=_mixer_lora(lora), lora_scale=lora_scale)
+                                    lora=_mixer_lora(lora),
+                                    lora_scale=lora_scale,
+                                    dense_impl=rt.dense_impl)
     x = x + m
     if pat.mlp != "none":
         h = apply_norm(cfg, x, p["norm2"])
@@ -120,7 +135,7 @@ def apply_block(cfg, pat, p: dict, x, *, positions, lora, lora_scale, rt: Runtim
         else:
             mo = apply_mlp(cfg, h, p["mlp"],
                            None if lora is None else lora.get("mlp"),
-                           lora_scale)
+                           lora_scale, dense_impl=rt.dense_impl)
         x = x + mo
     return x, cache_out, aux
 
@@ -220,6 +235,13 @@ def apply_stack(cfg, stack_params, x, *, positions, lora=None, rt: Runtime,
         params = sl(params)
         lora_xs = sl(lora_xs)
         cache_xs = sl(cache_xs)
+
+    if lora_xs is not None:
+        # hoist adapter dtype casts out of the depth scan: one convert of
+        # the stacked factors here instead of R per-step converts in the
+        # compiled round body (per-layer convert absence is asserted in
+        # tests/test_fused_dense.py)
+        lora_xs = jax.tree.map(lambda v: _cast_like(x, v), lora_xs)
 
     # scan requires every xs leaf to share the leading (repeat) dim
     has_lora = lora_xs is not None and len(jax.tree.leaves(lora_xs)) > 0

@@ -1,0 +1,170 @@
+"""Fused dense dispatch: layer-level parity, train-round regression (the
+fused path can never silently diverge training), and the cast-hoisting
+guarantee for the compiled round body."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import TrainConfig, get_arch
+from repro.core.sfl import SflLLM
+from repro.models.layers import dense
+from repro.models.stack import Runtime, apply_stack, default_train_runtime
+from repro.optim import adamw
+from repro import models as M
+
+
+def test_default_train_runtime_is_fast_path():
+    rt = default_train_runtime()
+    assert rt.attn_impl == "chunked"
+    assert rt.dense_impl == "fused"
+    assert rt.remat_policy == "dots"
+
+
+@pytest.fixture()
+def force_fused(monkeypatch):
+    """Engage the fused custom-VJP dispatch on this CPU container (by
+    default ``impl="fused"`` only routes to kernels on TPU)."""
+    from repro.models import layers
+    monkeypatch.setattr(layers, "FUSED_DENSE_BACKENDS",
+                        layers.FUSED_DENSE_BACKENDS + ("cpu",))
+
+
+def test_dense_fused_falls_back_to_einsum_off_tpu():
+    """Without a TPU the fused dispatch must be the einsum path exactly —
+    the CPU steps/sec guarantee of the new trainer defaults."""
+    x = jax.random.normal(jax.random.key(0), (2, 9, 40))
+    w = jax.random.normal(jax.random.key(1), (40, 24)) * 0.1
+    lora = {"a": jax.random.normal(jax.random.key(3), (4, 40)) * 0.1,
+            "b": jax.random.normal(jax.random.key(4), (24, 4)) * 0.1}
+    ye = dense(x, w, None, lora, 1.7, impl="einsum")
+    yf = dense(x, w, None, lora, 1.7, impl="fused")
+    np.testing.assert_array_equal(np.asarray(yf), np.asarray(ye))
+
+
+@pytest.mark.parametrize("with_bias", [False, True])
+def test_dense_fused_matches_einsum(with_bias, force_fused):
+    x = jax.random.normal(jax.random.key(0), (2, 9, 40))
+    w = jax.random.normal(jax.random.key(1), (40, 24)) * 0.1
+    b = jax.random.normal(jax.random.key(2), (24,)) if with_bias else None
+    lora = {"a": jax.random.normal(jax.random.key(3), (4, 40)) * 0.1,
+            "b": jax.random.normal(jax.random.key(4), (24, 4)) * 0.1}
+    ye = dense(x, w, b, lora, 1.7, impl="einsum")
+    yf = dense(x, w, b, lora, 1.7, impl="fused")
+    np.testing.assert_allclose(np.asarray(yf), np.asarray(ye), atol=2e-5,
+                               rtol=2e-5)
+    # without an adapter the fused impl falls back to the einsum path
+    np.testing.assert_allclose(np.asarray(dense(x, w, b, impl="fused")),
+                               np.asarray(dense(x, w, b)), atol=0)
+
+
+def test_train_round_fused_matches_einsum(key, force_fused):
+    """Engine regression: a full SflLLM.train_round under
+    dense_impl="fused" (custom-VJP path forced on) must track
+    dense_impl="einsum" losses and adapter updates to tolerance — the
+    fused path can never silently diverge training."""
+    K, I = 3, 3
+    cfg = get_arch("gpt2-s").reduced(num_layers=4)
+    params = M.init_params(cfg, key)
+    lora = M.init_lora_stack(cfg, jax.random.key(7))
+    rng = np.random.default_rng(0)
+    rb = {"tokens": rng.integers(0, cfg.vocab_size, (I, K, 2, 16)).astype(np.int32)}
+    rb["labels"] = rb["tokens"].copy()
+    tc = TrainConfig(num_clients=K, batch_size=2, local_steps=I)
+    counts = [3.0, 1.0, 2.0]
+
+    out = {}
+    for impl in ("einsum", "fused"):
+        rt = default_train_runtime().replace(dense_impl=impl)
+        sfl = SflLLM(cfg, params, ell_c=2, train_cfg=tc,
+                     optimizer=adamw(3e-3), rt=rt, donate=False)
+        out[impl] = sfl.train_round(sfl.init_state(lora), rb, counts)
+
+    np.testing.assert_allclose(np.asarray(out["fused"][1]["loss"]),
+                               np.asarray(out["einsum"][1]["loss"]),
+                               atol=1e-4)
+    for which in ("lora_client", "lora_server"):
+        for a, b in zip(jax.tree.leaves(getattr(out["fused"][0], which)),
+                        jax.tree.leaves(getattr(out["einsum"][0], which))):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5, err_msg=which)
+
+
+def _convert_shapes(jaxpr, acc):
+    """All convert_element_type result shapes in a (closed) jaxpr tree."""
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "convert_element_type":
+            acc.append(tuple(eqn.outvars[0].aval.shape))
+        for v in eqn.params.values():
+            for sub in (v if isinstance(v, (list, tuple)) else (v,)):
+                inner = getattr(sub, "jaxpr", None)
+                if inner is not None:
+                    _convert_shapes(inner, acc)
+    return acc
+
+
+def test_lora_casts_hoisted_out_of_depth_scan(key):
+    """Mixed-precision adapters (f32 factors, bf16 activations) must be
+    cast ONCE before the depth scan — no per-layer factor convert may
+    survive inside the scan body of the round program."""
+    cfg = get_arch("gpt2-s").reduced(num_layers=4)
+    params = M.init_params(cfg, key, dtype=jnp.bfloat16)
+    lora = M.init_lora_stack(cfg, jax.random.key(7), dtype=jnp.float32)
+    x = jnp.zeros((2, 16, cfg.d_model), jnp.bfloat16)
+    pos = jnp.arange(16, dtype=jnp.int32)
+    rt = Runtime(attn_impl="naive", dense_impl="einsum")
+
+    def fwd(lora):
+        y, _, _ = apply_stack(cfg, params["layers"], x, positions=pos,
+                              lora=lora, rt=rt, mode="train")
+        return y
+
+    jaxpr = jax.make_jaxpr(fwd)(lora).jaxpr
+    # per-layer factor shapes = stacked lora leaf shapes minus the repeat axis
+    factor_shapes = {tuple(l.shape[1:]) for l in jax.tree.leaves(lora)}
+    scans = [e for e in jaxpr.eqns if e.primitive.name == "scan"]
+    assert scans, "apply_stack no longer lowers to a scan?"
+    in_scan = []
+    for e in scans:
+        _convert_shapes(e.params["jaxpr"].jaxpr, in_scan)
+    assert not (set(in_scan) & factor_shapes), (
+        f"per-layer adapter converts inside the scan body: "
+        f"{set(in_scan) & factor_shapes}")
+    # ... and the one-time stacked cast exists at the top level
+    top = _convert_shapes_top_only(jaxpr)
+    stacked_shapes = {tuple(l.shape) for l in jax.tree.leaves(lora)}
+    assert set(top) & stacked_shapes, "hoisted stacked cast missing"
+
+    # same property on the *optimized* HLO, located via the hlo_cost
+    # parser: no computation reachable from a while body may convert a
+    # per-layer-factor-shaped array
+    import re
+
+    from repro.analysis.hlo_cost import _CALL_ATTR, HloCostModel, shape_dims
+
+    hlo = jax.jit(fwd).lower(lora).compile().as_text()
+    model = HloCostModel(hlo)
+    reachable = set()
+
+    def reach(name):
+        if name in reachable or name not in model.comps:
+            return
+        reachable.add(name)
+        for ins in model.comps[name]:
+            m = _CALL_ATTR.search(ins.attrs)
+            if m:
+                reach(m.group(1))
+
+    for body in re.findall(r"body=%?([\w.\-]+)", hlo):
+        reach(body)
+    assert reachable, "no while body in the optimized round HLO?"
+    bad = {(n, tuple(shape_dims(ins.type_str)))
+           for n in reachable for ins in model.comps[n]
+           if ins.opcode == "convert"
+           and tuple(shape_dims(ins.type_str)) in factor_shapes}
+    assert not bad, f"factor converts survive in the loop body: {bad}"
+
+
+def _convert_shapes_top_only(jaxpr):
+    return [tuple(e.outvars[0].aval.shape) for e in jaxpr.eqns
+            if e.primitive.name == "convert_element_type"]

@@ -13,19 +13,71 @@ TOLS = {jnp.float32: dict(atol=2e-5, rtol=2e-5),
         jnp.bfloat16: dict(atol=3e-2, rtol=3e-2)}
 
 
+GRAD_TOLS = {jnp.float32: dict(atol=2e-4, rtol=2e-4),
+             jnp.bfloat16: dict(atol=2e-1, rtol=5e-2)}
+
+
+def _lora_inputs(M, K, N, r, dtype):
+    x = jax.random.normal(jax.random.key(M + N), (M, K),
+                          jnp.float32).astype(dtype)
+    w = (jax.random.normal(jax.random.key(1), (K, N)) * K ** -0.5).astype(dtype)
+    a = (jax.random.normal(jax.random.key(2), (r, K)) * K ** -0.5).astype(dtype)
+    b = jax.random.normal(jax.random.key(3), (N, r)).astype(dtype)
+    return x, w, a, b
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("M,K,N,r", [(64, 128, 96, 4), (128, 64, 128, 8),
                                      (33, 70, 45, 1), (256, 256, 256, 6)])
 def test_lora_matmul_sweep(M, K, N, r, dtype):
-    key = jax.random.key(M + N)
-    x = jax.random.normal(key, (M, K), jnp.float32).astype(dtype)
-    w = (jax.random.normal(jax.random.key(1), (K, N)) * K ** -0.5).astype(dtype)
-    a = (jax.random.normal(jax.random.key(2), (r, K)) * K ** -0.5).astype(dtype)
-    b = jax.random.normal(jax.random.key(3), (N, r)).astype(dtype)
-    yk = lora_matmul(x, w, a, b, scale=1.5, bm=64, bn=64, bk=64)
+    x, w, a, b = _lora_inputs(M, K, N, r, dtype)
+    yk = lora_matmul(x, w, a, b, scale=1.5, bm=64, bn=64, bk=64,
+                     interpret=True, use_kernel=True)
     yr = lora_matmul_ref(x, w, a, b, 1.5)
     np.testing.assert_allclose(np.asarray(yk, np.float32),
                                np.asarray(yr, np.float32), **TOLS[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("M,K,N,r", [(64, 128, 96, 4),   # block-aligned-ish
+                                     (33, 70, 45, 2),    # ragged everywhere
+                                     (48, 64, 40, 1),    # ragged N, rank 1
+                                     (128, 96, 64, 8)])
+def test_lora_matmul_vjp_parity(M, K, N, r, dtype):
+    """The fused custom VJP (dX kernel + rank-reduction kernels, interpret
+    mode) must match the jnp oracle's autodiff for all four cotangents —
+    including ragged shapes that exercise the padding path."""
+    x, w, a, b = _lora_inputs(M, K, N, r, dtype)
+    cot = jax.random.normal(jax.random.key(9), (M, N),
+                            jnp.float32).astype(dtype)
+
+    def fk(x, w, a, b):
+        return lora_matmul(x, w, a, b, scale=1.25, bm=32, bn=32, bk=32,
+                           interpret=True, use_kernel=True)
+
+    yk, vjp_k = jax.vjp(fk, x, w, a, b)
+    yr, vjp_r = jax.vjp(lambda *z: lora_matmul_ref(*z, 1.25), x, w, a, b)
+    np.testing.assert_allclose(np.asarray(yk, np.float32),
+                               np.asarray(yr, np.float32), **TOLS[dtype])
+    for name, gk, gr in zip(("dx", "dw", "da", "db"), vjp_k(cot), vjp_r(cot)):
+        assert gk.dtype == gr.dtype and gk.shape == gr.shape
+        np.testing.assert_allclose(np.asarray(gk, np.float32),
+                                   np.asarray(gr, np.float32),
+                                   err_msg=name, **GRAD_TOLS[dtype])
+
+
+def test_lora_matmul_vjp_cpu_fallback_matches_oracle():
+    """The auto-dispatch path (off-TPU -> jnp fallback inside the same
+    custom VJP) is what the fused trainers run on this container: grads
+    must match the oracle's autodiff to f32 precision."""
+    x, w, a, b = _lora_inputs(40, 56, 24, 4, jnp.float32)
+    cot = jax.random.normal(jax.random.key(9), (40, 24))
+    yk, vjp_k = jax.vjp(lambda *z: lora_matmul(*z, scale=0.5), x, w, a, b)
+    yr, vjp_r = jax.vjp(lambda *z: lora_matmul_ref(*z, 0.5), x, w, a, b)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), atol=2e-5)
+    for gk, gr in zip(vjp_k(cot), vjp_r(cot)):
+        np.testing.assert_allclose(np.asarray(gk), np.asarray(gr), atol=2e-5,
+                                   rtol=2e-5)
 
 
 def test_lora_matmul_batched_lead_dims():
@@ -33,9 +85,24 @@ def test_lora_matmul_batched_lead_dims():
     w = jax.random.normal(jax.random.key(1), (40, 24)) * 0.1
     a = jax.random.normal(jax.random.key(2), (4, 40)) * 0.1
     b = jax.random.normal(jax.random.key(3), (24, 4))
-    yk = lora_matmul(x, w, a, b, scale=1.0, bm=32, bn=32, bk=32)
+    yk = lora_matmul(x, w, a, b, scale=1.0, bm=32, bn=32, bk=32,
+                     interpret=True, use_kernel=True)
     yr = lora_matmul_ref(x.reshape(-1, 40), w, a, b, 1.0).reshape(2, 3, 24)
     np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), atol=2e-5)
+
+
+def test_lora_block_autotuner_memoizes_and_clips():
+    from repro.kernels.lora_matmul import best_blocks
+    from repro.kernels.lora_matmul.tune import _CACHE, clear_cache
+
+    clear_cache()
+    got = best_blocks(512, 1024, 1024, 8)
+    assert got == best_blocks(512, 1024, 1024, 8)    # memo hit
+    assert len(_CACHE) == 1
+    bm, bn, bk = best_blocks(33, 70, 45, 2)          # ragged: tiles clipped
+    assert bm <= 33 and bn <= 45 and bk <= 70
+    # never a pathological tile: padded waste stays bounded for tiny shapes
+    assert bm * bn * bk <= 128 ** 3
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

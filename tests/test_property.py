@@ -86,7 +86,8 @@ def test_lora_matmul_property(m, k, n, r, seed):
     w = jnp.asarray(rng.normal(size=(K, N)) * K ** -0.5, jnp.float32)
     a = jnp.asarray(rng.normal(size=(r, K)) * K ** -0.5, jnp.float32)
     b = jnp.asarray(rng.normal(size=(N, r)), jnp.float32)
-    yk = lora_matmul(x, w, a, b, scale=0.7, bm=16, bn=16, bk=16)
+    yk = lora_matmul(x, w, a, b, scale=0.7, bm=16, bn=16, bk=16,
+                     interpret=True, use_kernel=True)
     yr = lora_matmul_ref(x, w, a, b, 0.7)
     np.testing.assert_allclose(np.asarray(yk), np.asarray(yr),
                                atol=3e-5, rtol=3e-5)
