@@ -6,6 +6,7 @@
   fig3/4  bench_convergence  loss curves + steps-to-target per rank (+E(r) fit)
   fig5-8  bench_latency      latency sweeps, proposed vs baselines a-d
   kernels bench_kernels      kernel twins micro-times + traffic accounting
+  serving bench_serving      fused vs naive engine tokens/sec + compiles
   roofline bench_roofline    per (arch x shape x mesh) roofline rows
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only table4,fig5 ...]
@@ -19,7 +20,7 @@ import time
 import traceback
 
 from . import (bench_complexity, bench_convergence, bench_kernels,
-               bench_latency, bench_ppl, bench_roofline)
+               bench_latency, bench_ppl, bench_roofline, bench_serving)
 
 SUITES = {
     "table3": bench_complexity.main,
@@ -27,6 +28,7 @@ SUITES = {
     "convergence": bench_convergence.main,
     "latency": bench_latency.main,
     "kernels": bench_kernels.main,
+    "serving": bench_serving.main,
     "roofline": bench_roofline.main,
 }
 
@@ -68,6 +70,14 @@ def main() -> None:
             json.dump({"unix_time": int(time.time()), "rows": kern}, f,
                       indent=2)
         print(f"wrote BENCH_kernels.json ({len(kern)} rows)", file=sys.stderr)
+
+    serving = [r for r in rows if r["name"].startswith("serving/")]
+    if serving:
+        with open("BENCH_serving.json", "w") as f:
+            json.dump({"unix_time": int(time.time()), "rows": serving}, f,
+                      indent=2)
+        print(f"wrote BENCH_serving.json ({len(serving)} rows)",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,16 +1,19 @@
-"""Serving example: load a LoRA adapter (e.g. from train_sfl_e2e.py),
-prefill a batch of E2E-style prompts and greedily decode completions.
+"""Serving example: load a LoRA adapter (e.g. from train_sfl_e2e.py) and
+serve E2E-style prompts through the continuous-batching engine — each
+request keeps its own length (bucketed prefill, no host-side batch
+padding) and decodes in the fused in-graph loop.
 
     PYTHONPATH=src python examples/serve_lora.py [--adapter /tmp/sfl_lora.msgpack]
 """
 import argparse
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_arch
 from repro.data import WordTokenizer, e2e_splits
 from repro import models as M
+from repro.models.generate import SampleConfig
+from repro.serving import Request, ServingEngine
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--adapter", default="")
@@ -18,7 +21,6 @@ ap.add_argument("--gen", type=int, default=16)
 args = ap.parse_args()
 
 cfg = get_arch("gpt2-s").reduced(num_layers=6, d_model=256)
-rt = M.Runtime(attn_impl="naive")
 key = jax.random.key(0)
 params = M.init_params(cfg, key)
 lora = M.init_lora_stack(cfg, key, rank=4)
@@ -37,25 +39,17 @@ if args.adapter:
     print("loaded adapter from", args.adapter)
 
 prompts = [t.mr + " <sep>" for t in test[:4]]
-ids = [tok.encode(p) for p in prompts]
-L = max(len(i) for i in ids)
-batch = jnp.array([[0] * (L - len(i)) + i for i in ids], jnp.int32)
+requests = [Request(uid=i, prompt=tok.encode(p), max_new_tokens=args.gen)
+            for i, p in enumerate(prompts)]
 
-cache_len = L + args.gen
-logits, caches = jax.jit(lambda p, l, t: M.prefill(
-    cfg, p, t, lora=l, rt=rt, cache_len=cache_len))(params, lora, batch)
-jdecode = jax.jit(lambda p, l, t, c, i: M.decode_step(cfg, p, t, c, i,
-                                                      lora=l, rt=rt))
-tokpred = jnp.argmax(logits, -1)[:, None]
-out = [tokpred]
-for i in range(args.gen - 1):
-    logits, caches = jdecode(params, lora, tokpred, caches,
-                             jnp.int32(L + i))
-    tokpred = jnp.argmax(logits, -1)[:, None]
-    out.append(tokpred)
-gen = jnp.concatenate(out, axis=1)
+eng = ServingEngine(cfg, params, lora=lora, max_slots=4,
+                    max_len=max(len(r.prompt) for r in requests) + args.gen,
+                    sc=SampleConfig(greedy=True))
+for r in requests:
+    eng.submit(r)
+eng.run()
 
-for p, g in zip(prompts, gen):
+for p, r in zip(prompts, requests):
     print("-" * 60)
     print("PROMPT:", p)
-    print("OUTPUT:", tok.decode([int(x) for x in g]))
+    print("OUTPUT:", tok.decode(r.output))

@@ -3,13 +3,17 @@ mode on CPU; set interpret=False on real TPUs):
 
 * lora_matmul     — fused y = xW + scale·(xAᵀ)Bᵀ (the paper's adapter math)
 * flash_attention — online-softmax causal GQA attention, VMEM-resident tiles
+* flash_decode    — one-token decode over per-slot KV caches, split-K over
+                    the cache length with per-slot live-length masking
 * ssd_scan        — Mamba2 chunked state-space duality forward
 """
-from .flash_attention import flash_attention, flash_attention_ref
+from .flash_attention import (flash_attention, flash_attention_ref,
+                              flash_decode, flash_decode_ref)
 from .lora_matmul import lora_matmul, lora_matmul_ref
 from .ssd_scan import ssd_scan, ssd_sequential_ref
 
 __all__ = [
-    "flash_attention", "flash_attention_ref", "lora_matmul",
-    "lora_matmul_ref", "ssd_scan", "ssd_sequential_ref",
+    "flash_attention", "flash_attention_ref", "flash_decode",
+    "flash_decode_ref", "lora_matmul", "lora_matmul_ref", "ssd_scan",
+    "ssd_sequential_ref",
 ]

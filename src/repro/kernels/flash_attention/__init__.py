@@ -1,5 +1,9 @@
+from .decode import flash_decode_kernel
 from .kernel import flash_attention_kernel
-from .ops import flash_attention
-from .ref import flash_attention_ref
+from .ops import flash_attention, flash_decode
+from .ref import flash_attention_ref, flash_decode_ref
+from .tune import best_decode_block
 
-__all__ = ["flash_attention", "flash_attention_kernel", "flash_attention_ref"]
+__all__ = ["flash_attention", "flash_attention_kernel", "flash_attention_ref",
+           "flash_decode", "flash_decode_kernel", "flash_decode_ref",
+           "best_decode_block"]

@@ -1,0 +1,114 @@
+"""Flash-decode Pallas kernel: one-token GQA attention over a KV cache,
+split-K over the cache length with PER-SLOT live-length masking.
+
+Serving decodes a batch of independent sequences ("slots") that sit at
+different positions: a slot that has seen 37 tokens only has 37 valid
+cache entries, yet a naive batched decode scores all ``max_len`` of them.
+This kernel makes the work proportional to the LIVE prefix instead:
+
+* grid (B, KH, L/bk) — batch and kv-head axes are parallel, the cache
+  length axis is the sequential online-softmax reduction (split-K);
+* the per-slot live lengths ride in as a scalar-prefetch operand
+  (``pltpu.PrefetchScalarGridSpec``), so each (b, j) step knows before
+  the DMA lands whether its tile holds ANY live entry — fully-dead tiles
+  skip the score matmul entirely (`pl.when`), which is what turns a
+  position-37 slot into ceil(38/bk) tiles of work instead of L/bk;
+* all G = H/KH query heads of one KV head are folded into the score tile
+  rows: the (G, bk) score tile feeds the MXU as one matmul, and m/l/acc
+  scratch persist across the split-K steps in VMEM (layout mirrors
+  ``kernel.py``: m/l replicated over 128 lanes).
+
+Within the newest live tile the mask is ``k_idx < length`` (entries are
+laid out contiguously [0, length) — ops.py only dispatches here for
+non-ring caches); a sliding window additionally drops
+``k_idx <= length-1-window``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+_LANES = 128
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bk: int, k_steps: int, scale: float, window: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    length = len_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # any live entry in this tile?  (dead slots: length <= 0 skips all)
+    live = j * bk < length
+
+    @pl.when(live)
+    def _compute():
+        G = q_ref.shape[2]
+        k_idx = j * bk + jax.lax.broadcasted_iota(jnp.int32, (G, bk), 1)
+        mask = k_idx < length
+        if window:
+            mask &= k_idx > length - 1 - window
+        s = jax.lax.dot_general(
+            q_ref[0, 0], k_ref[0, 0],
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale      # (G, bk)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...][:, :1]                           # (G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+        p = jnp.exp(s - m_new) * mask
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = jnp.broadcast_to(
+            l_ref[...][:, :1] * alpha + jnp.sum(p, -1, keepdims=True),
+            l_ref.shape)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0, 0],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(j == k_steps - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...][:, :1], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_decode_kernel(q, k, v, lengths, *, window: int = 0, bk: int = 256,
+                        interpret: bool = False):
+    """q: (B, KH, G, D); k/v: (B, KH, L, D) with L divisible by ``bk``
+    (ops.py pads); lengths: (B,) int32 — live entries per slot, laid out
+    contiguously at [0, length).  Returns (B, KH, G, D)."""
+    B, KH, G, D = q.shape
+    L = k.shape[2]
+    bk = min(bk, L)
+    grid = (B, KH, L // bk)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, j, lens: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, j, lens: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, j, lens: (b, h, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((G, _LANES), jnp.float32),
+                        pltpu.VMEM((G, _LANES), jnp.float32),
+                        pltpu.VMEM((G, D), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, bk=bk, k_steps=grid[2], scale=D ** -0.5,
+                          window=window),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KH, G, D), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), q, k, v)

@@ -7,8 +7,10 @@ import jax
 import jax.numpy as jnp
 
 from ..backend import auto_interpret
+from .decode import flash_decode_kernel
 from .kernel import flash_attention_kernel
-from .ref import flash_attention_ref
+from .ref import flash_attention_ref, flash_decode_ref
+from .tune import best_decode_block
 
 
 @functools.partial(jax.jit, static_argnames=("window", "bq", "bk",
@@ -40,3 +42,49 @@ def flash_attention(q, k, v, *, window: int = 0, bq: int = 256, bk: int = 256,
                                q_offset=max(Sk - Sq, 0),
                                bq=bq_, bk=bk_, interpret=interpret)
     return o[:, :, :Sq].transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bk", "interpret",
+                                             "use_kernel"))
+def flash_decode(q, k, v, lengths, *, window: int = 0,
+                 bk: "int | None" = None, interpret: "bool | None" = None,
+                 use_kernel: "bool | None" = None):
+    """One-token decode attention over per-slot KV caches.
+
+    q: (B, 1, H, D) or (B, H, D); k/v: (B, L, KH, D) — the model cache
+    layout of ``repro.models.attention``; lengths: (B,) int32 live entries
+    per slot (entries contiguous at [0, length); callers with ring-wrapped
+    windowed caches must use the position-masked path instead).
+
+    Dispatch mirrors ``lora_matmul``: the native split-K Pallas kernel on
+    TPU (block size from the memoized ``tune.best_decode_block``), the
+    masked-einsum oracle elsewhere — an explicit ``interpret`` flag forces
+    the kernel (interpret-mode parity testing)."""
+    squeeze = q.ndim == 4
+    if squeeze:
+        q = q[:, 0]
+    B, H, D = q.shape
+    L, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    explicit_interpret = interpret is not None
+    if interpret is None:
+        interpret = auto_interpret()
+    if use_kernel is None:
+        use_kernel = explicit_interpret or not interpret
+    qt = q.reshape(B, KH, G, D)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if not use_kernel:
+        o = flash_decode_ref(qt, kt, vt, lengths, window=window)
+    else:
+        if bk is None:
+            bk = best_decode_block(B, KH, G, L, D, q.dtype)
+        bk = min(bk, L)
+        pk = (-L) % bk
+        if pk:       # padded tail entries sit beyond every live length
+            kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pk), (0, 0)))
+            vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        o = flash_decode_kernel(qt, kt, vt, lengths, window=window, bk=bk,
+                                interpret=interpret)
+    o = o.reshape(B, H, D)
+    return o[:, None] if squeeze else o

@@ -7,6 +7,27 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
+def flash_decode_ref(q, k, v, lengths, *, window: int = 0):
+    """Decode oracle: q (B, KH, G, D) — one query token per slot, GQA
+    folded; k/v (B, KH, L, D); lengths (B,) live entries per slot (cache
+    entries laid out contiguously at [0, length)).  Masked full-score
+    softmax in f32 — the jnp twin of ``decode.flash_decode_kernel`` and
+    the off-TPU fallback path of ``ops.flash_decode``."""
+    B, KH, G, D = q.shape
+    L = k.shape[2]
+    s = jnp.einsum("bhgd,bhkd->bhgk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * D ** -0.5
+    k_idx = jnp.arange(L)
+    mask = k_idx[None, :] < lengths[:, None]                 # (B, L)
+    if window:
+        mask &= k_idx[None, :] > lengths[:, None] - 1 - window
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jnp.exp(s - s.max(-1, keepdims=True)) * mask[:, None, None]
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
 def flash_attention_ref(q, k, v, *, window: int = 0, seq_k: int = 0):
     """q: (B, H, Sq, D); k/v: (B, KH, Sk, D); causal with q and k aligned at
     the sequence end (q_pos = Sk - Sq + arange(Sq)).  seq_k masks padding

@@ -1,0 +1,90 @@
+"""Cache-length block autotuner for the flash-decode kernel, memoized per
+process — the ``lora_matmul/tune.py`` pattern applied to split-K decode.
+
+``best_decode_block`` picks the kv-tile size ``bk`` for one
+(B, KH, G, L, D, dtype) decode problem.  On a TPU backend the candidates
+are timed against the real kernel; elsewhere a waste heuristic picks the
+tile: a big bk wastes MXU work on the partially-live last tile of every
+slot (the steady-state live length is unknown at trace time, so the
+heuristic scores the expected half-full tile), a tiny bk pays more grid
+steps and scratch round-trips.  Either way the kernel never launches with
+a pathological tile — a bk past the VMEM budget or wider than the cache.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_CACHE: Dict[Tuple[int, int, int, int, int, str, str], int] = {}
+
+_CANDIDATES: Tuple[int, ...] = (128, 256, 512, 1024)
+_VMEM_BUDGET = 12 * 1024 * 1024        # leave headroom under ~16 MB/core
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+
+
+def _vmem_bytes(bk: int, G: int, D: int, itemsize: int) -> int:
+    """Per-step VMEM: double-buffered k/v tiles + q + f32 scratch + out."""
+    tiles = itemsize * (2 * bk * D + G * D)
+    scratch = 4 * (2 * G * 128 + G * D)
+    return 2 * tiles + scratch + itemsize * G * D
+
+
+def _time_candidates(B: int, KH: int, G: int, L: int, D: int, dtype,
+                     cands: List[int]) -> int:
+    from .decode import flash_decode_kernel
+
+    q = jnp.zeros((B, KH, G, D), dtype)
+    lens = jnp.full((B,), L, jnp.int32)
+    best, best_t = cands[0], float("inf")
+    for bk in cands:
+        # time against the padded cache length ops.flash_decode will run
+        Lp = -(-L // bk) * bk
+        k = jnp.zeros((B, KH, Lp, D), dtype)
+        try:
+            fn = jax.jit(lambda q, k, v, n, bk=bk: flash_decode_kernel(
+                q, k, v, n, bk=bk, interpret=False))
+            fn(q, k, k, lens).block_until_ready()           # compile
+            t = float("inf")
+            for _ in range(3):
+                t0 = time.perf_counter()
+                fn(q, k, k, lens).block_until_ready()
+                t = min(t, time.perf_counter() - t0)
+        except Exception:                                   # noqa: BLE001
+            continue            # tile shape the backend rejects — skip it
+        if t < best_t:
+            best, best_t = bk, t
+    return best
+
+
+def _heuristic_key(L: int, bk: int):
+    """Expected wasted lanes on the half-full boundary tile, then fewer
+    grid steps (scratch round-trips) as the tie-break."""
+    steps = -(-L // bk)
+    return (bk // 2 + (-L) % bk, steps)
+
+
+def best_decode_block(B: int, KH: int, G: int, L: int, D: int,
+                      dtype=jnp.float32, backend: str | None = None) -> int:
+    """Memoized ``bk`` for one flash-decode problem shape."""
+    backend = backend or jax.default_backend()
+    key = (int(B), int(KH), int(G), int(L), int(D),
+           jnp.dtype(dtype).name, backend)
+    hit = _CACHE.get(key)
+    if hit is not None:
+        return hit
+    itemsize = jnp.dtype(dtype).itemsize
+    cands = [min(bk, L) for bk in _CANDIDATES
+             if _vmem_bytes(min(bk, L), max(G, 1), D, itemsize) <= _VMEM_BUDGET]
+    cands = sorted(set(cands)) or [min(128, L)]
+    if backend == "tpu":
+        best = _time_candidates(B, KH, G, L, D, dtype, cands)
+    else:
+        best = min(cands, key=lambda bk: _heuristic_key(L, bk))
+    _CACHE[key] = best
+    return best

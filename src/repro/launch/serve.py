@@ -1,38 +1,44 @@
-"""Serving driver: batched prefill + greedy decode with the (optionally
-LoRA-merged) model.  CPU demo:
+"""Serving driver: continuous-batching engine over the (optionally
+LoRA-adapted) model — fused in-graph decode, bucketed prefill.  CPU demo:
 
   PYTHONPATH=src python -m repro.launch.serve --arch gpt2-s --reduced \
-      --batch 4 --prompt-len 32 --gen 16
+      --requests 12 --slots 4 --gen 16
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
-
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gpt2-s")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--rank", type=int, default=4)
     ap.add_argument("--lora-checkpoint", default="")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy")
+    ap.add_argument("--naive", action="store_true",
+                    help="pre-PR per-token host loop (baseline)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    import jax
+    import numpy as np
+
     from ..configs import get_arch
-    from ..models import (Runtime, decode_step, init_lora_stack, init_params,
-                          prefill)
+    from ..models import init_lora_stack, init_params
+    from ..models.generate import SampleConfig
+    from ..serving import Request, ServingEngine
 
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced(num_layers=max(4, len(cfg.pattern)))
-    rt = Runtime(attn_impl="naive")
 
     key = jax.random.key(args.seed)
     params = init_params(cfg, key)
@@ -41,37 +47,34 @@ def main() -> None:
         from ..checkpoint import restore_pytree
         lora = restore_pytree(args.lora_checkpoint, lora)
 
-    B, P, G = args.batch, args.prompt_len, args.gen
-    prompts = jax.random.randint(key, (B, P), 5, cfg.vocab_size)
-    cache_len = P + G + (cfg.frontend_tokens if cfg.frontend else 0)
+    sc = (SampleConfig(greedy=True) if args.temperature == 0.0
+          else SampleConfig(temperature=args.temperature))
+    eng = ServingEngine(cfg, params, lora=lora, max_slots=args.slots,
+                        max_len=args.max_len, sc=sc, seed=args.seed,
+                        fused=not args.naive)
 
-    fe = (jnp.zeros((B, cfg.frontend_tokens, cfg.d_model))
-          if cfg.frontend else None)
-
-    jprefill = jax.jit(lambda p, l, t: prefill(
-        cfg, p, t, lora=l, rt=rt, frontend_emb=fe, cache_len=cache_len))
-    jdecode = jax.jit(lambda p, l, t, c, i: decode_step(
-        cfg, p, t, c, i, lora=l, rt=rt))
+    rng = np.random.default_rng(args.seed)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(5, cfg.vocab_size,
+                                        rng.integers(4, args.prompt_len + 1)
+                                        ).tolist(),
+                    max_new_tokens=args.gen)
+            for i in range(args.requests)]
+    for r in reqs:
+        eng.submit(r)
 
     t0 = time.time()
-    logits, caches = jprefill(params, lora, prompts)
-    jax.block_until_ready(logits)
-    t1 = time.time()
-    tok = jnp.argmax(logits, -1)[:, None]
-    out = [tok]
-    pos0 = P + (cfg.frontend_tokens if cfg.frontend else 0)
-    for i in range(G - 1):
-        logits, caches = jdecode(params, lora, tok, caches,
-                                 jnp.int32(pos0 + i))
-        tok = jnp.argmax(logits, -1)[:, None]
-        out.append(tok)
-    gen = jnp.concatenate(out, axis=1)
-    jax.block_until_ready(gen)
-    t2 = time.time()
-    print(f"prefill {B}x{P} in {t1-t0:.2f}s; "
-          f"decoded {B}x{G} tokens in {t2-t1:.2f}s "
-          f"({B*G/(t2-t1):.1f} tok/s)")
-    print("sample token ids:", gen[0, :12].tolist())
+    steps = 0
+    while any(not r.done for r in reqs):
+        eng.step()
+        steps += 1
+    wall = time.time() - t0
+    total = sum(len(r.output) for r in reqs)
+    print(f"served {len(reqs)} requests / {total} tokens in {wall:.2f}s "
+          f"({total / wall:.1f} tok/s) with {args.slots} slots, "
+          f"{steps} engine steps, {eng.prefill_compiles()} prefill "
+          f"compiles ({'naive' if args.naive else 'fused'} engine)")
+    print("sample token ids:", reqs[0].output[:12])
 
 
 if __name__ == "__main__":

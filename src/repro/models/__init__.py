@@ -1,17 +1,19 @@
-from .stack import (Runtime, apply_stack, default_train_runtime, init_stack,
-                    init_stack_cache)
+from .stack import (Runtime, apply_stack, default_serve_runtime,
+                    default_train_runtime, init_stack, init_stack_cache)
 from .model import (
     abstract_cache, abstract_lora, abstract_params, decode_step, forward,
     init_cache, init_lora_stack, init_params, loss_fn, lora_num_params,
     num_active_params, num_params, prefill, IGNORE_ID,
 )
-from .generate import SampleConfig, generate, sample_logits
+from .generate import (SampleConfig, generate, sample_logits,
+                       sample_logits_per_key)
 
 __all__ = [
-    "Runtime", "apply_stack", "default_train_runtime", "init_stack",
-    "init_stack_cache",
+    "Runtime", "apply_stack", "default_serve_runtime",
+    "default_train_runtime", "init_stack", "init_stack_cache",
     "abstract_cache", "abstract_lora", "abstract_params", "decode_step",
     "forward", "init_cache", "init_lora_stack", "init_params", "loss_fn",
     "lora_num_params", "num_active_params", "num_params", "prefill",
     "IGNORE_ID", "SampleConfig", "generate", "sample_logits",
+    "sample_logits_per_key",
 ]

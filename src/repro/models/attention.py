@@ -321,7 +321,9 @@ def self_attention(cfg, p, x, positions, *, lora=None, lora_scale=1.0,
         kc = jnp.roll(k[:, S - L:], shift, axis=1)
         vc = jnp.roll(v[:, S - L:], shift, axis=1)
         pc = jnp.roll(positions[S - L:], shift)
-    cache = {"k": kc, "v": vc, "pos": pc}
+    # per-sequence position rows: every sequence in a prefill batch shares
+    # the layout, but decode advances each row independently (serving slots)
+    cache = {"k": kc, "v": vc, "pos": jnp.broadcast_to(pc, (B, pc.shape[0]))}
     return y, cache
 
 
@@ -333,37 +335,67 @@ def init_attn_cache(cfg, batch: int, cache_len: int, dtype) -> dict:
     return {
         "k": jnp.zeros((batch, L, kh, hd), dtype),
         "v": jnp.zeros((batch, L, kh, hd), dtype),
-        "pos": jnp.full((L,), -1, jnp.int32),
+        "pos": jnp.full((batch, L), -1, jnp.int32),
     }
 
 
-def decode_attention(cfg, p, x, cache, cur_index, *, lora=None,
-                     lora_scale=1.0, kv_chunk=2048, impl="naive",
-                     dense_impl: str = "einsum"):
-    """One-token decode: x (B, 1, d); cur_index scalar int32 (absolute).
+def decode_masked_attention(q, k, v, q_pos, k_pos, window: int = 0):
+    """Whole-score decode attention with PER-SLOT positions.
 
-    Writes the new KV at slot ``cur_index % L`` (ring buffer when windowed)
-    and attends over the whole cache with position-based masking.
+    q: (B, 1, H, D); k/v: (B, L, KH, D); q_pos (B,); k_pos (B, L) absolute
+    positions (-1 = empty).  The (B, H, 1, L) score einsum stays whole so
+    GSPMD can shard the cache sequence dim; it is also the exact oracle
+    for ``kernels.flash_attention.flash_decode`` — correct for ring-wrapped
+    windowed caches, where the length-masked kernel is not.
+    """
+    B, _, H, D = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    qr = q.reshape(B, 1, KH, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qr, k,
+                   preferred_element_type=jnp.float32) * D ** -0.5
+    m = (k_pos <= q_pos[:, None]) & (k_pos >= 0)
+    if window:
+        m &= (q_pos[:, None] - k_pos) < window
+    s = jnp.where(m[:, None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def decode_attention(cfg, p, x, cache, cur_index, *, lora=None,
+                     lora_scale=1.0, impl="naive",
+                     dense_impl: str = "einsum"):
+    """One-token decode: x (B, 1, d); cur_index absolute position, scalar
+    int32 OR a per-sequence (B,) vector (continuous-batching slots each at
+    their own position).
+
+    Writes the new KV at slot ``cur_index % L`` per sequence (ring buffer
+    when windowed) and attends over the whole cache.  ``impl="flash"``
+    routes through ``kernels.flash_attention.flash_decode`` — the split-K
+    Pallas kernel on TPU (per-slot live-length tile skipping), the same
+    masked einsum as "naive" elsewhere; ring-wrapped windowed caches are
+    not length-contiguous, so they always take the position-masked path.
     """
     B = x.shape[0]
     L = cache["k"].shape[1]
     q, k, v = _proj_qkv(cfg, p, x, lora, lora_scale, dense_impl)
-    pos = jnp.full((B, 1), cur_index, jnp.int32)
+    pos_vec = jnp.broadcast_to(jnp.asarray(cur_index, jnp.int32), (B,))
+    pos = pos_vec[:, None]
     if cfg.pos_emb == "rope":
         q = apply_rope(q, pos, cfg.rope_theta)
         k = apply_rope(k, pos, cfg.rope_theta)
-    slot = jnp.mod(cur_index, L)
-    kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                      (0, slot, 0, 0))
-    vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                      (0, slot, 0, 0))
-    pc = jax.lax.dynamic_update_slice(cache["pos"],
-                                      jnp.full((1,), cur_index, jnp.int32), (slot,))
-    # "naive" keeps the (B,H,1,L) score einsum whole so GSPMD can shard the
-    # cache sequence dim (distributed flash-decode); scores for Sq=1 are tiny.
-    q_pos = jnp.full((1,), cur_index, jnp.int32)
-    o = run_attention(q, kc, vc, q_pos, pc, impl=impl,
-                      window=cfg.attn_window, kv_chunk=min(kv_chunk, L))
+    bidx = jnp.arange(B)
+    slot = jnp.mod(pos_vec, L)
+    kc = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
+    vc = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+    pc = cache["pos"].at[bidx, slot].set(pos_vec)
+    if impl == "flash" and not cfg.attn_window:
+        from ..kernels.flash_attention import flash_decode
+        o = flash_decode(q, kc, vc, pos_vec + 1, window=0)
+    else:
+        o = decode_masked_attention(q, kc, vc, pos_vec, pc, cfg.attn_window)
     y = dense(o.reshape(B, 1, -1), p["wo"]["w"], p["wo"].get("b"),
               None if lora is None or "o" not in lora else lora["o"], lora_scale,
               impl=dense_impl)

@@ -40,6 +40,18 @@ def sample_logits(logits: jax.Array, key, sc: SampleConfig) -> jax.Array:
     return jax.random.categorical(key, logits).astype(jnp.int32)
 
 
+def sample_logits_per_key(logits: jax.Array, keys, sc: SampleConfig) -> jax.Array:
+    """logits: (B, V), keys: (B,) PRNG keys -> token ids (B,).
+
+    One independent key per row: a serving engine folds (request uid,
+    token index) into each slot's key, so a request's sampled tokens are a
+    pure function of the request — not of which slots happen to be live or
+    of arrival order."""
+    if sc.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.vmap(lambda l, k: sample_logits(l[None], k, sc)[0])(logits, keys)
+
+
 def generate(cfg, params, tokens, *, lora=None, rt: Runtime = Runtime(),
              max_new_tokens: int = 32, sc: SampleConfig = SampleConfig(),
              frontend_emb=None, key=None):

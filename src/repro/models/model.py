@@ -167,8 +167,13 @@ def loss_fn(cfg: ArchConfig, params: dict, lora, batch: dict, *,
 
 def prefill(cfg: ArchConfig, params: dict, tokens: jax.Array, *,
             lora=None, rt: Runtime = Runtime(), frontend_emb=None,
-            cache_len: int = 0):
-    """Build decode caches; returns (last-token logits (B, V), caches)."""
+            cache_len: int = 0, logit_index=None):
+    """Build decode caches; returns (last-token logits (B, V), caches).
+
+    ``logit_index`` (dynamic scalar, TEXT-relative) reads the logits at
+    that token index instead of the final one — bucket-padded serving
+    prompts put the true last prompt token before the padding tail.  With
+    ``frontend_emb`` the frontend prefix offset is added internally."""
     B = tokens.shape[0]
     S = tokens.shape[1] + (frontend_emb.shape[1] if frontend_emb is not None else 0)
     positions = jnp.arange(S, dtype=jnp.int32)
@@ -176,18 +181,27 @@ def prefill(cfg: ArchConfig, params: dict, tokens: jax.Array, *,
     x, caches, _ = stack_mod.apply_stack(cfg, params["layers"], x,
                                          positions=positions, lora=lora, rt=rt,
                                          mode="prefill", cache_len=cache_len)
-    x = apply_norm(cfg, x[:, -1:], params["final_norm"])
+    if logit_index is None:
+        x = x[:, -1:]
+    else:
+        F = frontend_emb.shape[1] if frontend_emb is not None else 0
+        x = jax.lax.dynamic_slice_in_dim(x, logit_index + F, 1, axis=1)
+    x = apply_norm(cfg, x, params["final_norm"])
     logits = unembed(cfg, params["embed"], x)[:, 0]
     return logits, caches
 
 
 def decode_step(cfg: ArchConfig, params: dict, token: jax.Array, caches,
                 cur_index, *, lora=None, rt: Runtime = Runtime()):
-    """One decode step.  token: (B, 1) int32; cur_index: scalar int32.
+    """One decode step.  token: (B, 1) int32; cur_index: scalar int32, or
+    a per-sequence (B,) vector when each sequence sits at its own absolute
+    position (continuous-batching slots).
 
     Returns (logits (B, V), new caches)."""
     B = token.shape[0]
-    positions = jnp.full((1,), cur_index, jnp.int32)
+    cur_index = jnp.asarray(cur_index, jnp.int32)
+    positions = (cur_index[:, None] if cur_index.ndim
+                 else jnp.full((1,), cur_index, jnp.int32))
     x = embed(cfg, params["embed"], token, positions)
     x, caches, _ = stack_mod.apply_stack(cfg, params["layers"], x,
                                          positions=positions, lora=lora, rt=rt,

@@ -28,8 +28,11 @@ class Runtime:
     dense_impl: str = "einsum"          # "einsum" | "fused" (kernels.lora_matmul)
     kv_chunk: int = 512
     q_chunk: int = 0                    # 0 = no query blocking
-    decode_kv_chunk: int = 2048
-    decode_attn_impl: str = "naive"     # "naive" shards the cache seq dim
+    # "naive" keeps the whole (B,H,1,L) score einsum (GSPMD shards the
+    # cache seq dim); "flash" routes decode through the split-K
+    # kernels.flash_attention.flash_decode dispatch (Pallas on TPU with
+    # per-slot live-length tile skipping, same masked einsum elsewhere)
+    decode_attn_impl: str = "naive"
     moe_group: int = 128
     capacity_factor: float = 1.25
     remat: bool = False                 # checkpoint each scan body (train)
@@ -55,6 +58,14 @@ def default_train_runtime() -> Runtime:
     cheap "dots" policy if rematerialization is switched on."""
     return Runtime(attn_impl="chunked", dense_impl="fused",
                    remat_policy="dots")
+
+
+def default_serve_runtime() -> Runtime:
+    """The serving fast path: chunked prefill attention, fused LoRA
+    projections, and flash-decode — every knob backend-dispatched, so on
+    CPU it degenerates to the exact einsum forms."""
+    return Runtime(attn_impl="chunked", dense_impl="fused",
+                   decode_attn_impl="flash")
 
 
 # ---------------------------------------------------------------------------
@@ -92,8 +103,7 @@ def apply_block(cfg, pat, p: dict, x, *, positions, lora, lora_scale, rt: Runtim
             m, cache_out = attn_mod.decode_attention(
                 cfg, p["mixer"], h, cache, cur_index,
                 lora=_mixer_lora(lora), lora_scale=lora_scale,
-                kv_chunk=rt.decode_kv_chunk, impl=rt.decode_attn_impl,
-                dense_impl=rt.dense_impl)
+                impl=rt.decode_attn_impl, dense_impl=rt.dense_impl)
         elif mode == "prefill":
             m, cache_out = attn_mod.self_attention(
                 cfg, p["mixer"], h, positions, lora=_mixer_lora(lora),

@@ -1,15 +1,36 @@
-"""Continuous-batching serving engine (vLLM-style, minimal but real).
+"""Continuous-batching serving engine (vLLM-style) with a fully in-graph
+fused decode step.
 
-Fixed-slot design: ``max_slots`` concurrent sequences share one KV cache of
-length ``max_len``.  Requests are admitted from a queue whenever a slot
-frees; admission runs a single-sequence prefill whose KV is copied into
-the slot; every engine step then decodes ONE token for all live slots in
-one jitted, slot-vmapped call (each slot at its OWN position — the
-per-slot `pos` arrays make the ring-buffer masks independent).  EOS or
-length-out frees the slot.
+Fixed-slot design: ``max_slots`` concurrent sequences share one KV cache
+of length ``max_len``; every cache leaf carries the slot axis at position
+1 (``(R, slots, ...)``), including the per-slot position rows — so slot
+writes, the batched decode, and admission are all plain indexed updates on
+one uniform pytree.
 
-This is the datacenter serving loop the paper's fine-tuned adapters deploy
-into; it reuses the exact decode path the dry-run lowers for decode_32k.
+The fused path (default) removes every per-token host round-trip the
+naive loop pays:
+
+* ``step()`` is ONE jitted, buffer-donated call: flash-decode all slots
+  at their own positions (``models.decode_step`` with a (B,) position
+  vector), sample IN-GRAPH, advance per-slot counters, and return
+  ``(next_tokens, done_mask, caches)`` — only two (slots,)-sized arrays
+  cross back to the host per token;
+* sampling keys are ``fold_in(fold_in(key, uid), token_index)`` per slot:
+  each request owns its RNG stream, so outputs are independent of arrival
+  order and slot occupancy (dead slots draw from their own dead stream,
+  never consuming a live request's randomness);
+* admission prefills into a power-of-two length bucket (compile count is
+  bounded by log2(max_len) for ANY prompt-length mix) and writes the
+  bucket's KV into the slot with per-slot ``dynamic_update_slice`` inside
+  jit — not the full-cache host copy the naive path does;
+* a slot whose cache fills (position reaching ``max_len``) is finished
+  and freed instead of silently wrapping the ring.
+
+``fused=False`` keeps the pre-PR execution shape (per-slot vmapped
+decode, host-side sampling, full-cache admission copy) as the measured
+baseline for the serving benchmark and the fused-vs-naive equivalence
+test; it shares the per-request RNG streams so both modes sample
+identically.
 """
 from __future__ import annotations
 
@@ -22,8 +43,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models import model as model_mod
-from ..models.generate import SampleConfig, sample_logits
-from ..models.stack import Runtime
+from ..models.generate import (SampleConfig, sample_logits,
+                               sample_logits_per_key)
+from ..models.stack import Runtime, default_serve_runtime
 
 
 @dataclass
@@ -42,93 +64,199 @@ def _is_pos(kp) -> bool:
     return str(getattr(last, "key", getattr(last, "idx", last))) == "pos"
 
 
+def bucket_len(n: int, max_len: int) -> int:
+    """Smallest power of two >= n (floor 8, capped at max_len): mixed
+    prompt lengths compile at most log2(max_len) prefill variants."""
+    b = 8
+    while b < n:
+        b *= 2
+    return min(b, max_len)
+
+
 class ServingEngine:
-    def __init__(self, cfg, params, *, lora=None,
-                 rt: Runtime = Runtime(attn_impl="naive"),
+    def __init__(self, cfg, params, *, lora=None, rt: Optional[Runtime] = None,
                  max_slots: int = 4, max_len: int = 256,
-                 sc: SampleConfig = SampleConfig(greedy=True), seed: int = 0):
-        self.cfg, self.params, self.lora, self.rt = cfg, params, lora, rt
+                 sc: SampleConfig = SampleConfig(greedy=True), seed: int = 0,
+                 fused: bool = True, prefill_buckets: bool = True):
+        if getattr(cfg, "frontend", None):
+            raise NotImplementedError(
+                "ServingEngine serves text-only requests; frontend archs "
+                "need a frontend_emb-aware admission path")
+        self.cfg, self.params, self.lora = cfg, params, lora
+        self.rt = rt if rt is not None else default_serve_runtime()
         self.max_slots, self.max_len, self.sc = max_slots, max_len, sc
+        self.fused = fused
+        # right-padded bucket prefill assumes pad entries can be masked out
+        # of an attention cache tail; recurrent (mamba) state and windowed
+        # rings have no such tail — those archs prefill at exact length
+        self.prefill_buckets = (prefill_buckets and not cfg.attn_window and
+                                all(p.mixer == "attention" for p in cfg.pattern))
         self.key = jax.random.key(seed)
 
-        base = model_mod.init_cache(cfg, max_slots, max_len, jnp.float32)
-        # tile the (R, L) position arrays per slot -> (R, max_slots, L)
-        self.caches = jax.tree_util.tree_map_with_path(
-            lambda kp, v: (jnp.broadcast_to(v[:, None], (v.shape[0],
-                                                         max_slots,
-                                                         v.shape[1])).copy()
-                           if _is_pos(kp) else v), base)
-
+        self.caches = model_mod.init_cache(cfg, max_slots, max_len, jnp.float32)
         self.queue: collections.deque[Request] = collections.deque()
         self.slots: List[Optional[Request]] = [None] * max_slots
-        self.positions = np.zeros(max_slots, np.int32)   # next write index
-        self.last_tok = np.zeros(max_slots, np.int32)
 
-        axes = jax.tree_util.tree_map_with_path(lambda kp, v: 1, self.caches)
+        # per-slot device state (fused path reads/writes these in-graph)
+        B = max_slots
+        self._last = jnp.zeros((B,), jnp.int32)
+        self._positions = jnp.zeros((B,), jnp.int32)   # next write index
+        self._live = jnp.zeros((B,), bool)
+        self._uids = jnp.full((B,), -1, jnp.int32)
+        self._ngen = jnp.zeros((B,), jnp.int32)
+        self._maxnew = jnp.zeros((B,), jnp.int32)
+        self._eos = jnp.full((B,), -1, jnp.int32)
+        # host-side mirrors for the legacy (fused=False) loop
+        self._np_positions = np.zeros(B, np.int64)
+        self._np_last = np.zeros(B, np.int64)
 
+        self._build_jits()
+
+    # ------------------------------------------------------------------
+    # compiled calls
+    # ------------------------------------------------------------------
+    def _build_jits(self) -> None:
+        cfg, rt, sc = self.cfg, self.rt, self.sc
+        max_len, B = self.max_len, self.max_slots
+        base_key = self.key
+
+        def _slot_keys(uids, ngen):
+            return jax.vmap(lambda u, n: jax.random.fold_in(
+                jax.random.fold_in(base_key, u), n))(uids, ngen)
+
+        # -- fused decode step: decode + sample + bookkeeping, one call --
+        def _step(params, lora, caches, last, positions, live, uids, ngen,
+                  maxnew, eos):
+            logits, caches = model_mod.decode_step(
+                cfg, params, last[:, None], caches, positions, lora=lora, rt=rt)
+            nxt = sample_logits_per_key(logits, _slot_keys(uids, ngen), sc)
+            nxt = jnp.where(live, nxt, 0)
+            ngen1 = ngen + live.astype(jnp.int32)
+            done = live & ((nxt == eos) | (ngen1 >= maxnew) |
+                           (positions + 1 >= max_len))
+            return (nxt, done, caches, jnp.where(live, nxt, last),
+                    positions + live.astype(jnp.int32), live & ~done, ngen1)
+
+        self._jit_step = jax.jit(_step, donate_argnums=(2, 3, 4, 5, 7))
+
+        # -- bucketed prefill: KV for one request + its first token ------
+        def _prefill(params, lora, tokens, true_len, uid):
+            logits, cache1 = model_mod.prefill(
+                cfg, params, tokens, lora=lora, rt=rt,
+                cache_len=tokens.shape[1], logit_index=true_len - 1)
+            k = jax.random.fold_in(jax.random.fold_in(base_key, uid), 0)
+            tok0 = sample_logits(logits, k, sc)[0]
+            return tok0, cache1
+
+        self._jit_prefill = jax.jit(_prefill)
+
+        # -- legacy full-cache prefill (naive admission path) ------------
+        def _prefill_full(params, lora, tokens, uid):
+            logits, cache1 = model_mod.prefill(cfg, params, tokens, lora=lora,
+                                               rt=rt, cache_len=max_len)
+            k = jax.random.fold_in(jax.random.fold_in(base_key, uid), 0)
+            return sample_logits(logits, k, sc)[0], cache1
+
+        self._jit_prefill_full = jax.jit(_prefill_full)
+
+        # -- in-graph slot admission: per-slot dynamic_update_slice ------
+        def _admit_write(caches, last, positions, live, uids, ngen, maxnew,
+                         eos, cache1, slot, tok0, true_len, uid, req_maxnew,
+                         req_eos):
+            def write(kp, big, one):
+                if _is_pos(kp):
+                    # one: (R, 1, Lb) — mark the padding tail (positions
+                    # >= true_len) empty, extend to the slot's full row
+                    row = jnp.where(one[:, 0] < true_len, one[:, 0], -1)
+                    row = jnp.pad(row, ((0, 0), (0, big.shape[2] - row.shape[1])),
+                                  constant_values=-1)
+                    return jax.lax.dynamic_update_slice(
+                        big, row[:, None], (0, slot, 0))
+                return jax.lax.dynamic_update_slice(
+                    big, one, (0, slot) + (0,) * (one.ndim - 2))
+
+            caches = jax.tree_util.tree_map_with_path(write, caches, cache1)
+            return (caches, last.at[slot].set(tok0),
+                    positions.at[slot].set(true_len), live.at[slot].set(True),
+                    uids.at[slot].set(uid), ngen.at[slot].set(1),
+                    maxnew.at[slot].set(req_maxnew), eos.at[slot].set(req_eos))
+
+        self._jit_admit = jax.jit(_admit_write,
+                                  donate_argnums=(0, 1, 2, 3, 4, 5, 6, 7))
+
+        # -- legacy decode: per-slot vmap, logits back to host -----------
         def _decode(params, lora, toks, caches, positions):
             def one(tok, cache_slot, pos):
-                cache_b = jax.tree_util.tree_map_with_path(
-                    lambda kp, v: v if _is_pos(kp) else v[:, None],
-                    cache_slot)
+                cache_b = jax.tree.map(lambda v: v[:, None], cache_slot)
                 logits, new_cache = model_mod.decode_step(
                     cfg, params, tok[None, None], cache_b, pos,
                     lora=lora, rt=rt)
-                new_slot = jax.tree_util.tree_map_with_path(
-                    lambda kp, v: v if _is_pos(kp) else v[:, 0],
-                    new_cache)
-                return logits[0], new_slot
+                return logits[0], jax.tree.map(lambda v: v[:, 0], new_cache)
 
-            return jax.vmap(one, in_axes=(0, axes, 0),
-                            out_axes=(0, axes))(toks, caches, positions)
+            return jax.vmap(one, in_axes=(0, 1, 0),
+                            out_axes=(0, 1))(toks, caches, positions)
 
         self._jit_decode = jax.jit(_decode)
-
-        def _prefill(params, lora, tokens):
-            logits, caches1 = model_mod.prefill(cfg, params, tokens,
-                                                lora=lora, rt=rt,
-                                                cache_len=max_len)
-            return logits[0], caches1
-
-        self._jit_prefill = jax.jit(_prefill)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
-    def _write_slot(self, s: int, cache1) -> None:
-        def copy(kp, big, one):
-            if _is_pos(kp):
-                return big.at[:, s].set(one)           # one: (R, L)
-            return big.at[:, s].set(one[:, 0])         # one: (R, 1, ...)
+    def prefill_compiles(self) -> int:
+        """Number of distinct prefill programs compiled so far (bounded by
+        the bucket count for mixed-length traffic)."""
+        fn = self._jit_prefill if self.fused else self._jit_prefill_full
+        return fn._cache_size()
 
-        self.caches = jax.tree_util.tree_map_with_path(copy, self.caches,
-                                                       cache1)
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+    def _admit_one(self, s: int, req: Request) -> bool:
+        """Prefill ``req`` and claim slot ``s``.  Returns False when the
+        request finished on its very first token (slot stays free)."""
+        P = len(req.prompt)
+        if P >= self.max_len:       # no room to decode even one token
+            req.done = True
+            return False
+        if self.fused:
+            Lb = bucket_len(P, self.max_len) if self.prefill_buckets else P
+            tokens = jnp.asarray(req.prompt + [0] * (Lb - P), jnp.int32)[None]
+            tok0_d, cache1 = self._jit_prefill(self.params, self.lora, tokens,
+                                               jnp.int32(P), jnp.int32(req.uid))
+        else:
+            tokens = jnp.asarray(req.prompt, jnp.int32)[None]
+            tok0_d, cache1 = self._jit_prefill_full(self.params, self.lora,
+                                                    tokens, jnp.int32(req.uid))
+        tok0 = int(tok0_d)
+        req.output.append(tok0)
+        if (tok0 == req.eos_id) or (req.max_new_tokens <= 1):
+            req.done = True
+            return False
+        if self.fused:
+            (self.caches, self._last, self._positions, self._live, self._uids,
+             self._ngen, self._maxnew, self._eos) = self._jit_admit(
+                self.caches, self._last, self._positions, self._live,
+                self._uids, self._ngen, self._maxnew, self._eos, cache1,
+                jnp.int32(s), tok0_d, jnp.int32(P), jnp.int32(req.uid),
+                jnp.int32(req.max_new_tokens), jnp.int32(req.eos_id))
+        else:
+            # pre-PR execution shape: copy the WHOLE cache tree per admit
+            self.caches = jax.tree.map(
+                lambda big, one: big.at[:, s].set(one[:, 0]),
+                self.caches, cache1)
+            self._np_positions[s] = P
+            self._np_last[s] = tok0
+        self.slots[s] = req
+        return True
 
     def _admit(self) -> None:
         for s in range(self.max_slots):
-            if self.slots[s] is not None or not self.queue:
-                continue
-            req = self.queue.popleft()
-            tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            logits, cache1 = self._jit_prefill(self.params, self.lora, tokens)
-            self.key, k = jax.random.split(self.key)
-            tok = int(sample_logits(logits[None], k, self.sc)[0])
-            req.output.append(tok)
-            self._write_slot(s, cache1)
-            self.slots[s] = req
-            self.positions[s] = len(req.prompt)
-            self.last_tok[s] = tok
-            self._maybe_finish(s, tok)
+            while self.slots[s] is None and self.queue:
+                if self._admit_one(s, self.queue.popleft()):
+                    break
 
-    def _maybe_finish(self, s: int, tok: int) -> None:
-        req = self.slots[s]
-        if req is None:
-            return
-        if (tok == req.eos_id) or (len(req.output) >= req.max_new_tokens):
-            req.done = True
-            self.slots[s] = None
-
+    # ------------------------------------------------------------------
+    # stepping
     # ------------------------------------------------------------------
     def step(self) -> int:
         """Admit + one decode round for all live slots.  Returns the number
@@ -137,18 +265,42 @@ class ServingEngine:
         live = [s for s in range(self.max_slots) if self.slots[s] is not None]
         if not live:
             return 0
-        toks = jnp.asarray(self.last_tok, jnp.int32)
-        pos = jnp.asarray(self.positions, jnp.int32)
-        logits, self.caches = self._jit_decode(self.params, self.lora, toks,
-                                               self.caches, pos)
-        self.key, k = jax.random.split(self.key)
-        nxt = np.asarray(sample_logits(logits, k, self.sc))
-        for s in live:
-            tok = int(nxt[s])
-            self.slots[s].output.append(tok)
-            self.positions[s] += 1
-            self.last_tok[s] = tok
-            self._maybe_finish(s, tok)
+        if self.fused:
+            (nxt, done, self.caches, self._last, self._positions, self._live,
+             self._ngen) = self._jit_step(
+                self.params, self.lora, self.caches, self._last,
+                self._positions, self._live, self._uids, self._ngen,
+                self._maxnew, self._eos)
+            nxt_h, done_h = np.asarray(nxt), np.asarray(done)
+            for s in live:
+                req = self.slots[s]
+                req.output.append(int(nxt_h[s]))
+                if done_h[s]:
+                    req.done = True
+                    self.slots[s] = None
+        else:
+            toks = jnp.asarray(self._np_last, jnp.int32)
+            pos = jnp.asarray(self._np_positions, jnp.int32)
+            logits, self.caches = self._jit_decode(self.params, self.lora,
+                                                   toks, self.caches, pos)
+            uids = jnp.asarray([r.uid if r is not None else -1
+                                for r in self.slots], jnp.int32)
+            ngen = jnp.asarray([len(r.output) if r is not None else 0
+                                for r in self.slots], jnp.int32)
+            keys = jax.vmap(lambda u, n: jax.random.fold_in(
+                jax.random.fold_in(self.key, u), n))(uids, ngen)
+            nxt = np.asarray(sample_logits_per_key(logits, keys, self.sc))
+            for s in live:
+                req = self.slots[s]
+                tok = int(nxt[s])
+                req.output.append(tok)
+                self._np_positions[s] += 1
+                self._np_last[s] = tok
+                if (tok == req.eos_id) or \
+                        (len(req.output) >= req.max_new_tokens) or \
+                        (self._np_positions[s] >= self.max_len):
+                    req.done = True
+                    self.slots[s] = None
         return len(live)
 
     def run(self, max_steps: int = 10_000) -> None:
