@@ -1,0 +1,67 @@
+"""Resource-allocator benchmarks: BCD wall time (memoized vs cold) and
+homogeneous-vs-heterogeneous modeled training delay.
+
+Rows land in BENCH_resource.json (archived by the CI kernel-parity job) so
+allocator-speed and allocation-quality regressions are diffable per commit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.configs import DEFAULT_SYSTEM, get_arch
+from repro.core import (Problem, bcd_minimize_delay,
+                        bcd_minimize_delay_per_client, objective,
+                        sample_clients)
+
+
+def _timed(fn, repeats: int = 3):
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def main(emit) -> None:
+    cfg = get_arch("gpt2-s")
+    envs = tuple(sample_clients(DEFAULT_SYSTEM, 0))
+
+    def fresh(memoize=True, sys_cfg=DEFAULT_SYSTEM, envs=envs):
+        return Problem(cfg=cfg, sys_cfg=sys_cfg, envs=envs, seq_len=512,
+                       batch=16, local_steps=12, memoize=memoize)
+
+    # ---- BCD wall time: memoized sw/pair grid vs cold ---------------------
+    (alloc, hist), t_memo = _timed(lambda: bcd_minimize_delay(fresh()))
+    (_, hist_nm), t_cold = _timed(
+        lambda: bcd_minimize_delay(fresh(memoize=False)))
+    assert hist[-1] == hist_nm[-1], "memoization changed the BCD result"
+    emit("resource/bcd_wall_memoized", t_memo * 1e6,
+         f"T*={hist[-1]:.0f}s")
+    emit("resource/bcd_wall_cold", t_cold * 1e6,
+         f"memoization_speedup={t_cold / max(t_memo, 1e-9):.2f}x")
+
+    # ---- homogeneous vs per-client modeled delay --------------------------
+    # paper Table II scenario: wireless-bound, heterogeneity is a wash;
+    # edge scenario (wide client compute spread, loaded 1 GHz server):
+    # per-client splits unload the pooled server pass
+    edge_sys = dataclasses.replace(DEFAULT_SYSTEM, total_bandwidth_hz=50e6,
+                                   f_server_hz=1.0e9,
+                                   f_client_hz_range=(0.3e9, 3.0e9))
+    edge_envs = tuple(sample_clients(edge_sys, 0))
+    for name, p in (("table2", fresh()),
+                    ("edge", fresh(sys_cfg=edge_sys, envs=edge_envs))):
+        g_alloc, g_hist = bcd_minimize_delay(p)
+        (h_alloc, h_hist), t_pc = _timed(
+            lambda p=p: bcd_minimize_delay_per_client(p), repeats=1)
+        assert h_hist[-1] <= objective(p, g_alloc) * (1 + 1e-9)
+        gain = 100.0 * (1.0 - h_hist[-1] / g_hist[-1])
+        emit(f"resource/delay_global_{name}", g_hist[-1] * 1e6,
+             f"l={g_alloc.ell_c},r={g_alloc.rank}")
+        emit(f"resource/delay_per_client_{name}", h_hist[-1] * 1e6,
+             f"gain={gain:.1f}%,ell_k={'/'.join(map(str, h_alloc.ell_k))},"
+             f"r_k={'/'.join(map(str, h_alloc.rank_k))}")
+        emit(f"resource/bcd_per_client_wall_{name}", t_pc * 1e6,
+             f"sweeps={len(h_hist)}")

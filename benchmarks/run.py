@@ -8,6 +8,7 @@
   kernels bench_kernels      kernel twins micro-times + traffic accounting
   serving bench_serving      fused vs naive engine tokens/sec + compiles
   roofline bench_roofline    per (arch x shape x mesh) roofline rows
+  resource bench_resource    BCD wall time + homogeneous-vs-hetero delay
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only table4,fig5 ...]
 """
@@ -20,7 +21,8 @@ import time
 import traceback
 
 from . import (bench_complexity, bench_convergence, bench_kernels,
-               bench_latency, bench_ppl, bench_roofline, bench_serving)
+               bench_latency, bench_ppl, bench_resource, bench_roofline,
+               bench_serving)
 
 SUITES = {
     "table3": bench_complexity.main,
@@ -30,6 +32,7 @@ SUITES = {
     "kernels": bench_kernels.main,
     "serving": bench_serving.main,
     "roofline": bench_roofline.main,
+    "resource": bench_resource.main,
 }
 
 
@@ -77,6 +80,14 @@ def main() -> None:
             json.dump({"unix_time": int(time.time()), "rows": serving}, f,
                       indent=2)
         print(f"wrote BENCH_serving.json ({len(serving)} rows)",
+              file=sys.stderr)
+
+    resource = [r for r in rows if r["name"].startswith("resource/")]
+    if resource:
+        with open("BENCH_resource.json", "w") as f:
+            json.dump({"unix_time": int(time.time()), "rows": resource}, f,
+                      indent=2)
+        print(f"wrote BENCH_resource.json ({len(resource)} rows)",
               file=sys.stderr)
 
 

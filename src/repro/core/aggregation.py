@@ -41,6 +41,46 @@ def fedavg_stacked(stacked: Any, weights: jax.Array) -> Any:
     return jax.tree.map(_avg, stacked)
 
 
+def fedavg_het(stacked: Any, weights: jax.Array, masks: Any) -> Any:
+    """Rank-aware FedAvg over zero-padded heterogeneous client adapters.
+
+    ``masks`` is the pytree produced by ``core.lora.client_slot_masks`` —
+    per-client 0/1 occupancy of each (repeat, rank-slot), broadcastable
+    against the K-stacked leaves.  Each slot is averaged slot-wise over the
+    clients that actually own it (zero-pad aggregation): the weighted sum
+    of live entries normalized by the weight mass of the owners, so a
+    rank-2 client never dilutes slots only rank-8 clients train.  Slots
+    owned by no client come back exactly zero.
+
+    With ``masks=None`` (every client at full rank/depth) this IS
+    ``fedavg_stacked`` — bit-identical, same graph.
+    """
+    if masks is None:
+        return fedavg_stacked(stacked, weights)
+    w = jnp.asarray(weights, jnp.float32)
+
+    def _avg(v, m):
+        wk = w.reshape((-1,) + (1,) * (v.ndim - 1))
+        wm = wk * m.astype(jnp.float32)                  # (K, ..slot..)
+        num = jnp.sum(wm * v.astype(jnp.float32), axis=0)
+        den = jnp.sum(wm, axis=0)
+        avg = jnp.where(den > 0, num / jnp.maximum(den, 1e-12), 0.0)
+        return avg.astype(v.dtype)
+
+    return jax.tree.map(_avg, stacked, masks)
+
+
+def broadcast_het(global_tree: Any, num_clients: int, masks: Any) -> Any:
+    """Broadcast + per-client truncation: every client receives the global
+    adapter with its dead slots (rank > r_k, repeats >= rep_k) re-zeroed,
+    so the padded math stays exact through the next local steps.  With
+    ``masks=None`` this is ``broadcast_stacked``."""
+    stacked = broadcast_stacked(global_tree, num_clients)
+    if masks is None:
+        return stacked
+    return jax.tree.map(lambda v, m: v * m.astype(v.dtype), stacked, masks)
+
+
 def broadcast_stacked(global_tree: Any, num_clients: int) -> Any:
     """Federated server -> clients, stacked form: global adapter replicated
     along a new leading K axis (in-graph counterpart of :func:`broadcast`)."""

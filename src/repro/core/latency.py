@@ -91,6 +91,84 @@ def t_lora_upload(sw: SplitWorkload, rate_bps: float) -> float:
 
 
 # ---------------------------------------------------------------------------
+# heterogeneous fleets: per-client (ell_k, r_k) — each client carries its
+# own SplitWorkload; the pooled server pass sums each client's remaining
+# layers instead of K copies of one global split
+# ---------------------------------------------------------------------------
+
+def t_server_fp_het(sws: Sequence[SplitWorkload], sys_cfg: SystemConfig,
+                    b: int) -> float:
+    """(11) with per-client server-side workloads: client k's samples run
+    layers [ell_k, L), so the pooled FP is a sum, not K x one term."""
+    return (b * sys_cfg.kappa_server / sys_cfg.f_server_hz
+            * sum(sw.phi_s_f + sw.dphi_s_f for sw in sws))
+
+
+def t_server_bp_het(sws: Sequence[SplitWorkload], sys_cfg: SystemConfig,
+                    b: int) -> float:
+    return (b * sys_cfg.kappa_server / sys_cfg.f_server_hz
+            * sum(sw.phi_s_b + sw.dphi_s_b for sw in sws))
+
+
+def het_local_round_latency(sws: Sequence[SplitWorkload],
+                            envs: Sequence[ClientEnv],
+                            rates_main: Sequence[float],
+                            sys_cfg: SystemConfig, b: int) -> float:
+    """(16) with per-client splits/ranks."""
+    t1 = max(t_client_fp(sw, e, b) + t_act_upload(sw, r, b)
+             for sw, e, r in zip(sws, envs, rates_main))
+    t2 = max(t_client_bp(sw, e, b) for sw, e in zip(sws, envs))
+    return (t1 + t_server_fp_het(sws, sys_cfg, b)
+            + t_server_bp_het(sws, sys_cfg, b) + t2)
+
+
+def het_total_latency(sws: Sequence[SplitWorkload], envs: Sequence[ClientEnv],
+                      rates_main: Sequence[float], rates_fed: Sequence[float],
+                      sys_cfg: SystemConfig, b: int, local_steps: int,
+                      global_rounds: float) -> float:
+    """(17) with per-client workloads; ``global_rounds`` already reflects
+    the fleet's convergence behaviour (the caller picks E, e.g.
+    max_k E(r_k))."""
+    t_local = het_local_round_latency(sws, envs, rates_main, sys_cfg, b)
+    t3 = max(t_lora_upload(sw, r) for sw, r in zip(sws, rates_fed))
+    return global_rounds * (local_steps * t_local + t3)
+
+
+def latency_report_het(cfg: ArchConfig, sys_cfg: SystemConfig,
+                       envs: Sequence[ClientEnv], rates_main, rates_fed,
+                       ells: Sequence[int], ranks: Sequence[int],
+                       seq_len: int, b: int, local_steps: int,
+                       global_rounds: float) -> dict:
+    """Per-client counterpart of :func:`latency_report` — same keys, so the
+    launch.engine modeled wall clock consumes either."""
+    ws = layer_workloads(cfg, seq_len)
+    sws = [split_workload(cfg, ws, int(e), int(r), seq_len)
+           for e, r in zip(ells, ranks)]
+    per_client = [
+        {"split": int(ell), "rank": int(rk),
+         "t_fp": t_client_fp(sw, e, b),
+         "t_up": t_act_upload(sw, r, b),
+         "t_bp": t_client_bp(sw, e, b),
+         "t_fed": t_lora_upload(sw, rf)}
+        for sw, ell, rk, e, r, rf in zip(sws, ells, ranks, envs, rates_main,
+                                         rates_fed)
+    ]
+    return {
+        "split": [int(e) for e in ells],
+        "rank": [int(r) for r in ranks],
+        "t1": max(c["t_fp"] + c["t_up"] for c in per_client),
+        "t2": max(c["t_bp"] for c in per_client),
+        "t3": max(c["t_fed"] for c in per_client),
+        "t_server_fp": t_server_fp_het(sws, sys_cfg, b),
+        "t_server_bp": t_server_bp_het(sws, sys_cfg, b),
+        "t_local": het_local_round_latency(sws, envs, rates_main, sys_cfg, b),
+        "total": het_total_latency(sws, envs, rates_main, rates_fed, sys_cfg,
+                                   b, local_steps, global_rounds),
+        "per_client": per_client,
+    }
+
+
+# ---------------------------------------------------------------------------
 # eqs. (16)-(17)
 # ---------------------------------------------------------------------------
 

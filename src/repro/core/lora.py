@@ -11,6 +11,7 @@ from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def merge_adapter(w: jax.Array, lora: dict, scale: float) -> jax.Array:
@@ -49,6 +50,64 @@ def adapter_bytes_per_layer(cfg, rank: int, bytes_per_param: int = 4) -> list:
                 n += rank * (d_in + d_out)
         out.append(n * bytes_per_param)
     return out
+
+
+def client_slot_masks(client_template: Any, ranks, rep_counts=None):
+    """Per-client 0/1 masks over the padded adapter slots of a K-stacked
+    client tree — the rank-heterogeneity bookkeeping of the hetero fleet.
+
+    ``client_template``: the client-side adapter tree for ONE client
+    (leaves ``a: (R_c, r_max, d_in)`` / ``b: (R_c, d_out, r_max)``, stacked
+    over pattern repeats) — shapes only are read, so an ``eval_shape``
+    template works.  ``ranks``: per-client LoRA ranks r_k (len K);
+    ``rep_counts``: per-client split boundary in repeat units (client k
+    owns repeats [0, rep_k)), or None for a uniform split.
+
+    Slot (rep, s) of client k is live iff rep < rep_k and s < r_k.  The
+    returned tree matches the template's structure with float32 leaves of
+    shape (K, R_c, r_max, 1) for "a" and (K, R_c, 1, r_max) for "b",
+    broadcastable against the K-stacked adapters, their gradients, and
+    their optimizer moments.  Returns None when nothing is masked (every
+    client at full rank and full depth) so callers can keep the exact
+    homogeneous code path.
+    """
+    ranks = tuple(int(r) for r in ranks)
+    K = len(ranks)
+    reps = (None if rep_counts is None
+            else tuple(int(c) for c in rep_counts))
+    if reps is not None and len(reps) != K:
+        raise ValueError("rep_counts and ranks disagree on K")
+
+    leaves = jax.tree.leaves(client_template)
+    if not leaves:
+        return None
+    full_depth = reps is None or all(c >= leaves[0].shape[0] for c in reps)
+    r_max = max(ranks)
+    if full_depth and all(r == r_max for r in ranks):
+        return None
+    if full_depth:
+        reps = None
+
+    rank_col = np.asarray(ranks)[:, None]
+
+    def _mask(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name not in ("a", "b"):
+            raise ValueError(f"unexpected adapter leaf {name!r}")
+        R_c = int(leaf.shape[0])
+        r = int(leaf.shape[1] if name == "a" else leaf.shape[-1])
+        if r < r_max:
+            raise ValueError(
+                f"adapter template rank {r} < max client rank {r_max}; "
+                "build the template at rank max(r_k)")
+        rep_ok = (np.ones((K, R_c), bool) if reps is None
+                  else np.arange(R_c)[None, :] < np.asarray(reps)[:, None])
+        slot_ok = np.arange(r)[None, :] < rank_col          # (K, r)
+        m = rep_ok[:, :, None] & slot_ok[:, None, :]        # (K, R_c, r)
+        m = m[..., None] if name == "a" else m[:, :, None, :]
+        return jnp.asarray(m, jnp.float32)
+
+    return jax.tree_util.tree_map_with_path(_mask, client_template)
 
 
 def split_tree(tree: Any, rep_split: int) -> Tuple[Any, Any]:

@@ -23,8 +23,9 @@ from ..configs.base import ArchConfig
 from ..configs.system import SystemConfig
 from .channel import ClientEnv, min_power_for_rate, rate_for_power, subchannel_bandwidths
 from .convergence import ConvergenceModel, DEFAULT_E
-from .latency import (SplitWorkload, split_workload, t_client_bp, t_client_fp,
-                      t_server_bp, t_server_fp)
+from .latency import (SplitWorkload, het_local_round_latency, split_workload,
+                      t_client_bp, t_client_fp, t_lora_upload, t_server_bp,
+                      t_server_fp)
 from .split import valid_splits
 from .workload import layer_workloads
 
@@ -65,7 +66,13 @@ class Allocation:
 
 @dataclass(frozen=True)
 class Problem:
-    """Everything fixed during one resource-allocation episode."""
+    """Everything fixed during one resource-allocation episode.
+
+    ``sw``/``workloads`` are memoized per instance (``memoize=False``
+    disables, for benchmarking the saving): BCD evaluates the same
+    (ell, rank) cells hundreds of times per run, and every ``sw`` used to
+    rebuild the full per-layer workload table from scratch.
+    ``cache_stats()`` reports hit rates."""
 
     cfg: ArchConfig
     sys_cfg: SystemConfig
@@ -75,10 +82,37 @@ class Problem:
     local_steps: int
     e_model: ConvergenceModel = DEFAULT_E
     rank_candidates: Tuple[int, ...] = (1, 2, 4, 6, 8)
+    memoize: bool = True
+
+    def __post_init__(self):
+        object.__setattr__(self, "_ws_cache", None)
+        object.__setattr__(self, "_sw_cache", {})
+        object.__setattr__(self, "_pair_cache", {})
+        object.__setattr__(self, "_stats", {"sw_hits": 0, "sw_misses": 0,
+                                            "pair_hits": 0, "pair_misses": 0})
+
+    def workloads(self):
+        if not self.memoize:
+            return layer_workloads(self.cfg, self.seq_len)
+        if self._ws_cache is None:
+            object.__setattr__(self, "_ws_cache",
+                               layer_workloads(self.cfg, self.seq_len))
+        return self._ws_cache
 
     def sw(self, ell_c: int, rank: int) -> SplitWorkload:
-        ws = layer_workloads(self.cfg, self.seq_len)
-        return split_workload(self.cfg, ws, ell_c, rank, self.seq_len)
+        key = (int(ell_c), int(rank))
+        if self.memoize and key in self._sw_cache:
+            self._stats["sw_hits"] += 1
+            return self._sw_cache[key]
+        out = split_workload(self.cfg, self.workloads(), key[0], key[1],
+                             self.seq_len)
+        if self.memoize:
+            self._stats["sw_misses"] += 1
+            self._sw_cache[key] = out
+        return out
+
+    def cache_stats(self) -> dict:
+        return dict(self._stats)
 
 
 # ---------------------------------------------------------------------------
@@ -111,7 +145,9 @@ def _uniform_power(prob: Problem, n_assigned_bw: np.ndarray) -> np.ndarray:
     return np.full(K, min(prob.sys_cfg.p_max_w, prob.sys_cfg.p_th_w / K))
 
 
-def greedy_subchannels(prob: Problem, ell_c: int, rank: int) -> Allocation:
+def _greedy_subchannels_core(prob: Problem, sws: "List[SplitWorkload]"):
+    """Algorithm 2 on per-client workloads; returns (assign_m, assign_f,
+    p_k).  Homogeneous callers pass K copies of one SplitWorkload."""
     sys_cfg, envs = prob.sys_cfg, prob.envs
     K = len(envs)
     bws_m = subchannel_bandwidths(sys_cfg, "main")
@@ -119,7 +155,6 @@ def greedy_subchannels(prob: Problem, ell_c: int, rank: int) -> Allocation:
     M, N = len(bws_m), len(bws_f)
     assign_m = np.full(M, -1)
     assign_f = np.full(N, -1)
-    sw = prob.sw(ell_c, rank)
     b = prob.batch
     p_k = np.full(K, min(sys_cfg.p_max_w, sys_cfg.p_th_w / K))
 
@@ -137,27 +172,32 @@ def greedy_subchannels(prob: Problem, ell_c: int, rank: int) -> Allocation:
     def t_main(k):
         bw = bws_m[assign_m == k].sum()
         r = rate_for_power(p_k[k], bw, envs[k].gain_main, sys_cfg.noise_psd_w_hz)
-        return t_client_fp(sw, envs[k], b) + b * sw.gamma_s * 8.0 / max(r, 1e-9)
+        return (t_client_fp(sws[k], envs[k], b)
+                + b * sws[k].gamma_s * 8.0 / max(r, 1e-9))
 
     def t_fed(k):
         bw = bws_f[assign_f == k].sum()
         r = rate_for_power(p_k[k], bw, envs[k].gain_fed, sys_cfg.noise_psd_w_hz)
-        return sw.dtheta_c * 8.0 / max(r, 1e-9)
+        return sws[k].dtheta_c * 8.0 / max(r, 1e-9)
 
     # ---- Phase 2: feed the straggler ------------------------------------
     cand = set(range(K))
     for i in sorted(free_m, key=lambda i: -bws_m[i]):
         if not cand:
             break
-        n = max(cand, key=t_main)
-        assign_m[i] = n
+        assign_m[i] = max(cand, key=t_main)
     cand = set(range(K))
     for i in sorted(free_f, key=lambda i: -bws_f[i]):
         if not cand:
             break
-        n = max(cand, key=t_fed)
-        assign_f[i] = n
+        assign_f[i] = max(cand, key=t_fed)
+    return assign_m, assign_f, p_k
 
+
+def greedy_subchannels(prob: Problem, ell_c: int, rank: int) -> Allocation:
+    sw = prob.sw(ell_c, rank)
+    assign_m, assign_f, p_k = _greedy_subchannels_core(
+        prob, [sw] * len(prob.envs))
     return Allocation(assign_main=assign_m, assign_fed=assign_f,
                       power_main=p_k.copy(), power_fed=p_k.copy(),
                       ell_c=ell_c, rank=rank)
@@ -293,14 +333,57 @@ def solve_power_control_slsqp(prob: Problem, alloc: Allocation) -> Allocation:
 
 
 # ---------------------------------------------------------------------------
-# P3 / P4: exhaustive searches
+# P3 / P4: exhaustive searches over the (ell, rank) objective grid
 # ---------------------------------------------------------------------------
+
+def _eval_pair(prob: Problem, alloc: Allocation, ell: int, rank: int
+               ) -> Tuple[Allocation, float]:
+    """Power-control + objective for one (ell, rank) cell, memoized on the
+    current subchannel assignment: the P3/P4 sweeps of consecutive BCD
+    iterations revisit the same cells (the assignment usually stabilises
+    after a couple of iterations), so each cell's convex power solve runs
+    once per episode instead of once per sweep."""
+    key = None
+    if prob.memoize:
+        key = (alloc.assign_main.tobytes(), alloc.assign_fed.tobytes(),
+               int(ell), int(rank))
+        hit = prob._pair_cache.get(key)
+        if hit is not None:
+            prob._stats["pair_hits"] += 1
+            p_main, p_fed, t = hit
+            return replace(alloc, ell_c=int(ell), rank=int(rank),
+                           power_main=p_main.copy(),
+                           power_fed=p_fed.copy()), t
+    cand = solve_power_control(prob, replace(alloc, ell_c=int(ell),
+                                             rank=int(rank)))
+    t = objective(prob, cand)
+    if key is not None:
+        prob._stats["pair_misses"] += 1
+        prob._pair_cache[key] = (cand.power_main.copy(),
+                                 cand.power_fed.copy(), t)
+    return cand, t
+
+
+def objective_grid(prob: Problem, alloc: Allocation) -> dict:
+    """The full (ell, rank) -> modeled-delay grid under ``alloc``'s
+    subchannel assignment (each cell with its own optimal power)."""
+    return {(ell, r): _eval_pair(prob, alloc, ell, r)[1]
+            for ell in valid_splits(prob.cfg)
+            for r in prob.rank_candidates}
+
+
+def best_global_pair(prob: Problem, alloc: Allocation
+                     ) -> Tuple[Allocation, float]:
+    """Exhaustive best single (ell, rank) for the whole fleet."""
+    grid = objective_grid(prob, alloc)
+    (ell, r), t = min(grid.items(), key=lambda kv: kv[1])
+    return _eval_pair(prob, alloc, ell, r)[0], t
+
 
 def search_split(prob: Problem, alloc: Allocation) -> Allocation:
     best, best_t = alloc, objective(prob, alloc)
     for ell in valid_splits(prob.cfg):
-        cand = solve_power_control(prob, replace(alloc, ell_c=ell))
-        t = objective(prob, cand)
+        cand, t = _eval_pair(prob, alloc, ell, alloc.rank)
         if t < best_t:
             best, best_t = cand, t
     return best
@@ -309,8 +392,7 @@ def search_split(prob: Problem, alloc: Allocation) -> Allocation:
 def search_rank(prob: Problem, alloc: Allocation) -> Allocation:
     best, best_t = alloc, objective(prob, alloc)
     for r in prob.rank_candidates:
-        cand = solve_power_control(prob, replace(alloc, rank=r))
-        t = objective(prob, cand)
+        cand, t = _eval_pair(prob, alloc, alloc.ell_c, r)
         if t < best_t:
             best, best_t = cand, t
     return best
@@ -344,6 +426,156 @@ def bcd_minimize_delay(prob: Problem, *, ell0: Optional[int] = None,
 
 
 # ---------------------------------------------------------------------------
+# per-client (ell_k, r_k): the heterogeneous extension of problem (18)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class HeteroAllocation(Allocation):
+    """Allocation with per-client split points and LoRA ranks.
+
+    ``ell_k``/``rank_k`` are (K,) int arrays; the scalar ``ell_c``/``rank``
+    fields hold max() views for homogeneous consumers.  Feed to
+    ``SflLLM.from_allocation`` to train the mixed fleet it describes."""
+
+    ell_k: np.ndarray = None
+    rank_k: np.ndarray = None
+
+
+def _het_sws(prob: Problem, ells, ranks) -> List[SplitWorkload]:
+    return [prob.sw(int(e), int(r)) for e, r in zip(ells, ranks)]
+
+
+def objective_het(prob: Problem, alloc: HeteroAllocation) -> float:
+    """(17) with per-client workloads.  The round count E models the
+    global adapter's convergence under zero-pad slot-wise aggregation:
+    every client contributes to the slots it owns, so the fleet behaves
+    like its average capacity, E = mean_k E(r_k) (exactly E(r) when ranks
+    are uniform, so the homogeneous objective embeds unchanged)."""
+    ells, ranks = alloc.ell_k, alloc.rank_k
+    sws = _het_sws(prob, ells, ranks)
+    b = prob.batch
+    r_main = alloc.rates_main(prob.sys_cfg, prob.envs)
+    r_fed = alloc.rates_fed(prob.sys_cfg, prob.envs)
+    t_local = het_local_round_latency(sws, prob.envs, r_main, prob.sys_cfg, b)
+    t3 = max(t_lora_upload(sw, r) for sw, r in zip(sws, r_fed))
+    e_rounds = float(np.mean([prob.e_model(int(r)) for r in ranks]))
+    return e_rounds * (prob.local_steps * t_local + t3)
+
+
+def greedy_subchannels_het(prob: Problem, ells, ranks) -> HeteroAllocation:
+    """Algorithm 2 with per-client workloads: straggler times use each
+    client's own (ell_k, r_k)."""
+    assign_m, assign_f, p_k = _greedy_subchannels_core(
+        prob, _het_sws(prob, ells, ranks))
+    return HeteroAllocation(
+        assign_main=assign_m, assign_fed=assign_f,
+        power_main=p_k.copy(), power_fed=p_k.copy(),
+        ell_c=int(np.max(ells)), rank=int(np.max(ranks)),
+        ell_k=np.asarray(ells, int).copy(),
+        rank_k=np.asarray(ranks, int).copy())
+
+
+def solve_power_control_het(prob: Problem, alloc: HeteroAllocation
+                            ) -> HeteroAllocation:
+    """P2 with per-client uplink payloads: bits follow each client's own
+    split activation Gamma_s(ell_k) and adapter volume DeltaTheta(ell_k, r_k)."""
+    sws = _het_sws(prob, alloc.ell_k, alloc.rank_k)
+    envs, sys_cfg, b = prob.envs, prob.sys_cfg, prob.batch
+    K = len(envs)
+    noise = sys_cfg.noise_psd_w_hz
+
+    compute = np.array([t_client_fp(sw, e, b) for sw, e in zip(sws, envs)])
+    bits_act = np.array([b * sw.gamma_s * 8.0 for sw in sws])
+    _, p_main = _solve_minmax_rate(compute, bits_act, alloc.bw_main(sys_cfg),
+                                   np.array([e.gain_main for e in envs]),
+                                   noise, sys_cfg.p_max_w, sys_cfg.p_th_w)
+
+    bits_lora = np.array([sw.dtheta_c * 8.0 for sw in sws])
+    _, p_fed = _solve_minmax_rate(np.zeros(K), bits_lora, alloc.bw_fed(sys_cfg),
+                                  np.array([e.gain_fed for e in envs]),
+                                  noise, sys_cfg.p_max_w, sys_cfg.p_th_w)
+    return replace(alloc, power_main=p_main, power_fed=p_fed)
+
+
+def refine_per_client(prob: Problem, alloc: HeteroAllocation, *,
+                      max_sweeps: int = 3, verbose: bool = False
+                      ) -> Tuple[HeteroAllocation, List[float]]:
+    """Greedy per-client coordinate descent on (ell_k, r_k): sweep the
+    clients, trying every (split, rank) pair for one client with the rest
+    frozen (power re-solved per trial); accept only strict improvements,
+    re-greedy the subchannels between sweeps.  Monotone by construction,
+    so the result is never worse than its (usually homogeneous) seed."""
+    best = solve_power_control_het(prob, alloc)
+    best_t = objective_het(prob, best)
+    hist = [best_t]
+    splits = valid_splits(prob.cfg)
+    for sweep in range(max_sweeps):
+        improved = False
+        for k in range(len(prob.envs)):
+            for ell in splits:
+                for r in prob.rank_candidates:
+                    if (ell == best.ell_k[k] and r == best.rank_k[k]):
+                        continue
+                    ell_k = best.ell_k.copy()
+                    rank_k = best.rank_k.copy()
+                    ell_k[k], rank_k[k] = ell, r
+                    cand = replace(best, ell_k=ell_k, rank_k=rank_k,
+                                   ell_c=int(ell_k.max()),
+                                   rank=int(rank_k.max()))
+                    cand = solve_power_control_het(prob, cand)
+                    t = objective_het(prob, cand)
+                    if t < best_t:
+                        best, best_t, improved = cand, t, True
+        # new workloads may want a new straggler-feeding assignment
+        cand = greedy_subchannels_het(prob, best.ell_k, best.rank_k)
+        cand = solve_power_control_het(prob, cand)
+        t = objective_het(prob, cand)
+        if t < best_t:
+            best, best_t, improved = cand, t, True
+        hist.append(best_t)
+        if verbose:
+            print(f"per-client sweep {sweep}: T = {best_t:.3f}s "
+                  f"(ell_k={best.ell_k.tolist()}, r_k={best.rank_k.tolist()})")
+        if not improved:
+            break
+    return best, hist
+
+
+def bcd_minimize_delay_per_client(prob: Problem, *, rank0: int = 4,
+                                  eps: float = 1e-6, max_iters: int = 20,
+                                  max_sweeps: int = 3, verbose: bool = False
+                                  ) -> Tuple[HeteroAllocation, List[float]]:
+    """Algorithm 3 extended with per-client (ell_k, r_k): run the global
+    BCD, anchor on the exhaustive best single pair, then greedy per-client
+    refinement.  The seed is the best global-pair allocation, so the
+    heterogeneous result is ≤ it by construction."""
+    alloc, hist = bcd_minimize_delay(prob, rank0=rank0, eps=eps,
+                                     max_iters=max_iters, verbose=verbose)
+    anchor, t_anchor = best_global_pair(prob, alloc)
+    if t_anchor < objective(prob, alloc):
+        alloc = anchor
+    K = len(prob.envs)
+    seed = HeteroAllocation(
+        assign_main=alloc.assign_main.copy(),
+        assign_fed=alloc.assign_fed.copy(),
+        power_main=alloc.power_main.copy(),
+        power_fed=alloc.power_fed.copy(),
+        ell_c=alloc.ell_c, rank=alloc.rank,
+        ell_k=np.full(K, alloc.ell_c), rank_k=np.full(K, alloc.rank))
+    best, hist2 = refine_per_client(prob, seed, max_sweeps=max_sweeps,
+                                    verbose=verbose)
+    return best, hist + hist2
+
+
+def total_delay(prob: Problem, alloc: Allocation) -> float:
+    """Objective dispatch: per-client when the allocation carries
+    ``ell_k``/``rank_k``, the paper's global form otherwise."""
+    if getattr(alloc, "ell_k", None) is not None:
+        return objective_het(prob, alloc)
+    return objective(prob, alloc)
+
+
+# ---------------------------------------------------------------------------
 # baselines a-d (Section VII-C)
 # ---------------------------------------------------------------------------
 
@@ -355,13 +587,15 @@ def random_allocation(prob: Problem, rng, *, ell_c=None, rank=None) -> Allocatio
     splits = valid_splits(prob.cfg)
     assign_m = rng.integers(0, K, M)
     assign_f = rng.integers(0, K, N)
-    # every client needs >= 1 channel on each link for feasibility
-    perm = rng.permutation(M)[:K]
+    # every client needs >= 1 channel on each link for feasibility; with
+    # more clients than subchannels that is impossible — round-robin the
+    # channels over the clients instead of indexing past the permutation
+    perm = rng.permutation(M)
     for k in range(K):
-        assign_m[perm[k]] = k
-    perm = rng.permutation(N)[:K]
+        assign_m[perm[k % M]] = k
+    perm = rng.permutation(N)
     for k in range(K):
-        assign_f[perm[k]] = k
+        assign_f[perm[k % N]] = k
     p = np.full(K, min(sys_cfg.p_max_w, sys_cfg.p_th_w / K)) * rng.uniform(0.2, 1.0, K)
     return Allocation(
         assign_main=assign_m, assign_fed=assign_f,

@@ -24,15 +24,31 @@ receives split-layer activations + labels (never raw tokens), and clients
 only ever receive activation gradients.  Client compute is batched with
 ``jax.vmap`` over the client axis — the parallel-clients property SFL adds
 over SL.
+
+Heterogeneous fleets (the Section VI joint optimization as the *operating
+mode*, not just a delay model): pass per-client split points ``ell_c``
+(sequence) and LoRA ranks ``ranks``, or build the trainer straight from a
+resource-allocation decision with :meth:`SflLLM.from_allocation`.  Client
+adapters are stored zero-padded to r_max with per-client slot masks
+(``core.lora.client_slot_masks``) keeping dead rows/cols exactly zero
+through masked optimizer updates; FedAvg becomes slot-wise rank-aware
+(``core.aggregation.fedavg_het``); each client scans to max(ell_k) with a
+boundary gate selecting its own split activation, and the server re-enters
+each client's stream at its own depth via a per-sample gate
+(``models.stack.apply_stack(rep_gate=...)``).  The whole mixed fleet still
+compiles to ONE jitted round (uniform shapes; masks make the padded math
+exact) — when every client is configured identically, the legacy
+homogeneous code path is taken unchanged, bit for bit.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..configs.base import ArchConfig, TrainConfig
 from ..models import stack as stack_mod
@@ -40,8 +56,8 @@ from ..models.layers import apply_norm, embed, unembed
 from ..models.model import IGNORE_ID
 from ..models.stack import Runtime, default_train_runtime
 from ..optim import Optimizer, apply_updates
-from .aggregation import broadcast_stacked, fedavg_stacked
-from .lora import split_tree
+from .aggregation import broadcast_het, fedavg_het
+from .lora import client_slot_masks
 from .split import layers_to_reps
 
 
@@ -81,48 +97,161 @@ class SflState:
 class SflLLM:
     """Split-federated LoRA fine-tuning of one ArchConfig model."""
 
-    def __init__(self, cfg: ArchConfig, params: dict, ell_c: int,
+    def __init__(self, cfg: ArchConfig, params: dict,
+                 ell_c: Union[int, Sequence[int]],
                  train_cfg: TrainConfig, optimizer: Optimizer,
                  rt: Optional[Runtime] = None,
                  aux_coef: Optional[float] = None,
                  act_quant: bool = False,
-                 mesh=None, donate: bool = True):
+                 mesh=None, donate: bool = True,
+                 ranks: Optional[Sequence[int]] = None):
         self.cfg = cfg
         self.tc = train_cfg
         # default: the fast-path runtime (chunked attention + fused LoRA
         # projections); pass an explicit Runtime to override
         self.rt = default_train_runtime() if rt is None else rt
         self.opt = optimizer
-        self.rep_split = layers_to_reps(cfg, ell_c)
-        self.ell_c = ell_c
+        K = train_cfg.num_clients
+
+        # ---- per-client split points / ranks ----------------------------
+        if isinstance(ell_c, (int, np.integer)):
+            ells = (int(ell_c),) * K
+        else:
+            ells = tuple(int(e) for e in ell_c)
+            if len(ells) != K:
+                raise ValueError(f"{len(ells)} split points for {K} clients")
+        self.ell_k = ells
+        self.rep_k = tuple(layers_to_reps(cfg, e) for e in ells)
+        self.rep_min, self.rep_max = min(self.rep_k), max(self.rep_k)
+        self.hetero_split = len(set(self.rep_k)) > 1
+        self.rank_k = (None if ranks is None
+                       else tuple(int(r) for r in ranks))
+        if self.rank_k is not None and len(self.rank_k) != K:
+            raise ValueError(f"{len(self.rank_k)} ranks for {K} clients")
+        self.r_max = max(self.rank_k) if self.rank_k else cfg.lora_rank
+        self.hetero_rank = (self.rank_k is not None
+                            and len(set(self.rank_k)) > 1)
+        self.hetero = self.hetero_split or self.hetero_rank
+        # legacy scalar views (homogeneous callers / reports)
+        self.ell_c = ells[0] if not self.hetero_split else max(ells)
+        self.rep_split = self.rep_max
+
         self.aux_coef = cfg.router_aux_coef if aux_coef is None else aux_coef
         self.act_quant = act_quant
         self.mesh = mesh              # optional ("clients",) mesh (launch.mesh)
         self.donate = donate
-        # frozen weights, physically partitioned
+        # frozen weights, physically partitioned.  Heterogeneous fleets
+        # overlap: clients hold the prefix up to max(ell_k), the server
+        # holds from min(ell_k) — each sample crosses at its own boundary.
         self.client_base = {
             "embed": params["embed"],
-            "layers": split_tree(params["layers"], self.rep_split)[0],
+            "layers": jax.tree.map(lambda v: v[:self.rep_max],
+                                   params["layers"]),
         }
         self.server_base = {
             "embed": params["embed"],            # unembedding / LM head
-            "layers": split_tree(params["layers"], self.rep_split)[1],
+            "layers": jax.tree.map(lambda v: v[self.rep_min:],
+                                   params["layers"]),
             "final_norm": params["final_norm"],
         }
+
+        # ---- hetero bookkeeping: masks, boundaries, adapter scales ------
+        # legacy convention keeps the cfg-derived scale; explicit ranks
+        # scale each client's adapter by alpha/r_k (and the padded server
+        # adapter by alpha/r_max)
+        if self.rank_k is not None:
+            self._scale_k = tuple(cfg.lora_alpha / r for r in self.rank_k)
+            self._server_scale = (cfg.lora_alpha / self.r_max
+                                  if self.r_max != cfg.lora_rank else None)
+        else:
+            self._scale_k = None
+            self._server_scale = None
+        # uniform non-default scale can stay a static python float
+        if self._scale_k is not None and not self.hetero_rank:
+            self._scale_k = (None if self._scale_k[0]
+                             == cfg.lora_alpha / cfg.lora_rank
+                             else self._scale_k[0])
+        self._client_masks = None
+        if self.hetero:
+            from ..models.model import abstract_lora
+            tmpl = abstract_lora(cfg, self.r_max, dtype=jnp.float32)
+            client_tmpl = jax.tree.map(      # [:rep_max] on abstract leaves
+                lambda v: jax.ShapeDtypeStruct(
+                    (self.rep_max,) + v.shape[1:], v.dtype), tmpl)
+            ranks_k = self.rank_k or (self.r_max,) * K
+            self._client_masks = client_slot_masks(
+                client_tmpl, ranks_k,
+                self.rep_k if self.hetero_split else None)
+            self._rep_hi = jnp.asarray(self.rep_k, jnp.int32)      # (K,)
+            if mesh is not None and self._client_masks is not None:
+                from ..sharding.specs import client_array_shardings
+                self._client_masks = jax.device_put(
+                    self._client_masks,
+                    client_array_shardings(self._client_masks, mesh))
+
+        self._round_traces = 0        # host-side retrace counter (tests)
         self._jit_local_step = jax.jit(self._local_step)
         self._jit_eval = jax.jit(self._eval_loss)
         self._jit_round = jax.jit(self._train_round,
                                   donate_argnums=(0,) if donate else ())
 
     # ------------------------------------------------------------------
+    @classmethod
+    def from_allocation(cls, prob, alloc, params: dict, optimizer: Optimizer,
+                        *, train_cfg: Optional[TrainConfig] = None, **kw
+                        ) -> "SflLLM":
+        """Build the trainer straight from a resource-allocation decision.
+
+        ``prob``: core.resource.Problem; ``alloc``: an Allocation (global
+        pair) or HeteroAllocation (per-client ``ell_k`` / ``rank_k`` from
+        ``bcd_minimize_delay_per_client``).  The demo flow is: sample a
+        wireless scenario -> BCD -> ``from_allocation`` -> train the fleet.
+        """
+        K = len(prob.envs)
+        if train_cfg is None:
+            train_cfg = TrainConfig(num_clients=K, batch_size=prob.batch,
+                                    local_steps=prob.local_steps)
+        ells = np.asarray(getattr(alloc, "ell_k", None)
+                          if getattr(alloc, "ell_k", None) is not None
+                          else alloc.ell_c).reshape(-1)
+        ranks = np.asarray(getattr(alloc, "rank_k", None)
+                           if getattr(alloc, "rank_k", None) is not None
+                           else alloc.rank).reshape(-1)
+        if ells.size == 1:
+            ells = np.full(K, ells[0])
+        if ranks.size == 1:
+            ranks = np.full(K, ranks[0])
+        return cls(prob.cfg, params, tuple(int(e) for e in ells), train_cfg,
+                   optimizer, ranks=tuple(int(r) for r in ranks), **kw)
+
+    def init_lora(self, key, dtype=jnp.float32):
+        """Template adapter for :meth:`init_state`, padded to max(r_k)."""
+        from ..models.model import init_lora_stack
+        return init_lora_stack(self.cfg, key, rank=self.r_max, dtype=dtype)
+
     def init_state(self, lora_template) -> SflState:
         """lora_template: adapter for the FULL stack (models.init_lora_stack).
 
         The client part is replicated K times (every client starts from the
-        same broadcast global adapter, as after an aggregation round)."""
-        lc, ls = split_tree(lora_template, self.rep_split)
+        same broadcast global adapter, as after an aggregation round).  For
+        heterogeneous ranks the template must be padded to max(r_k) —
+        :meth:`init_lora` builds one — and each client's dead slots are
+        zeroed here so the padded math starts exact."""
+        if self.rank_k is not None:
+            for path, leaf in jax.tree_util.tree_leaves_with_path(lora_template):
+                name = path[-1].key
+                r = leaf.shape[1] if name == "a" else leaf.shape[-1]
+                if r != self.r_max:
+                    raise ValueError(
+                        f"template rank {r} != max client rank {self.r_max}"
+                        " — build the template with SflLLM.init_lora")
+        lc = jax.tree.map(lambda v: v[:self.rep_max], lora_template)
+        ls = jax.tree.map(lambda v: v[self.rep_min:], lora_template)
         K = self.tc.num_clients
         lc_k = jax.tree.map(lambda v: jnp.broadcast_to(v, (K,) + v.shape).copy(), lc)
+        if self._client_masks is not None:
+            lc_k = jax.tree.map(lambda v, m: v * m.astype(v.dtype),
+                                lc_k, self._client_masks)
         state = SflState(
             lora_client=lc_k,
             lora_server=ls,
@@ -145,8 +274,14 @@ class SflLLM:
         return jax.device_put(state, sfl_state_shardings(state, self.mesh))
 
     # ------------------------------------------------------------------
-    def _client_forward(self, lora_c, tokens, frontend_emb):
-        """One client's FP: embed + layers [0, ell_c) -> activations s_k."""
+    def _client_forward(self, lora_c, tokens, frontend_emb, rep_hi=None,
+                        lora_scale=None):
+        """One client's FP: embed + layers [0, ell_k) -> activations s_k.
+
+        ``rep_hi`` (heterogeneous splits): the client's own boundary in
+        repeat units — the scan runs to max(ell_k) with repeats past the
+        boundary gated to identity, so the output IS the split-layer
+        activation and client BP past the boundary is masked exactly."""
         cfg, rt = self.cfg, self.rt
         S = tokens.shape[1] + (0 if frontend_emb is None else frontend_emb.shape[1])
         positions = jnp.arange(S, dtype=jnp.int32)
@@ -156,18 +291,27 @@ class SflLLM:
             x = jnp.concatenate([frontend_emb.astype(x.dtype), x], axis=1)
         x, _, aux = stack_mod.apply_stack(
             cfg, self.client_base["layers"], x, positions=positions,
-            lora=lora_c, rt=rt, mode="train")
+            lora=lora_c, rt=rt, mode="train",
+            rep_gate=(None, rep_hi) if rep_hi is not None else None,
+            lora_scale=lora_scale)
         return x, aux
 
-    def _server_loss(self, lora_s, acts, labels):
-        """Pooled loss on the main server.  acts: (K, b, S, d)."""
+    def _server_loss(self, lora_s, acts, labels, rep_lo=None):
+        """Pooled loss on the main server.  acts: (K, b, S, d).
+
+        ``rep_lo`` (heterogeneous splits): per-sample entry depth — repeats
+        below each sample's boundary pass through as identity, so every
+        client's activation is consumed at its own split depth in one
+        pooled scan."""
         cfg, rt = self.cfg, self.rt
         K, b, S, d = acts.shape
         x = acts.reshape(K * b, S, d)
         positions = jnp.arange(S, dtype=jnp.int32)
         x, _, aux = stack_mod.apply_stack(
             cfg, self.server_base["layers"], x, positions=positions,
-            lora=lora_s, rt=rt, mode="train")
+            lora=lora_s, rt=rt, mode="train",
+            rep_gate=(rep_lo, None) if rep_lo is not None else None,
+            lora_scale=self._server_scale)
         x = apply_norm(cfg, x, self.server_base["final_norm"])
         logits = unembed(cfg, self.server_base["embed"], x)
         lbl = labels.reshape(K * b, -1)
@@ -187,13 +331,36 @@ class SflLLM:
         fe = batches.get("frontend_emb")
 
         # (a) client-side FP, all clients in parallel ----------------------
-        def cf(lora_c, tok, f):
-            return self._client_forward(lora_c, tok, f)
+        # homogeneous fleets keep the legacy vmap signature (bit-identical
+        # trace); heterogeneity threads per-client boundaries / adapter
+        # scales through the client axis of the same single vmap
+        het_split = self.hetero_split
+        scales = self._scale_k
+        per_client_scale = isinstance(scales, tuple)
+        if het_split or per_client_scale:
+            rep_hi = self._rep_hi if het_split else None
+            sc = (jnp.asarray(scales, jnp.float32) if per_client_scale
+                  else None)
 
-        if fe is None:
-            fwd = lambda ls: jax.vmap(lambda l, t: cf(l, t, None))(ls, tokens)
+            def cf(lora_c, tok, f, rh, s):
+                return self._client_forward(
+                    lora_c, tok, f, rep_hi=rh,
+                    lora_scale=s if s is not None else scales)
+
+            in_axes = (0, 0, None if fe is None else 0,
+                       0 if het_split else None,
+                       0 if per_client_scale else None)
+            fwd = lambda ls: jax.vmap(cf, in_axes=in_axes)(
+                ls, tokens, fe, rep_hi, sc)
         else:
-            fwd = lambda ls: jax.vmap(cf)(ls, tokens, fe)
+            def cf(lora_c, tok, f):
+                return self._client_forward(lora_c, tok, f,
+                                            lora_scale=scales)
+
+            if fe is None:
+                fwd = lambda ls: jax.vmap(lambda l, t: cf(l, t, None))(ls, tokens)
+            else:
+                fwd = lambda ls: jax.vmap(cf)(ls, tokens, fe)
         if self.act_quant:
             base_fwd = fwd
             fwd = lambda ls: (lambda pair:
@@ -202,10 +369,14 @@ class SflLLM:
 
         # (b) upload (s_k, y_k) — wireless; modeled in core.latency --------
         # (c,d) server FP + BP on the pooled activations --------------------
+        rep_lo = None
+        if het_split:
+            b = tokens.shape[1]
+            rep_lo = jnp.repeat(self._rep_hi - self.rep_min, b)  # (K*b,)
         grad_fn = jax.value_and_grad(self._server_loss, argnums=(0, 1),
                                      has_aux=True)
         (total, loss), (g_server, g_acts) = grad_fn(state.lora_server, acts,
-                                                    labels)
+                                                    labels, rep_lo)
 
         # (e) download dL/ds_k; (f) client-side BP --------------------------
         # client-side MoE aux loss contributes through the aux cotangent
@@ -216,6 +387,12 @@ class SflLLM:
                                        state.lora_server)
         upd_c, opt_c = self.opt.update(g_client, state.opt_client,
                                        state.lora_client)
+        if self._client_masks is not None:
+            # masked updates: dead rows/cols of the padded adapters stay
+            # exactly zero no matter what the optimizer does with eps /
+            # weight decay
+            upd_c = jax.tree.map(lambda u, m: u * m.astype(u.dtype),
+                                 upd_c, self._client_masks)
         new = SflState(
             lora_client=apply_updates(state.lora_client, upd_c),
             lora_server=apply_updates(state.lora_server, upd_s),
@@ -228,9 +405,13 @@ class SflLLM:
     # ------------------------------------------------------------------
     def _aggregate(self, state: SflState, weights: jax.Array) -> SflState:
         """Federated-server round (eq. 7), fully in-graph: one weighted
-        tensordot reduction over the stacked client axis + broadcast."""
-        global_c = fedavg_stacked(state.lora_client, weights)
-        lc_k = broadcast_stacked(global_c, self.tc.num_clients)
+        tensordot reduction over the stacked client axis + broadcast.
+        Heterogeneous fleets aggregate slot-wise over each slot's owners
+        and re-truncate on broadcast (fedavg_het/broadcast_het; exact
+        fedavg_stacked when every client is full-rank/full-depth)."""
+        global_c = fedavg_het(state.lora_client, weights, self._client_masks)
+        lc_k = broadcast_het(global_c, self.tc.num_clients,
+                             self._client_masks)
         return SflState(lora_client=lc_k, lora_server=state.lora_server,
                         opt_client=state.opt_client,
                         opt_server=state.opt_server, step=state.step)
@@ -248,6 +429,7 @@ class SflLLM:
 
         round_batches: tokens (I, K, b, S), labels (I, K, b, S), optional
         frontend_emb (I, K, b, F, d); weights: (K,) sample counts."""
+        self._round_traces += 1       # trace-time only: retrace telemetry
         state, metrics = jax.lax.scan(self._local_step, state, round_batches)
         return self._aggregate(state, weights), metrics
 
@@ -291,12 +473,20 @@ class SflLLM:
     # ------------------------------------------------------------------
     def _eval_loss(self, state: SflState, batch):
         """Validation loss through client 0's adapter (post-aggregation all
-        clients are identical)."""
+        clients share the slots client 0 owns)."""
         lora_c0 = jax.tree.map(lambda v: v[0], state.lora_client)
+        scales = self._scale_k
+        scale0 = scales[0] if isinstance(scales, tuple) else scales
+        rep_hi0 = jnp.int32(self.rep_k[0]) if self.hetero_split else None
         acts, _ = self._client_forward(lora_c0, batch["tokens"],
-                                       batch.get("frontend_emb"))
+                                       batch.get("frontend_emb"),
+                                       rep_hi=rep_hi0, lora_scale=scale0)
+        rep_lo = None
+        if self.hetero_split:
+            b = batch["tokens"].shape[0]
+            rep_lo = jnp.full((b,), self.rep_k[0] - self.rep_min, jnp.int32)
         _, loss = self._server_loss(state.lora_server, acts[None],
-                                    batch["labels"][None])
+                                    batch["labels"][None], rep_lo)
         return loss
 
     def eval_loss(self, state, batch):

@@ -122,9 +122,34 @@ def modeled_round_seconds(report: Dict[str, Any], local_steps: int) -> float:
 
 def modeled_total_seconds(prob, alloc) -> float:
     """Total modeled training delay of an allocation (eq. 17 with E(r)) —
-    the quantity benchmarks sweep; identical to core.resource.objective."""
-    from ..core.resource import objective
-    return objective(prob, alloc)
+    the quantity benchmarks sweep.  Dispatches to the per-client objective
+    when the allocation carries ``ell_k``/``rank_k``."""
+    from ..core.resource import total_delay
+    return total_delay(prob, alloc)
+
+
+def allocation_round_latency(prob, alloc) -> Dict[str, Any]:
+    """latency_report for a resource-allocation decision — homogeneous or
+    per-client — ready for ``Trainer(round_latency=...)``: the compiled
+    rounds then accumulate the wireless wall clock this allocation models,
+    so a run reports both what the hardware did and what the paper's
+    network would take for THIS fleet."""
+    from ..core.latency import latency_report, latency_report_het
+    K = len(prob.envs)
+    rates_m = alloc.rates_main(prob.sys_cfg, prob.envs)
+    rates_f = alloc.rates_fed(prob.sys_cfg, prob.envs)
+    e_rounds = prob.e_model(int(alloc.rank))
+    if getattr(alloc, "ell_k", None) is not None:
+        e_rounds = float(np.mean([prob.e_model(int(r))
+                                  for r in alloc.rank_k]))
+        return latency_report_het(
+            prob.cfg, prob.sys_cfg, prob.envs, rates_m, rates_f,
+            alloc.ell_k, alloc.rank_k, prob.seq_len, prob.batch,
+            prob.local_steps, e_rounds)
+    return latency_report(
+        prob.cfg, prob.sys_cfg, prob.envs, rates_m, rates_f,
+        int(alloc.ell_c), int(alloc.rank), prob.seq_len, prob.batch,
+        prob.local_steps, e_rounds)
 
 
 # ---------------------------------------------------------------------------

@@ -48,7 +48,11 @@ def dense(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
     autotuned tiles) on the backends in ``FUSED_DENSE_BACKENDS``, the
     einsum path elsewhere.
     """
-    if impl == "fused" and lora is not None and _fused_dense_active():
+    # the fused kernel bakes the scale in as a compile-time constant; a
+    # traced scale (per-client alpha/r_k under the hetero-fleet vmap) must
+    # take the einsum composition, which multiplies it in-graph
+    if (impl == "fused" and lora is not None and _fused_dense_active()
+            and not isinstance(lora_scale, jax.Array)):
         from ..kernels.lora_matmul import lora_matmul
         y = lora_matmul(x, w, lora["a"], lora["b"], scale=float(lora_scale))
     else:

@@ -186,15 +186,38 @@ def init_stack_cache(cfg, batch: int, cache_len: int, dtype) -> Tuple[Any, ...]:
 def apply_stack(cfg, stack_params, x, *, positions, lora=None, rt: Runtime,
                 mode: str = "train", caches=None, cur_index=None,
                 cache_len: int = 0,
-                rep_slice: Optional[Tuple[int, int]] = None):
+                rep_slice: Optional[Tuple[int, int]] = None,
+                rep_gate: Optional[Tuple[Any, Any]] = None,
+                lora_scale=None):
     """Run (a slice of) the layer stack.
 
     ``rep_slice=(a, b)`` runs pattern repeats [a, b) — the SFL split point
     in repeat units.  ``caches``/returned caches follow the same slice.
     Returns (x, new_caches, aux_loss_sum).
+
+    ``rep_gate=(lo, hi)`` — per-call boundary mask for heterogeneous split
+    points (train mode only): repeat i of the scanned slice is applied iff
+    ``lo <= i < hi`` (either bound may be None, a traced scalar, or a
+    per-sample (B,) int32 array); gated repeats pass activations through
+    unchanged, so the forward equals the [lo, hi) sub-stack and the
+    backward masks their gradient contributions exactly.  The blocks still
+    execute (uniform shapes keep the whole fleet one compiled scan) — the
+    gate trades dead FLOPs for zero retraces.  With a per-sample gate the
+    scalar MoE aux loss cannot be split per sample and is accumulated
+    ungated.
+
+    ``lora_scale`` overrides the default ``cfg.lora_alpha/cfg.lora_rank``
+    adapter scaling — per-client ranks r_k scale by alpha/r_k (a traced
+    scalar under the client vmap).
     """
     P = len(cfg.pattern)
     lora_stack = lora if lora is not None else tuple([None] * P)
+    scale = (cfg.lora_alpha / cfg.lora_rank) if lora_scale is None else lora_scale
+    gate_lo, gate_hi = rep_gate if rep_gate is not None else (None, None)
+    gated = gate_lo is not None or gate_hi is not None
+    if gated and mode != "train":
+        raise NotImplementedError("rep_gate requires mode='train' "
+                                  "(gated cache slots would be stale)")
 
     def _constrain(x):
         if not rt.dp_axes:
@@ -220,7 +243,7 @@ def apply_stack(cfg, stack_params, x, *, positions, lora=None, rt: Runtime,
             x, c_out, a = apply_block(
                 cfg, pat, p_slices[pi], x, positions=positions,
                 lora=None if l_slices is None else l_slices[pi],
-                lora_scale=cfg.lora_alpha / cfg.lora_rank, rt=rt, mode=mode,
+                lora_scale=scale, rt=rt, mode=mode,
                 cache=None if c_slices is None else c_slices[pi],
                 cur_index=cur_index, cache_len=cache_len)
             c_outs.append(c_out)
@@ -260,11 +283,35 @@ def apply_stack(cfg, stack_params, x, *, positions, lora=None, rt: Runtime,
         def body_nl(carry, xs2):
             p_s, c_s = xs2
             return body(carry, (p_s, None, c_s))
-        (x, aux), cache_out = jax.lax.scan(
-            body_nl, (x, jnp.zeros((), jnp.float32)), (params, cache_xs))
+        run, xs = body_nl, (params, cache_xs)
     else:
-        (x, aux), cache_out = jax.lax.scan(
-            body, (x, jnp.zeros((), jnp.float32)), (params, lora_xs, cache_xs))
+        run, xs = body, (params, lora_xs, cache_xs)
+    if gated:
+        # heterogeneous split: select the repeat's output or the untouched
+        # carry per boundary mask; scan xs gains the repeat index
+        n_reps = jax.tree.leaves(params)[0].shape[0]
+        inner = run
+
+        def run_gated(carry, xs2):
+            idx, rest = xs2
+            x0, aux0 = carry
+            (x1, aux1), couts = inner(carry, rest)
+            keep = jnp.ones((), bool)
+            if gate_lo is not None:
+                keep = keep & (idx >= gate_lo)
+            if gate_hi is not None:
+                keep = keep & (idx < gate_hi)
+            if keep.ndim:                      # per-sample boundary (B,)
+                x2 = jnp.where(keep[:, None, None], x1, x0)
+                aux2 = aux1
+            else:
+                x2 = jnp.where(keep, x1, x0)
+                aux2 = jnp.where(keep, aux1, aux0)
+            return (x2, aux2), couts
+
+        run, xs = run_gated, (jnp.arange(n_reps, dtype=jnp.int32), xs)
+    (x, aux), cache_out = jax.lax.scan(
+        run, (x, jnp.zeros((), jnp.float32)), xs)
     if mode == "train":
         cache_out = None
     return x, cache_out, aux

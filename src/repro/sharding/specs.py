@@ -219,6 +219,16 @@ def replicated_shardings(tree: Any, mesh: Mesh):
     return jax.tree.map(lambda l: NamedSharding(mesh, P()), tree)
 
 
+def client_array_shardings(tree: Any, mesh: Mesh, axis: str = CLIENT_AXIS):
+    """Per-client constant trees the heterogeneous round closes over —
+    slot masks (K, R, r, 1), boundary vectors (K,), adapter scales (K,):
+    shard the leading K axis so each device holds only its clients' slice
+    next to the matching shard of the stacked state."""
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, _client_spec(l.shape, mesh, 0, axis)),
+        tree)
+
+
 def sfl_state_shardings(state: Any, mesh: Mesh, axis: str = CLIENT_AXIS):
     """SflState partitioning for the compiled round engine: the K-stacked
     client adapter + its optimizer moments are data-parallel over the

@@ -1,0 +1,229 @@
+"""Heterogeneous fleets: per-client LoRA ranks and split points through
+the compiled round engine, rank-aware aggregation, and the per-client
+resource search."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import models as M
+from repro.configs import DEFAULT_SYSTEM, TrainConfig, get_arch
+from repro.core.aggregation import broadcast_het, fedavg_het, fedavg_stacked
+from repro.core.channel import sample_clients
+from repro.core.lora import client_slot_masks
+from repro.core.resource import (HeteroAllocation, Problem,
+                                 bcd_minimize_delay,
+                                 bcd_minimize_delay_per_client, objective,
+                                 objective_het, random_allocation,
+                                 total_delay)
+from repro.core.sfl import SflLLM
+from repro.optim import adamw, sgd
+
+ELLS = [1, 2, 3]
+RANKS = [1, 2, 4]
+
+
+def _setup(key, K=3, b=2, S=16, layers=4):
+    cfg = get_arch("gpt2-s").reduced(num_layers=layers)
+    params = M.init_params(cfg, key)
+    tokens = jax.random.randint(key, (K, b, S), 0, cfg.vocab_size)
+    return cfg, params, {"tokens": tokens, "labels": tokens}
+
+
+def _round_batches(batches, I):
+    return {k: jnp.broadcast_to(v, (I,) + v.shape) for k, v in batches.items()}
+
+
+def _hetero_sfl(cfg, params, *, opt=None, K=3, I=2):
+    tc = TrainConfig(num_clients=K, batch_size=2, local_steps=I)
+    return SflLLM(cfg, params, ell_c=ELLS, train_cfg=tc,
+                  optimizer=opt or adamw(1e-3), ranks=RANKS)
+
+
+# ---------------------------------------------------------------------------
+# rank-aware aggregation
+# ---------------------------------------------------------------------------
+
+def test_fedavg_het_equal_ranks_bit_identical(key):
+    """With every client at full rank/depth the mask tree is None and the
+    padded aggregation IS fedavg_stacked — same graph, bit-identical."""
+    cfg = get_arch("gpt2-s").reduced(num_layers=4)
+    tmpl = M.init_lora_stack(cfg, key, rank=4)
+    masks = client_slot_masks(tmpl, ranks=[4, 4, 4])
+    assert masks is None
+    K = 3
+    stacked = jax.tree.map(
+        lambda v: jax.random.normal(key, (K,) + v.shape, v.dtype), tmpl)
+    w = jnp.asarray([1.0, 2.0, 3.0])
+    a = fedavg_het(stacked, w, masks)
+    b = fedavg_stacked(stacked, w)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_fedavg_het_slotwise_mixed_ranks(key):
+    """Mixed ranks: each slot averages over its owners only (zero-pad
+    aggregation), dead slots come back exactly zero."""
+    # one leaf pair: a (R=1, r=4, d=2), b (R=1, d=3, r=4)
+    tmpl = {"x": {"a": jnp.zeros((1, 4, 2)), "b": jnp.zeros((1, 3, 4))}}
+    masks = client_slot_masks(tmpl, ranks=[2, 4])
+    a = jnp.stack([jnp.full((1, 4, 2), 1.0) * (jnp.arange(4) < 2)[None, :, None],
+                   jnp.full((1, 4, 2), 3.0)])
+    b = jnp.stack([jnp.full((1, 3, 4), 2.0) * (jnp.arange(4) < 2)[None, None, :],
+                   jnp.full((1, 3, 4), 4.0)])
+    avg = fedavg_het({"x": {"a": a, "b": b}}, jnp.asarray([1.0, 1.0]), masks)
+    # slots 0-1 owned by both -> mean; 2-3 only by client 1 -> its value
+    np.testing.assert_allclose(np.asarray(avg["x"]["a"][0, :2]), 2.0)
+    np.testing.assert_allclose(np.asarray(avg["x"]["a"][0, 2:]), 3.0)
+    np.testing.assert_allclose(np.asarray(avg["x"]["b"][0, :, :2]), 3.0)
+    np.testing.assert_allclose(np.asarray(avg["x"]["b"][0, :, 2:]), 4.0)
+    # broadcast re-truncates each client
+    bc = broadcast_het(avg, 2, masks)
+    assert np.all(np.asarray(bc["x"]["a"][0, 0, 2:]) == 0.0)
+    assert np.all(np.asarray(bc["x"]["b"][0, 0, :, 2:]) == 0.0)
+    assert np.all(np.asarray(bc["x"]["a"][1]) == np.asarray(avg["x"]["a"]))
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous training through the compiled round
+# ---------------------------------------------------------------------------
+
+def test_hetero_first_step_loss_matches_homogeneous(key):
+    """Adapters start at delta=0 (B=0), so the first-step loss must be
+    invariant to WHERE the split lands and to the per-client ranks."""
+    cfg, params, batches = _setup(key)
+    tc = TrainConfig(num_clients=3, batch_size=2, local_steps=1)
+    ref = SflLLM(cfg, params, ell_c=2, train_cfg=tc, optimizer=sgd(0.1))
+    lora = M.init_lora_stack(cfg, jax.random.key(7))
+    _, m_ref = ref.local_step(ref.init_state(lora), batches)
+
+    het = _hetero_sfl(cfg, params, opt=sgd(0.1))
+    assert het.hetero_split and het.hetero_rank
+    _, m_het = het.local_step(het.init_state(het.init_lora(jax.random.key(7))),
+                              batches)
+    assert abs(float(m_het["loss"]) - float(m_ref["loss"])) < 1e-5
+
+
+def test_identical_fleet_bit_identical_to_legacy(key):
+    """Uniform per-client config takes the legacy homogeneous path — the
+    loss trajectory is bit-identical to the scalar-ell_c pre-PR API."""
+    cfg, params, batches = _setup(key)
+    I, rb = 2, None
+    tc = TrainConfig(num_clients=3, batch_size=2, local_steps=2)
+    lora = M.init_lora_stack(cfg, jax.random.key(7))
+
+    losses = []
+    for ell in (2, [2, 2, 2]):
+        sfl = SflLLM(cfg, params, ell_c=ell, train_cfg=tc,
+                     optimizer=adamw(1e-3),
+                     ranks=None if ell == 2 else [cfg.lora_rank] * 3)
+        state = sfl.init_state(lora)
+        rb = _round_batches(batches, I)
+        traj = []
+        for _ in range(2):
+            state, metrics = sfl.train_round(state, rb, [1.0] * 3)
+            traj += [float(x) for x in np.asarray(metrics["loss"])]
+        losses.append(traj)
+        assert not sfl.hetero
+    assert losses[0] == losses[1]
+
+
+def test_hetero_trains_one_trace_and_padded_slots_stay_zero(key):
+    """A mixed (r_k, ell_k) fleet runs >= 3 global rounds as ONE jitted
+    train_round (no per-client retrace), the loss decreases, and every
+    dead slot of the padded client adapters is exactly zero afterwards."""
+    cfg, params, batches = _setup(key)
+    sfl = _hetero_sfl(cfg, params)
+    state = sfl.init_state(sfl.init_lora(jax.random.key(7)))
+    rb = _round_batches(batches, 2)
+    losses = []
+    for _ in range(3):
+        state, metrics = sfl.train_round(state, rb, [1.0] * 3)
+        losses += [float(x) for x in np.asarray(metrics["loss"])]
+    assert sfl._round_traces == 1
+    assert losses[-1] < losses[0]
+    assert all(np.isfinite(losses))
+
+    for path, leaf in jax.tree_util.tree_leaves_with_path(state.lora_client):
+        name = path[-1].key
+        arr = np.asarray(leaf)            # (K, R, r, d) / (K, R, d, r)
+        for k, (rk, repk) in enumerate(zip(RANKS, sfl.rep_k)):
+            dead_rank = (arr[k, :, rk:, :] if name == "a"
+                         else arr[k, :, :, rk:])
+            assert np.abs(dead_rank).max(initial=0.0) == 0.0
+            assert np.abs(arr[k, repk:]).max(initial=0.0) == 0.0
+        # live slots actually trained (B leaves move off zero)
+        if name == "b":
+            assert np.abs(arr[0, :sfl.rep_k[0], :, :RANKS[0]]).max() > 0
+
+
+def test_hetero_eval_loss_finite(key):
+    cfg, params, batches = _setup(key)
+    sfl = _hetero_sfl(cfg, params)
+    state = sfl.init_state(sfl.init_lora(jax.random.key(7)))
+    val = {"tokens": batches["tokens"][0], "labels": batches["labels"][0]}
+    assert np.isfinite(float(sfl.eval_loss(state, val)))
+
+
+# ---------------------------------------------------------------------------
+# per-client resource search + from_allocation
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def prob():
+    sys_cfg = dataclasses.replace(
+        DEFAULT_SYSTEM, num_clients=3, total_bandwidth_hz=50e6,
+        f_server_hz=1.0e9, f_client_hz_range=(0.3e9, 3.0e9))
+    envs = tuple(sample_clients(sys_cfg, 0))
+    return Problem(cfg=get_arch("gpt2-s").reduced(num_layers=4),
+                   sys_cfg=sys_cfg, envs=envs, seq_len=64, batch=2,
+                   local_steps=2, rank_candidates=(1, 2, 4))
+
+
+def test_per_client_bcd_beats_global_pair(prob):
+    alloc, hist = bcd_minimize_delay(prob)
+    halloc, hhist = bcd_minimize_delay_per_client(prob)
+    assert isinstance(halloc, HeteroAllocation)
+    assert hhist[-1] <= objective(prob, alloc) * (1 + 1e-9)
+    assert total_delay(prob, halloc) == hhist[-1]
+    assert all(hhist[i + 1] <= hhist[i] * (1 + 1e-9)
+               for i in range(len(hist), len(hhist) - 1))
+
+
+def test_from_allocation_trains_the_fleet(key, prob):
+    halloc, _ = bcd_minimize_delay_per_client(prob)
+    params = M.init_params(prob.cfg, key)
+    sfl = SflLLM.from_allocation(prob, halloc, params, optimizer=adamw(1e-3))
+    assert sfl.ell_k == tuple(int(e) for e in halloc.ell_k)
+    assert sfl.rank_k == tuple(int(r) for r in halloc.rank_k)
+    state = sfl.init_state(sfl.init_lora(jax.random.key(7)))
+    K, b, S = len(prob.envs), prob.batch, 16
+    tokens = jax.random.randint(key, (K, b, S), 0, prob.cfg.vocab_size)
+    state, m = sfl.local_step(state, {"tokens": tokens, "labels": tokens})
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_memoized_sw_and_pair_cache(prob):
+    p2 = dataclasses.replace(prob)          # fresh caches
+    bcd_minimize_delay(p2)
+    stats = p2.cache_stats()
+    assert stats["sw_hits"] > 0 and stats["pair_misses"] > 0
+    assert p2.sw(1, 2) is p2.sw(1, 2)       # memoized object
+    # memoization must not change the result
+    p3 = dataclasses.replace(prob, memoize=False)
+    assert bcd_minimize_delay(p3)[1][-1] == bcd_minimize_delay(p2)[1][-1]
+
+
+def test_random_allocation_more_clients_than_subchannels():
+    sys_cfg = dataclasses.replace(DEFAULT_SYSTEM, num_clients=5,
+                                  num_subchannels_main=3,
+                                  num_subchannels_fed=2)
+    envs = tuple(sample_clients(sys_cfg, 0))
+    prob = Problem(cfg=get_arch("gpt2-s"), sys_cfg=sys_cfg, envs=envs,
+                   seq_len=64, batch=2, local_steps=2)
+    alloc = random_allocation(prob, np.random.default_rng(0))
+    assert alloc.assign_main.shape == (3,)
+    assert (alloc.assign_main >= 0).all() and (alloc.assign_main < 5).all()
+    assert np.isfinite(objective(prob, alloc))
