@@ -1,0 +1,162 @@
+"""Bench-regression gate: fresh BENCH_*.json vs committed baselines.
+
+Raw microsecond columns do not transfer between machines, so the gate
+compares *within-run ratios*: each gate divides a steady-state row by its
+in-run baseline row (fused/unfused, masked/legacy, memoized/cold, ...),
+computes the same ratio from the committed snapshot under
+``benchmarks/baselines/``, and fails when the fresh ratio has regressed by
+more than ``--threshold`` (default 15%).  That keeps the gate meaningful
+on any CI runner while still catching the regressions that matter: a
+speedup a previous PR bought quietly eroding.
+
+Shared CI runners are noisy, so a gate that trips does not fail
+immediately: the checker re-runs the owning benchmark suite (up to
+``--retries`` times) and keeps the best fresh ratio — a real regression
+reproduces on every run, contention does not.
+
+Usage (CI runs this right after ``python -m benchmarks.run``):
+
+    python benchmarks/check_regression.py [--threshold 0.15]
+    python benchmarks/check_regression.py --update   # refresh baselines
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import subprocess
+import sys
+from pathlib import Path
+
+# (snapshot file, gate id, steady-state row, in-run reference row).
+# ratio = row / reference, lower is better; the gate fails when
+# fresh_ratio > baseline_ratio * (1 + threshold).
+GATES = [
+    (
+        "BENCH_kernels.json",
+        "lora_fused_fwd",
+        "kernel/lora_fused_cpu",
+        "kernel/lora_unfused_cpu",
+    ),
+    (
+        "BENCH_kernels.json",
+        "lora_fused_bwd",
+        "kernel/lora_grad_fused_cpu",
+        "kernel/lora_grad_unfused_cpu",
+    ),
+    (
+        "BENCH_serving.json",
+        "decode_fused_steady",
+        "serving/decode_fused",
+        "serving/decode_naive",
+    ),
+    (
+        "BENCH_resource.json",
+        "bcd_memoized",
+        "resource/bcd_wall_memoized",
+        "resource/bcd_wall_cold",
+    ),
+    (
+        "BENCH_dynamic.json",
+        "dynamic_round_overhead",
+        "dynamic/round_wall_masked",
+        "dynamic/round_wall_legacy",
+    ),
+]
+
+
+# which benchmarks.run suite regenerates each snapshot (for gate retries)
+SUITE_FOR_FILE = {
+    "BENCH_kernels.json": "kernels,convergence",
+    "BENCH_serving.json": "serving",
+    "BENCH_resource.json": "resource",
+    "BENCH_dynamic.json": "dynamic",
+}
+
+
+def _load_rows(path: Path) -> dict[str, float]:
+    data = json.loads(path.read_text())
+    return {r["name"]: float(r["us_per_call"]) for r in data["rows"]}
+
+
+def _rerun_suite(fname: str, fresh_dir: Path) -> None:
+    env = dict(os.environ)
+    path = env.get("PYTHONPATH")
+    env["PYTHONPATH"] = "src" + os.pathsep + path if path else "src"
+    subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", SUITE_FOR_FILE[fname]],
+        cwd=fresh_dir,
+        env=env,
+        check=True,
+        stdout=subprocess.DEVNULL,
+    )
+
+
+def _ratio(rows: dict[str, float], num: str, den: str, where: str) -> float:
+    for name in (num, den):
+        if name not in rows:
+            raise SystemExit(f"gate row {name!r} missing from {where}")
+    if rows[den] <= 0:
+        raise SystemExit(f"non-positive reference row {den!r} in {where}")
+    return rows[num] / rows[den]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh-dir", default=".", help="where benchmarks.run wrote BENCH_*.json")
+    ap.add_argument("--baseline-dir", default="benchmarks/baselines")
+    ap.add_argument("--threshold", type=float, default=0.15, help="max allowed relative slowdown")
+    ap.add_argument("--retries", type=int, default=2, help="suite re-runs before a gate may fail")
+    ap.add_argument("--update", action="store_true", help="copy fresh snapshots over the baselines")
+    args = ap.parse_args()
+
+    fresh_dir, base_dir = Path(args.fresh_dir), Path(args.baseline_dir)
+    if args.update:
+        base_dir.mkdir(parents=True, exist_ok=True)
+        for fname in sorted({g[0] for g in GATES}):
+            src = fresh_dir / fname
+            if not src.exists():
+                raise SystemExit(f"--update: {src} missing; run benchmarks.run first")
+            shutil.copy(src, base_dir / fname)
+            print(f"baseline updated: {base_dir / fname}")
+        return 0
+
+    failures = []
+    for fname, gate_id, num, den in GATES:
+        fresh_path, base_path = fresh_dir / fname, base_dir / fname
+        if not fresh_path.exists():
+            raise SystemExit(f"fresh snapshot {fresh_path} missing; run benchmarks.run first")
+        if not base_path.exists():
+            print(f"[{gate_id}] SKIP: no committed baseline {base_path}")
+            continue
+        base = _ratio(_load_rows(base_path), num, den, str(base_path))
+        fresh = _ratio(_load_rows(fresh_path), num, den, str(fresh_path))
+        attempts = 0
+        while fresh / base - 1.0 > args.threshold and attempts < args.retries:
+            attempts += 1
+            print(
+                f"[{gate_id}] tripped ({fresh / base - 1.0:+.1%}); "
+                f"re-running {SUITE_FOR_FILE[fname]} ({attempts}/{args.retries})"
+            )
+            _rerun_suite(fname, fresh_dir)
+            fresh = min(fresh, _ratio(_load_rows(fresh_path), num, den, str(fresh_path)))
+        slowdown = fresh / base - 1.0
+        status = "FAIL" if slowdown > args.threshold else "ok"
+        print(
+            f"[{gate_id}] {status}: ratio {num}/{den} "
+            f"fresh={fresh:.3f} baseline={base:.3f} ({slowdown:+.1%})"
+        )
+        if slowdown > args.threshold:
+            failures.append(gate_id)
+
+    if failures:
+        print(f"\nbench regression gate FAILED: {', '.join(failures)}", file=sys.stderr)
+        return 1
+    print("\nbench regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

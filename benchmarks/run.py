@@ -9,6 +9,7 @@
   serving bench_serving      fused vs naive engine tokens/sec + compiles
   roofline bench_roofline    per (arch x shape x mesh) roofline rows
   resource bench_resource    BCD wall time + homogeneous-vs-hetero delay
+  dynamic bench_dynamic      dynamic-round overhead + adaptive re-allocation
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only table4,fig5 ...]
 """
@@ -20,9 +21,9 @@ import sys
 import time
 import traceback
 
-from . import (bench_complexity, bench_convergence, bench_kernels,
-               bench_latency, bench_ppl, bench_resource, bench_roofline,
-               bench_serving)
+from . import (bench_complexity, bench_convergence, bench_dynamic,
+               bench_kernels, bench_latency, bench_ppl, bench_resource,
+               bench_roofline, bench_serving)
 
 SUITES = {
     "table3": bench_complexity.main,
@@ -33,6 +34,18 @@ SUITES = {
     "serving": bench_serving.main,
     "roofline": bench_roofline.main,
     "resource": bench_resource.main,
+    "dynamic": bench_dynamic.main,
+}
+
+# perf-trajectory snapshots: these row prefixes land in JSON files CI
+# archives per commit (and checks against benchmarks/baselines/ via
+# benchmarks/check_regression.py), so steady-state perf regressions are
+# diffable and gated from this PR onward
+SNAPSHOTS = {
+    "BENCH_kernels.json": ("kernel/", "engine/"),
+    "BENCH_serving.json": ("serving/",),
+    "BENCH_resource.json": ("resource/",),
+    "BENCH_dynamic.json": ("dynamic/",),
 }
 
 
@@ -63,32 +76,14 @@ def main() -> None:
             emit(f"{name}/_suite_wall", (time.time() - t0) * 1e6,
                  f"FAILED:{e!r}")
 
-    # perf-trajectory snapshot: the kernel + engine rows land in a JSON
-    # file CI archives per commit, so fused-vs-unfused wall time and
-    # steps/sec regressions are diffable from this PR onward
-    kern = [r for r in rows
-            if r["name"].startswith(("kernel/", "engine/"))]
-    if kern:
-        with open("BENCH_kernels.json", "w") as f:
-            json.dump({"unix_time": int(time.time()), "rows": kern}, f,
-                      indent=2)
-        print(f"wrote BENCH_kernels.json ({len(kern)} rows)", file=sys.stderr)
-
-    serving = [r for r in rows if r["name"].startswith("serving/")]
-    if serving:
-        with open("BENCH_serving.json", "w") as f:
-            json.dump({"unix_time": int(time.time()), "rows": serving}, f,
-                      indent=2)
-        print(f"wrote BENCH_serving.json ({len(serving)} rows)",
-              file=sys.stderr)
-
-    resource = [r for r in rows if r["name"].startswith("resource/")]
-    if resource:
-        with open("BENCH_resource.json", "w") as f:
-            json.dump({"unix_time": int(time.time()), "rows": resource}, f,
-                      indent=2)
-        print(f"wrote BENCH_resource.json ({len(resource)} rows)",
-              file=sys.stderr)
+    for fname, prefixes in SNAPSHOTS.items():
+        picked_rows = [r for r in rows if r["name"].startswith(prefixes)]
+        if not picked_rows:
+            continue
+        with open(fname, "w") as f:
+            json.dump({"unix_time": int(time.time()), "rows": picked_rows},
+                      f, indent=2)
+        print(f"wrote {fname} ({len(picked_rows)} rows)", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -2,7 +2,11 @@
 synthetic E2E task, in ~40 lines of public API.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Set REPRO_SMOKE=1 (the CI examples-smoke job does) for extra-tiny shapes.
 """
+import os
+
 import jax
 import numpy as np
 
@@ -13,7 +17,9 @@ from repro.launch.engine import SflRound, Trainer
 from repro import models as M
 from repro.optim import adamw
 
-K, BATCH, SEQ = 3, 4, 48
+SMOKE = bool(os.environ.get("REPRO_SMOKE"))
+K, BATCH, SEQ = 3, 4, 32 if SMOKE else 48
+N_TRAIN, STEPS, ROUNDS = (200, 2, 2) if SMOKE else (1000, 6, 3)
 
 # 1. model: reduced GPT-2 (the paper's architecture), LoRA rank 4 ---------
 cfg = get_arch("gpt2-s").reduced(num_layers=4)
@@ -22,13 +28,13 @@ params = M.init_params(cfg, key)                       # frozen base
 lora = M.init_lora_stack(cfg, key, rank=4)             # trainable adapters
 
 # 2. federated data: E2E-style corpus split across K clients --------------
-train, _, _ = e2e_splits(1000, 100, 100)
+train, _, _ = e2e_splits(N_TRAIN, 100, 100)
 tok = WordTokenizer.from_corpus([e.text for e in train])
 parts = [np.array(train, dtype=object)[i] for i in iid_partition(len(train), K)]
 data = sfl_batches(tok, parts, BATCH, SEQ)
 
 # 3. SflLLM: clients hold layers [0, 2), main server the rest -------------
-tc = TrainConfig(num_clients=K, batch_size=BATCH, local_steps=6)
+tc = TrainConfig(num_clients=K, batch_size=BATCH, local_steps=STEPS)
 sfl = SflLLM(cfg, params, ell_c=2, train_cfg=tc, optimizer=adamw(3e-3))
 state = sfl.init_state(lora)
 
@@ -36,6 +42,6 @@ state = sfl.init_state(lora)
 #    + in-graph FedAvg), through the unified engine ------------------------
 trainer = Trainer(SflRound(sfl, [len(p) for p in parts]),
                   local_steps=tc.local_steps, log_every=1)
-state, hist = trainer.fit(state, data, global_rounds=3)
+state, hist = trainer.fit(state, data, global_rounds=ROUNDS)
 print(f"\nloss: {hist.losses[0]:.3f} -> {hist.losses[-1]:.3f} over "
       f"{len(hist.losses)} steps ({hist.steps_per_sec:.2f} steps/s)")

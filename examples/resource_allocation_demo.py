@@ -7,11 +7,17 @@ the heterogeneous fleet they describe actually training:
 2. extend the search per client: each device gets its own (ell_k, r_k);
 3. hand the decision to ``SflLLM.from_allocation`` and run real global
    rounds — ONE jitted call per round for the whole mixed fleet — with the
-   modeled wireless wall clock accumulated by launch.engine.Trainer.
+   modeled wireless wall clock accumulated by launch.engine.Trainer;
+4. make the episode time-varying: per-round block fading, a round deadline
+   that drops stragglers in-graph, and drift-triggered warm re-allocation —
+   still ONE compiled trace for the whole episode.
 
     PYTHONPATH=src python examples/resource_allocation_demo.py
+
+Set REPRO_SMOKE=1 (the CI examples-smoke job does) for extra-tiny shapes.
 """
 import dataclasses
+import os
 import time
 
 import jax
@@ -21,7 +27,10 @@ from repro.configs import DEFAULT_SYSTEM, get_arch
 from repro.core import (Problem, baseline, bcd_minimize_delay,
                         bcd_minimize_delay_per_client, latency_report,
                         objective, sample_clients, total_delay)
-from repro.launch.engine import SflRound, Trainer, allocation_round_latency
+from repro.launch.engine import (SflRound, Trainer, WirelessDynamics,
+                                 allocation_round_latency)
+
+SMOKE = bool(os.environ.get("REPRO_SMOKE"))
 
 cfg = get_arch("gpt2-s")
 envs = tuple(sample_clients(DEFAULT_SYSTEM, rng=0))
@@ -94,8 +103,9 @@ small_sys = dataclasses.replace(edge_sys, num_clients=3,
                                 f_server_hz=0.4e9,
                                 f_client_hz_range=(0.2e9, 5.0e9))
 small_envs = tuple(sample_clients(small_sys, rng=3))
+SEQ, BATCH, STEPS = (64, 2, 2) if SMOKE else (128, 4, 4)
 small_prob = Problem(cfg=small_cfg, sys_cfg=small_sys, envs=small_envs,
-                     seq_len=128, batch=4, local_steps=4,
+                     seq_len=SEQ, batch=BATCH, local_steps=STEPS,
                      rank_candidates=(1, 2, 4))
 small_alloc, small_hist = bcd_minimize_delay_per_client(small_prob)
 print(f"\ntraining fleet: ell_k={small_alloc.ell_k.tolist()}, "
@@ -132,3 +142,26 @@ print(f"trained 3 global rounds in ONE jitted call each "
       f"({sfl._round_traces} trace): loss {history.losses[0]:.3f} -> "
       f"{history.losses[-1]:.3f}; hardware {history.wall_seconds:.1f}s, "
       f"modeled wireless {history.modeled_seconds:.1f}s")
+
+# ---------------------------------------------------------------------------
+# dynamic wireless rounds: the same fleet under per-round block fading,
+# deadline straggler dropout (mask computed in-graph from the traced channel
+# state) and drift-triggered warm re-allocation — every round of the episode
+# reuses ONE compiled trace, including rounds that re-allocate (ell_k, r_k)
+# ---------------------------------------------------------------------------
+dyn_sfl = SflLLM.from_allocation(small_prob, small_alloc, params,
+                                 optimizer=adamw(1e-3), dynamic=True)
+dyn_state = dyn_sfl.init_state(dyn_sfl.init_lora(jax.random.key(7)))
+wireless = WirelessDynamics(small_prob, small_alloc, dyn_sfl,
+                            fade_std_db=8.0, fade_rho=0.5,
+                            deadline_factor=1.2, drift_threshold=0.15,
+                            rng=0)
+dyn_trainer = Trainer(SflRound(dyn_sfl, [1.0] * K),
+                      local_steps=small_prob.local_steps, log_every=1,
+                      dynamics=wireless)
+dyn_state, dh = dyn_trainer.fit(dyn_state, data_iter(), global_rounds=3)
+dropped = sum(len(p) - sum(p) for p in dh.participation)
+print(f"dynamic episode: {dyn_sfl._round_traces} round trace, "
+      f"{len(dh.realloc_rounds)} re-allocations, {dropped} client-rounds "
+      f"dropped, modeled wireless {dh.modeled_seconds:.1f}s "
+      f"(deadline {wireless.deadline_s:.2f}s/round)")

@@ -16,9 +16,8 @@ ICI.
 from __future__ import annotations
 
 import json
-import math
 import re
-from dataclasses import dataclass, field, asdict
+from dataclasses import asdict, dataclass
 from typing import Dict, Optional
 
 PEAK_FLOPS = 197e12          # bf16 per chip

@@ -9,8 +9,8 @@ pattern repeats (compile time independent of depth).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Literal, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Literal, Optional, Tuple
 
 Mixer = Literal["attention", "mamba"]
 Mlp = Literal["dense", "moe", "none"]

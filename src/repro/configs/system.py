@@ -5,7 +5,7 @@ capability f in cycles/s, kappa in cycles/FLOP.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Tuple
 
 

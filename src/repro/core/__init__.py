@@ -1,40 +1,43 @@
 """The paper's primary contribution: SflLLM — split federated LoRA
 fine-tuning (Algorithm 1) + joint resource allocation (Algorithms 2-3)."""
 from .aggregation import (broadcast_het, broadcast_stacked, fedavg,
-                          fedavg_het, fedavg_stacked)
-from .channel import ClientEnv, sample_clients
+                          fedavg_het, fedavg_partial, fedavg_stacked)
+from .channel import ClientEnv, FadingProcess, fade_clients, sample_clients
 from .convergence import ConvergenceModel, DEFAULT_E, fit_convergence_model
-from .latency import (het_local_round_latency, het_total_latency,
+from .latency import (client_round_seconds, client_round_seconds_host,
+                      het_local_round_latency, het_total_latency,
                       latency_report, latency_report_het,
-                      local_round_latency, split_workload, total_latency)
+                      local_round_latency, split_workload, total_latency,
+                      workload_tables)
 from .lora import (adapter_bytes_per_layer, client_slot_masks, count_params,
                    merge_adapter, split_tree)
-from .resource import (Allocation, HeteroAllocation, Problem, baseline,
-                       bcd_minimize_delay, bcd_minimize_delay_per_client,
-                       best_global_pair, greedy_subchannels,
-                       greedy_subchannels_het, objective, objective_grid,
-                       objective_het, refine_per_client, solve_power_control,
+from .resource import (Allocation, HeteroAllocation, Problem, as_hetero,
+                       baseline, bcd_minimize_delay,
+                       bcd_minimize_delay_per_client, best_global_pair,
+                       greedy_subchannels, greedy_subchannels_het, objective,
+                       objective_grid, objective_het, reallocate_warm,
+                       refine_per_client, solve_power_control,
                        solve_power_control_het, solve_power_control_slsqp,
                        total_delay)
-from .sfl import CentralizedLoRA, SflLLM, SflState
+from .sfl import CentralizedLoRA, RoundDynamics, SflLLM, SflState
 from .split import mu_vector, valid_splits
 from .workload import layer_workloads, lm_head_flops
 
 __all__ = [
-    "fedavg", "fedavg_het", "fedavg_stacked", "broadcast_het",
-    "broadcast_stacked", "ClientEnv", "sample_clients", "ConvergenceModel",
-    "DEFAULT_E",
+    "fedavg", "fedavg_het", "fedavg_partial", "fedavg_stacked",
+    "broadcast_het", "broadcast_stacked", "ClientEnv", "FadingProcess",
+    "fade_clients", "sample_clients", "ConvergenceModel", "DEFAULT_E",
     "fit_convergence_model", "latency_report", "latency_report_het",
     "local_round_latency", "het_local_round_latency", "het_total_latency",
-    "split_workload", "total_latency", "adapter_bytes_per_layer",
-    "client_slot_masks",
+    "split_workload", "total_latency", "client_round_seconds",
+    "client_round_seconds_host", "workload_tables", "adapter_bytes_per_layer", "client_slot_masks",
     "count_params", "merge_adapter", "split_tree", "Allocation",
-    "HeteroAllocation", "Problem",
+    "HeteroAllocation", "Problem", "as_hetero",
     "baseline", "bcd_minimize_delay", "bcd_minimize_delay_per_client",
     "best_global_pair", "greedy_subchannels", "greedy_subchannels_het",
-    "objective", "objective_grid", "objective_het", "refine_per_client",
-    "solve_power_control", "solve_power_control_het",
+    "objective", "objective_grid", "objective_het", "reallocate_warm",
+    "refine_per_client", "solve_power_control", "solve_power_control_het",
     "solve_power_control_slsqp", "total_delay", "CentralizedLoRA",
-    "SflLLM", "SflState", "mu_vector", "valid_splits", "layer_workloads",
-    "lm_head_flops",
+    "RoundDynamics", "SflLLM", "SflState", "mu_vector", "valid_splits",
+    "layer_workloads", "lm_head_flops",
 ]

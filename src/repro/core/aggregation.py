@@ -70,6 +70,28 @@ def fedavg_het(stacked: Any, weights: jax.Array, masks: Any) -> Any:
     return jax.tree.map(_avg, stacked, masks)
 
 
+def fedavg_partial(stacked: Any, weights: jax.Array, participation,
+                   masks: Any = None) -> Any:
+    """Eq. 7 under partial participation: the weighted average runs over
+    the surviving clients only — dropped clients (``participation`` 0)
+    contribute exactly zero weight mass, so the global adapter is the
+    survivors' FedAvg.  Composes with the rank-aware slot masks of
+    heterogeneous fleets (``fedavg_het``).
+
+    With ``participation=None`` (or all-ones) this IS ``fedavg_het`` —
+    and therefore ``fedavg_stacked`` when ``masks`` is also None — since
+    multiplying the weights by 1.0 is exact: bit-identical, same graph
+    shape.  With *every* client dropped the weight mass is zero and the
+    average degenerates to zeros; callers keep the previous state in that
+    case (see ``SflLLM._aggregate_impl``).
+    """
+    if participation is None:
+        return fedavg_het(stacked, weights, masks)
+    w = jnp.asarray(weights, jnp.float32) * jnp.asarray(participation,
+                                                        jnp.float32)
+    return fedavg_het(stacked, w, masks)
+
+
 def broadcast_het(global_tree: Any, num_clients: int, masks: Any) -> Any:
     """Broadcast + per-client truncation: every client receives the global
     adapter with its dead slots (rank > r_k, repeats >= rep_k) re-zeroed,

@@ -59,20 +59,56 @@ def sample_clients(sys_cfg: SystemConfig, rng: np.random.Generator | int = 0
     return out
 
 
+def _apply_shadow_db(envs: Sequence[ClientEnv], x_db: np.ndarray
+                     ) -> List[ClientEnv]:
+    """Scale each env's (gain_main, gain_fed) by 10^(x/10), x: (K, 2) dB."""
+    fac = 10.0 ** (np.asarray(x_db, float) / 10.0)
+    return [ClientEnv(
+        f_hz=e.f_hz, kappa=e.kappa, d_main_m=e.d_main_m,
+        d_fed_m=e.d_fed_m, gain_main=e.gain_main * float(f[0]),
+        gain_fed=e.gain_fed * float(f[1])) for e, f in zip(envs, fac)]
+
+
 def fade_clients(envs: Sequence[ClientEnv], rng, std_db: float = 4.0
                  ) -> List[ClientEnv]:
     """Per-round block fading: lognormal perturbation of the average gains
     (the paper's 'time-varying and dynamically varying communication
     resources').  Returns a new list of ClientEnv."""
     rng = np.random.default_rng(rng) if isinstance(rng, int) else rng
-    out = []
-    for e in envs:
-        f_main, f_fed = 10.0 ** (rng.normal(0.0, std_db, 2) / 10.0)
-        out.append(ClientEnv(
-            f_hz=e.f_hz, kappa=e.kappa, d_main_m=e.d_main_m,
-            d_fed_m=e.d_fed_m, gain_main=e.gain_main * f_main,
-            gain_fed=e.gain_fed * f_fed))
-    return out
+    return _apply_shadow_db(envs, rng.normal(0.0, std_db, (len(envs), 2)))
+
+
+class FadingProcess:
+    """Temporally-correlated block fading around the sampled average gains.
+
+    AR(1) in the dB domain:  x_t = rho x_{t-1} + sqrt(1 - rho^2) n_t  with
+    n_t ~ N(0, std_db^2), applied to the *base* envs each round, so every
+    round's marginal distribution matches one :func:`fade_clients` draw
+    (``rho=0`` degenerates to exactly i.i.d. per-round fading) while
+    ``rho>0`` models channel coherence across consecutive global rounds —
+    the regime where drift-triggered re-allocation pays off (a deep fade
+    persists long enough for the new allocation to amortize).
+    """
+
+    def __init__(self, envs: Sequence[ClientEnv], std_db: float = 4.0,
+                 rho: float = 0.0, rng: np.random.Generator | int = 0):
+        if not 0.0 <= rho < 1.0:
+            raise ValueError(f"rho must be in [0, 1), got {rho}")
+        self.base = tuple(envs)
+        self.std_db = float(std_db)
+        self.rho = float(rho)
+        self.rng = np.random.default_rng(rng) if isinstance(rng, int) else rng
+        self._x: np.ndarray | None = None       # current dB state (K, 2)
+
+    def step(self) -> List[ClientEnv]:
+        """Advance one round; returns the faded envs for this round."""
+        n = self.rng.normal(0.0, self.std_db, (len(self.base), 2))
+        if self._x is None:
+            self._x = n                          # stationary start
+        else:
+            self._x = (self.rho * self._x
+                       + math.sqrt(1.0 - self.rho ** 2) * n)
+        return _apply_shadow_db(self.base, self._x)
 
 
 def subchannel_bandwidths(sys_cfg: SystemConfig, which: str) -> np.ndarray:

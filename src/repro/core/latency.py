@@ -1,8 +1,15 @@
-"""Training-delay model — paper Section V-A, eqs. (8)–(17)."""
+"""Training-delay model — paper Section V-A, eqs. (8)–(17).
+
+Two forms live here: the host-side (numpy) report functions the resource
+allocator sweeps, and a traced (jnp) twin of the *client-attributable*
+share of the round delay (``workload_tables`` + ``client_round_seconds``)
+so the compiled round engine can evaluate deadline-based straggler dropout
+in-graph from per-round traced channel state without retracing.
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, List, Sequence
+from typing import Dict, List, Sequence
 
 import numpy as np
 
@@ -58,6 +65,89 @@ def split_workload(cfg: ArchConfig, workloads: List[LayerWorkload],
             seq_len * cfg.d_model * 2),
         dtheta_c=rank * sum(w.dxi for w in c),
     )
+
+
+# ---------------------------------------------------------------------------
+# traced twin: per-client round delay as a function of (ell, r) indices and
+# traced channel state — the dropout mask of the dynamic round engine
+# ---------------------------------------------------------------------------
+
+def workload_tables(cfg: ArchConfig, seq_len: int) -> Dict[str, np.ndarray]:
+    """Cumulative per-layer workload tables indexed by the split point.
+
+    ``rho_cum[ell]`` = Phi_c^F(ell) (frozen client FP FLOPs/sample),
+    ``drho_cum[ell]`` = DeltaPhi_c^F(ell, r=1) (multiply by r),
+    ``gamma[ell]`` = Gamma_s(ell) (split-activation bytes/sample) and
+    ``dxi_cum[ell]`` = DeltaTheta_c(ell, r=1) (multiply by r), each of
+    length ``num_layers + 1`` so a traced ``ell`` gathers its own
+    :func:`split_workload` terms inside a jitted round.
+    """
+    ws = layer_workloads(cfg, seq_len)
+    rho = np.array([w.rho for w in ws], np.float64)
+    drho = np.array([w.drho for w in ws], np.float64)
+    dxi = np.array([w.dxi for w in ws], np.float64)
+    psi = np.array([w.psi for w in ws], np.float64)
+    gamma0 = float(seq_len * cfg.d_model * 2)      # pre-layer-0 fallback
+    return {
+        "rho_cum": np.concatenate([[0.0], np.cumsum(rho)]),
+        "drho_cum": np.concatenate([[0.0], np.cumsum(drho)]),
+        "dxi_cum": np.concatenate([[0.0], np.cumsum(dxi)]),
+        "gamma": np.concatenate([[gamma0], psi]),
+    }
+
+
+def client_round_seconds(tables: Dict[str, np.ndarray], ell, rank, f_hz,
+                         kappa, rates_main, rates_fed, batch: int,
+                         local_steps: int):
+    """Traced (jnp) client share of one global round, per client:
+
+        T_k = I * (T_k^F + T_k^s + T_k^B) + T_k^f            (eqs. 8/10/13/15)
+
+    i.e. the part of eq. (16)-(17) attributable to client k alone (the
+    pooled server FP/BP is common to the fleet).  ``ell``/``rank`` may be
+    traced (K,) arrays — per-round re-allocation changes them without a
+    retrace — as may the channel state (``f_hz``, ``rates_*``).  Matches
+    the host-side ``t_client_fp``/``t_act_upload``/``t_client_bp``/
+    ``t_lora_upload`` exactly (BP = 2 x FP).
+    """
+    import jax.numpy as jnp
+
+    ell = jnp.asarray(ell, jnp.int32)
+    rank = jnp.asarray(rank, jnp.float32)
+    phi = jnp.asarray(tables["rho_cum"], jnp.float32)[ell]
+    dphi = rank * jnp.asarray(tables["drho_cum"], jnp.float32)[ell]
+    gamma = jnp.asarray(tables["gamma"], jnp.float32)[ell]
+    dtheta = rank * jnp.asarray(tables["dxi_cum"], jnp.float32)[ell]
+    t_fp = batch * kappa * (phi + dphi) / f_hz
+    t_up = batch * gamma * 8.0 / jnp.maximum(rates_main, 1e-9)
+    t_bp = 2.0 * t_fp
+    t_fed = dtheta * 8.0 / jnp.maximum(rates_fed, 1e-9)
+    return local_steps * (t_fp + t_up + t_bp) + t_fed
+
+
+def client_round_seconds_host(tables: Dict[str, np.ndarray], ell_k, rank_k,
+                              f_hz, kappa, rates_main, rates_fed,
+                              batch: int, local_steps: int) -> np.ndarray:
+    """Numpy twin of :func:`client_round_seconds` — same tables, same
+    formula, and the SAME float32 arithmetic (term order included), so a
+    host-side dropout prediction agrees bit for bit with the traced
+    in-graph mask even when a client's T_k lands within rounding distance
+    of the deadline.  Edit the two twins together."""
+    f32 = np.float32
+    ell = np.asarray(ell_k, int)
+    rank = np.asarray(rank_k, f32)
+    phi = tables["rho_cum"].astype(f32)[ell]
+    dphi = rank * tables["drho_cum"].astype(f32)[ell]
+    gamma = tables["gamma"].astype(f32)[ell]
+    dtheta = rank * tables["dxi_cum"].astype(f32)[ell]
+    t_fp = f32(batch) * np.asarray(kappa, f32) * (phi + dphi) \
+        / np.asarray(f_hz, f32)
+    t_up = f32(batch) * gamma * f32(8.0) / np.maximum(
+        np.asarray(rates_main, f32), f32(1e-9))
+    t_bp = f32(2.0) * t_fp
+    t_fed = dtheta * f32(8.0) / np.maximum(
+        np.asarray(rates_fed, f32), f32(1e-9))
+    return f32(local_steps) * (t_fp + t_up + t_bp) + t_fed
 
 
 # ---------------------------------------------------------------------------

@@ -52,7 +52,8 @@ def adapter_bytes_per_layer(cfg, rank: int, bytes_per_param: int = 4) -> list:
     return out
 
 
-def client_slot_masks(client_template: Any, ranks, rep_counts=None):
+def client_slot_masks(client_template: Any, ranks, rep_counts=None,
+                      force: bool = False):
     """Per-client 0/1 masks over the padded adapter slots of a K-stacked
     client tree — the rank-heterogeneity bookkeeping of the hetero fleet.
 
@@ -69,7 +70,9 @@ def client_slot_masks(client_template: Any, ranks, rep_counts=None):
     broadcastable against the K-stacked adapters, their gradients, and
     their optimizer moments.  Returns None when nothing is masked (every
     client at full rank and full depth) so callers can keep the exact
-    homogeneous code path.
+    homogeneous code path; ``force=True`` builds the (all-ones) mask tree
+    anyway — per-round traced re-allocation needs a pytree of constant
+    structure across rounds.
     """
     ranks = tuple(int(r) for r in ranks)
     K = len(ranks)
@@ -83,7 +86,7 @@ def client_slot_masks(client_template: Any, ranks, rep_counts=None):
         return None
     full_depth = reps is None or all(c >= leaves[0].shape[0] for c in reps)
     r_max = max(ranks)
-    if full_depth and all(r == r_max for r in ranks):
+    if full_depth and all(r == r_max for r in ranks) and not force:
         return None
     if full_depth:
         reps = None

@@ -13,9 +13,8 @@
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field, replace
-from typing import Callable, List, Optional, Sequence, Tuple
+from dataclasses import dataclass, replace
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -113,6 +112,18 @@ class Problem:
 
     def cache_stats(self) -> dict:
         return dict(self._stats)
+
+    def with_envs(self, envs) -> "Problem":
+        """A per-round view of the same episode under new channel gains
+        (block fading).  The channel-independent workload caches (``_ws``/
+        ``_sw`` depend only on cfg x seq_len) carry over — shared dicts, so
+        later misses keep warming every round's view — while the
+        channel-dependent pair cache starts empty."""
+        new = replace(self, envs=tuple(envs))
+        if self.memoize:
+            object.__setattr__(new, "_ws_cache", self._ws_cache)
+            object.__setattr__(new, "_sw_cache", self._sw_cache)
+        return new
 
 
 # ---------------------------------------------------------------------------
@@ -541,14 +552,74 @@ def refine_per_client(prob: Problem, alloc: HeteroAllocation, *,
     return best, hist
 
 
+def as_hetero(prob: Problem, alloc: Allocation) -> HeteroAllocation:
+    """View any allocation as a per-client one (scalar decisions fanned
+    out to every client); HeteroAllocations pass through unchanged."""
+    if getattr(alloc, "ell_k", None) is not None:
+        return alloc
+    K = len(prob.envs)
+    return HeteroAllocation(
+        assign_main=alloc.assign_main.copy(),
+        assign_fed=alloc.assign_fed.copy(),
+        power_main=alloc.power_main.copy(),
+        power_fed=alloc.power_fed.copy(),
+        ell_c=int(alloc.ell_c), rank=int(alloc.rank),
+        ell_k=np.full(K, int(alloc.ell_c)),
+        rank_k=np.full(K, int(alloc.rank)))
+
+
+def reallocate_warm(prob: Problem, prev: Allocation, *, max_sweeps: int = 2,
+                    verbose: bool = False
+                    ) -> Tuple[HeteroAllocation, List[float]]:
+    """Warm-started re-allocation for a drifted channel episode.
+
+    Skips the cold global BCD: re-solves power for the previous decision
+    under the new envs, tries a fresh greedy subchannel assignment of the
+    same (ell_k, r_k), seeds per-client refinement from the better of the
+    two.  Monotone versus the previous allocation *evaluated on the same
+    (new) channel*: the power constraints (C4/C5) do not depend on the
+    channel, so ``prev``'s powers stay feasible and the re-solved powers
+    are optimal for its configuration; refinement accepts only strict
+    improvements.  Hence ``objective_het(prob, result) <=
+    objective_het(prob, prev)`` always.
+    """
+    prev = as_hetero(prob, prev)
+    t_prev = objective_het(prob, prev)
+    keep = solve_power_control_het(prob, _copy_hetero(prev))
+    regreedy = solve_power_control_het(
+        prob, greedy_subchannels_het(prob, prev.ell_k, prev.rank_k))
+    seed = min((keep, regreedy), key=lambda a: objective_het(prob, a))
+    best, hist = refine_per_client(prob, seed, max_sweeps=max_sweeps,
+                                   verbose=verbose)
+    return best, [t_prev] + hist
+
+
+def _copy_hetero(alloc: HeteroAllocation) -> HeteroAllocation:
+    """Deep-ish copy so downstream ``replace`` calls never alias arrays."""
+    return replace(alloc,
+                   assign_main=alloc.assign_main.copy(),
+                   assign_fed=alloc.assign_fed.copy(),
+                   power_main=alloc.power_main.copy(),
+                   power_fed=alloc.power_fed.copy(),
+                   ell_k=alloc.ell_k.copy(), rank_k=alloc.rank_k.copy())
+
+
 def bcd_minimize_delay_per_client(prob: Problem, *, rank0: int = 4,
                                   eps: float = 1e-6, max_iters: int = 20,
-                                  max_sweeps: int = 3, verbose: bool = False
+                                  max_sweeps: int = 3, verbose: bool = False,
+                                  warm_start: Optional[Allocation] = None
                                   ) -> Tuple[HeteroAllocation, List[float]]:
     """Algorithm 3 extended with per-client (ell_k, r_k): run the global
     BCD, anchor on the exhaustive best single pair, then greedy per-client
     refinement.  The seed is the best global-pair allocation, so the
-    heterogeneous result is ≤ it by construction."""
+    heterogeneous result is ≤ it by construction.
+
+    ``warm_start``: a previous allocation (e.g. last round's) — skips the
+    global BCD and refines from it instead (:func:`reallocate_warm`), the
+    per-round path of the drift-triggered re-allocation loop."""
+    if warm_start is not None:
+        return reallocate_warm(prob, warm_start, max_sweeps=max_sweeps,
+                               verbose=verbose)
     alloc, hist = bcd_minimize_delay(prob, rank0=rank0, eps=eps,
                                      max_iters=max_iters, verbose=verbose)
     anchor, t_anchor = best_global_pair(prob, alloc)

@@ -39,12 +39,24 @@ each client's stream at its own depth via a per-sample gate
 compiles to ONE jitted round (uniform shapes; masks make the padded math
 exact) — when every client is configured identically, the legacy
 homogeneous code path is taken unchanged, bit for bit.
+
+Dynamic wireless rounds (the time axis): real fleets fade, straggle and
+drop out *between* rounds.  ``train_round`` accepts a :class:`RoundDynamics`
+of per-round **traced** inputs — channel state (uplink rates, compute), a
+round deadline, an explicit participation mask, and optionally a whole
+re-allocated (ell_k, r_k) decision as arrays (``allocation_dynamics``) —
+so every round of a time-varying episode reuses ONE compiled trace.
+Straggler dropout is evaluated in-graph (the traced twin of the Section V
+delay model, ``core.latency.client_round_seconds``, against the deadline);
+FedAvg generalizes to partial participation (``fedavg_partial``: survivors
+average, dropped clients keep their stale adapter and rejoin from it); and
+all masking is exact under full participation, so a dynamic round with
+every client present reproduces the static trajectory bit for bit.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
-from typing import Any, Dict, Optional, Sequence, Tuple, Union
+from typing import Any, Dict, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -56,7 +68,8 @@ from ..models.layers import apply_norm, embed, unembed
 from ..models.model import IGNORE_ID
 from ..models.stack import Runtime, default_train_runtime
 from ..optim import Optimizer, apply_updates
-from .aggregation import broadcast_het, fedavg_het
+from .aggregation import broadcast_het, fedavg_partial
+from .latency import client_round_seconds, workload_tables
 from .lora import client_slot_masks
 from .split import layers_to_reps
 
@@ -94,6 +107,55 @@ class SflState:
     step: jax.Array
 
 
+@jax.tree_util.register_dataclass
+@dataclass
+class RoundDynamics:
+    """Per-round traced inputs of a dynamic wireless round.
+
+    Every field is optional and, when present, is a traced array — the
+    values change round to round with NO retrace.  The pytree *structure*
+    (which fields are arrays vs None) must stay constant across the rounds
+    of one episode; that is what the single-trace guarantee hangs on.
+
+    Participation / dropout (pick one):
+      participation  (K,) 0/1 mask, used as-is;
+      deadline_s     scalar round deadline on the client-attributable share
+                     T_k = I(T_k^F + T_k^s + T_k^B) + T_k^f, evaluated
+                     in a small jitted mask function from the channel state
+                     below — a client whose modeled delay exceeds it is
+                     dropped for the round.  The resulting mask feeds the
+                     SAME main round executable a static round uses (with
+                     an all-ones mask), so every round of a trainer —
+                     static, faded, dropped, re-allocated — shares one
+                     compiled trace and full participation bit-reproduces
+                     the static trajectory by construction.
+
+    Channel state (deadline dropout inputs; eqs. 8/10/13/15):
+      rates_main / rates_fed   (K,) uplink rates (bps) under this round's
+                               fading and the current power/subchannels;
+      f_hz / kappa             (K,) client compute capability / cycles-per-FLOP.
+
+    Per-round allocation (from ``SflLLM.allocation_dynamics``; requires a
+    capacity envelope, see ``ell_range``/``rank_max``):
+      ell / rank       (K,) split layers and LoRA ranks (latency model);
+      rep_hi           (K,) int32 split boundaries in repeat units;
+      slot_masks       pytree of per-client slot occupancy masks;
+      scales           (K,) adapter scales alpha / r_k.
+    """
+
+    participation: Optional[jax.Array] = None
+    rates_main: Optional[jax.Array] = None
+    rates_fed: Optional[jax.Array] = None
+    f_hz: Optional[jax.Array] = None
+    kappa: Optional[jax.Array] = None
+    deadline_s: Optional[jax.Array] = None
+    ell: Optional[jax.Array] = None
+    rank: Optional[jax.Array] = None
+    rep_hi: Optional[jax.Array] = None
+    slot_masks: Optional[Any] = None
+    scales: Optional[jax.Array] = None
+
+
 class SflLLM:
     """Split-federated LoRA fine-tuning of one ArchConfig model."""
 
@@ -104,7 +166,9 @@ class SflLLM:
                  aux_coef: Optional[float] = None,
                  act_quant: bool = False,
                  mesh=None, donate: bool = True,
-                 ranks: Optional[Sequence[int]] = None):
+                 ranks: Optional[Sequence[int]] = None,
+                 ell_range: Optional[Sequence[int]] = None,
+                 rank_max: Optional[int] = None):
         self.cfg = cfg
         self.tc = train_cfg
         # default: the fast-path runtime (chunked attention + fused LoRA
@@ -123,15 +187,37 @@ class SflLLM:
         self.ell_k = ells
         self.rep_k = tuple(layers_to_reps(cfg, e) for e in ells)
         self.rep_min, self.rep_max = min(self.rep_k), max(self.rep_k)
-        self.hetero_split = len(set(self.rep_k)) > 1
         self.rank_k = (None if ranks is None
                        else tuple(int(r) for r in ranks))
         if self.rank_k is not None and len(self.rank_k) != K:
             raise ValueError(f"{len(self.rank_k)} ranks for {K} clients")
         self.r_max = max(self.rank_k) if self.rank_k else cfg.lora_rank
+
+        # ---- capacity envelope (per-round traced re-allocation) ---------
+        # widen the frozen-weight partition and the adapter rank padding so
+        # a later allocation_dynamics() can move every client's (ell_k, r_k)
+        # anywhere inside [ell_range] x [1, rank_max] without retracing
+        self.dynamic_capacity = ell_range is not None or rank_max is not None
+        if ell_range is not None:
+            lo, hi = int(min(ell_range)), int(max(ell_range))
+            if not 1 <= lo <= hi <= cfg.num_layers:
+                raise ValueError(f"ell_range {ell_range} outside "
+                                 f"[1, {cfg.num_layers}]")
+            self.rep_min = min(self.rep_min, layers_to_reps(cfg, lo))
+            self.rep_max = max(self.rep_max, layers_to_reps(cfg, hi))
+        if rank_max is not None:
+            if self.rank_k is None:
+                self.rank_k = (cfg.lora_rank,) * K
+            self.r_max = max(self.r_max, int(rank_max))
+
+        # gates are needed whenever any client's boundary sits strictly
+        # inside the scanned window (mixed fleet OR widened envelope)
+        self.hetero_split = (len(set(self.rep_k)) > 1
+                             or self.rep_min != self.rep_max)
         self.hetero_rank = (self.rank_k is not None
                             and len(set(self.rank_k)) > 1)
-        self.hetero = self.hetero_split or self.hetero_rank
+        pad_rank = self.rank_k is not None and self.r_max > max(self.rank_k)
+        self.hetero = self.hetero_split or self.hetero_rank or pad_rank
         # legacy scalar views (homogeneous callers / reports)
         self.ell_c = ells[0] if not self.hetero_split else max(ells)
         self.rep_split = self.rep_max
@@ -173,41 +259,69 @@ class SflLLM:
                              else self._scale_k[0])
         self._client_masks = None
         if self.hetero:
-            from ..models.model import abstract_lora
-            tmpl = abstract_lora(cfg, self.r_max, dtype=jnp.float32)
-            client_tmpl = jax.tree.map(      # [:rep_max] on abstract leaves
-                lambda v: jax.ShapeDtypeStruct(
-                    (self.rep_max,) + v.shape[1:], v.dtype), tmpl)
             ranks_k = self.rank_k or (self.r_max,) * K
-            self._client_masks = client_slot_masks(
-                client_tmpl, ranks_k,
-                self.rep_k if self.hetero_split else None)
+            self._client_masks = self._build_client_masks(
+                ranks_k, self.rep_k if self.hetero_split else None)
             self._rep_hi = jnp.asarray(self.rep_k, jnp.int32)      # (K,)
-            if mesh is not None and self._client_masks is not None:
-                from ..sharding.specs import client_array_shardings
-                self._client_masks = jax.device_put(
-                    self._client_masks,
-                    client_array_shardings(self._client_masks, mesh))
 
         self._round_traces = 0        # host-side retrace counter (tests)
+        self._mask_traces = 0         # ditto for the dropout-mask function
         self._jit_local_step = jax.jit(self._local_step)
         self._jit_eval = jax.jit(self._eval_loss)
+        # legacy unmasked round — kept as the bench baseline for the
+        # masking overhead (benchmarks/bench_dynamic.py); train_round
+        # itself always runs the masked graph below
         self._jit_round = jax.jit(self._train_round,
                                   donate_argnums=(0,) if donate else ())
+        self._jit_round_part = jax.jit(self._train_round_part,
+                                       donate_argnums=(0,) if donate else ())
+        self._jit_mask = jax.jit(self._dropout_mask,
+                                 static_argnums=(7, 8, 9))
+
+    # ------------------------------------------------------------------
+    def _build_client_masks(self, ranks, reps, force: bool = False):
+        """Slot-mask tree for a per-client (rank, rep) configuration
+        against this trainer's capacity envelope — the ONE construction
+        both the static closure masks and the per-round traced masks of
+        ``allocation_dynamics`` go through, so they can never drift apart:
+        abstract template at r_max, truncated to [:rep_max], masked by
+        ``core.lora.client_slot_masks``, device-placed next to the stacked
+        state when a mesh is set."""
+        from ..models.model import abstract_lora
+        tmpl = abstract_lora(self.cfg, self.r_max, dtype=jnp.float32)
+        client_tmpl = jax.tree.map(      # [:rep_max] on abstract leaves
+            lambda v: jax.ShapeDtypeStruct(
+                (self.rep_max,) + v.shape[1:], v.dtype), tmpl)
+        masks = client_slot_masks(client_tmpl, ranks, reps, force=force)
+        if masks is not None and self.mesh is not None:
+            from ..sharding.specs import client_array_shardings
+            masks = jax.device_put(
+                masks, client_array_shardings(masks, self.mesh))
+        return masks
 
     # ------------------------------------------------------------------
     @classmethod
     def from_allocation(cls, prob, alloc, params: dict, optimizer: Optimizer,
-                        *, train_cfg: Optional[TrainConfig] = None, **kw
-                        ) -> "SflLLM":
+                        *, train_cfg: Optional[TrainConfig] = None,
+                        dynamic: bool = False, **kw) -> "SflLLM":
         """Build the trainer straight from a resource-allocation decision.
 
         ``prob``: core.resource.Problem; ``alloc``: an Allocation (global
         pair) or HeteroAllocation (per-client ``ell_k`` / ``rank_k`` from
         ``bcd_minimize_delay_per_client``).  The demo flow is: sample a
         wireless scenario -> BCD -> ``from_allocation`` -> train the fleet.
+
+        ``dynamic=True`` sizes the capacity envelope to the whole search
+        space of ``prob`` (every valid split x every candidate rank), so
+        per-round drift-triggered re-allocation can move each client's
+        (ell_k, r_k) between rounds without a retrace.
         """
         K = len(prob.envs)
+        if dynamic:
+            from .split import valid_splits
+            splits = valid_splits(prob.cfg)
+            kw.setdefault("ell_range", (min(splits), max(splits)))
+            kw.setdefault("rank_max", max(prob.rank_candidates))
         if train_cfg is None:
             train_cfg = TrainConfig(num_clients=K, batch_size=prob.batch,
                                     local_steps=prob.local_steps)
@@ -327,20 +441,53 @@ class SflLLM:
 
         batches: tokens (K, b, S), labels (K, b, S), optional frontend_emb.
         """
+        return self._step_impl(state, batches, None, None)
+
+    def _step_impl(self, state: SflState, batches: Dict[str, jax.Array],
+                   cfg_dyn: Optional[Dict[str, Any]], part):
+        """One local step, optionally under round dynamics.
+
+        ``cfg_dyn`` (dict with ``rep_hi`` / ``slot_masks`` / ``scales``, or
+        None) may override the per-client split boundaries / slot masks /
+        adapter scales with *traced* arrays (per-round re-allocation);
+        ``part`` is the (K,) 0/1 participation mask resolved for the round
+        (None = everyone).  With ``cfg_dyn is None and part is None`` this
+        is graph-for-graph the legacy static local step.  Every masking op
+        is exact under full participation — integer selects and multiplies
+        by 1.0 — so an all-ones mask computes exactly the unmasked step.
+        """
         tokens, labels = batches["tokens"], batches["labels"]
         fe = batches.get("frontend_emb")
+        if part is not None:
+            # a dropped client never uploads: its tokens leave the pooled
+            # loss (numerator AND denominator) through the label ignore
+            # mask, so the server adapter trains on the survivors' pool
+            # only and the cotangent of its activation stream is exactly 0
+            labels = jnp.where(part.reshape(-1, 1, 1) > 0, labels, IGNORE_ID)
+
+        rep_hi_dyn = cfg_dyn.get("rep_hi") if cfg_dyn is not None else None
+        scales_dyn = cfg_dyn.get("scales") if cfg_dyn is not None else None
+        masks = (cfg_dyn["slot_masks"]
+                 if cfg_dyn is not None
+                 and cfg_dyn.get("slot_masks") is not None
+                 else self._client_masks)
 
         # (a) client-side FP, all clients in parallel ----------------------
         # homogeneous fleets keep the legacy vmap signature (bit-identical
         # trace); heterogeneity threads per-client boundaries / adapter
         # scales through the client axis of the same single vmap
-        het_split = self.hetero_split
+        rep_hi = (rep_hi_dyn if rep_hi_dyn is not None
+                  else (self._rep_hi if self.hetero_split else None))
+        het_split = rep_hi is not None
         scales = self._scale_k
-        per_client_scale = isinstance(scales, tuple)
+        per_client_scale = isinstance(scales, tuple) or scales_dyn is not None
         if het_split or per_client_scale:
-            rep_hi = self._rep_hi if het_split else None
-            sc = (jnp.asarray(scales, jnp.float32) if per_client_scale
-                  else None)
+            if scales_dyn is not None:
+                sc = scales_dyn
+            elif isinstance(scales, tuple):
+                sc = jnp.asarray(scales, jnp.float32)
+            else:
+                sc = None
 
             def cf(lora_c, tok, f, rh, s):
                 return self._client_forward(
@@ -349,7 +496,7 @@ class SflLLM:
 
             in_axes = (0, 0, None if fe is None else 0,
                        0 if het_split else None,
-                       0 if per_client_scale else None)
+                       0 if sc is not None else None)
             fwd = lambda ls: jax.vmap(cf, in_axes=in_axes)(
                 ls, tokens, fe, rep_hi, sc)
         else:
@@ -372,7 +519,7 @@ class SflLLM:
         rep_lo = None
         if het_split:
             b = tokens.shape[1]
-            rep_lo = jnp.repeat(self._rep_hi - self.rep_min, b)  # (K*b,)
+            rep_lo = jnp.repeat(rep_hi - self.rep_min, b)  # (K*b,)
         grad_fn = jax.value_and_grad(self._server_loss, argnums=(0, 1),
                                      has_aux=True)
         (total, loss), (g_server, g_acts) = grad_fn(state.lora_server, acts,
@@ -380,19 +527,39 @@ class SflLLM:
 
         # (e) download dL/ds_k; (f) client-side BP --------------------------
         # client-side MoE aux loss contributes through the aux cotangent
-        (g_client,) = client_vjp((g_acts,
-                                  jnp.full_like(client_aux, self.aux_coef)))
+        # (masked per client under partial participation)
+        aux_seed = jnp.full_like(client_aux, self.aux_coef)
+        if part is not None:
+            aux_seed = aux_seed * part
+        (g_client,) = client_vjp((g_acts, aux_seed))
 
         upd_s, opt_s = self.opt.update(g_server, state.opt_server,
                                        state.lora_server)
         upd_c, opt_c = self.opt.update(g_client, state.opt_client,
                                        state.lora_client)
-        if self._client_masks is not None:
+        if masks is not None:
             # masked updates: dead rows/cols of the padded adapters stay
             # exactly zero no matter what the optimizer does with eps /
             # weight decay
             upd_c = jax.tree.map(lambda u, m: u * m.astype(u.dtype),
-                                 upd_c, self._client_masks)
+                                 upd_c, masks)
+        if part is not None:
+            # a dropped client's adapter AND optimizer moments freeze for
+            # the round: zero grads alone would still decay Adam moments
+            pcol = lambda v: part.reshape((-1,) + (1,) * (v.ndim - 1))
+            upd_c = jax.tree.map(lambda u: u * pcol(u).astype(u.dtype),
+                                 upd_c)
+            opt_c = jax.tree.map(
+                lambda n, o: n if n.ndim == 0
+                else jnp.where(pcol(n) > 0, n, o),
+                opt_c, state.opt_client)
+            # an empty round (every client past the deadline) freezes the
+            # server as well — nobody uploaded, nothing trained
+            any_p = part.sum() > 0
+            upd_s = jax.tree.map(
+                lambda u: jnp.where(any_p, u, jnp.zeros_like(u)), upd_s)
+            opt_s = jax.tree.map(lambda n, o: jnp.where(any_p, n, o),
+                                 opt_s, state.opt_server)
         new = SflState(
             lora_client=apply_updates(state.lora_client, upd_c),
             lora_server=apply_updates(state.lora_server, upd_s),
@@ -409,9 +576,23 @@ class SflLLM:
         Heterogeneous fleets aggregate slot-wise over each slot's owners
         and re-truncate on broadcast (fedavg_het/broadcast_het; exact
         fedavg_stacked when every client is full-rank/full-depth)."""
-        global_c = fedavg_het(state.lora_client, weights, self._client_masks)
-        lc_k = broadcast_het(global_c, self.tc.num_clients,
-                             self._client_masks)
+        return self._aggregate_impl(state, weights, None, self._client_masks)
+
+    def _aggregate_impl(self, state: SflState, weights: jax.Array, part,
+                        masks) -> SflState:
+        """Eq. 7 under (optional) partial participation: the global adapter
+        is the survivors' weighted average (``fedavg_partial``); a dropped
+        client missed the whole round — broadcast included — so it keeps
+        its stale adapter bit-exactly and rejoins from it next round.
+        If EVERY client dropped, the weight mass is zero and every client
+        keeps its state (no aggregation happened)."""
+        global_c = fedavg_partial(state.lora_client, weights, part, masks)
+        lc_k = broadcast_het(global_c, self.tc.num_clients, masks)
+        if part is not None:
+            pcol = lambda v: part.reshape((-1,) + (1,) * (v.ndim - 1))
+            lc_k = jax.tree.map(
+                lambda n, o: jnp.where(pcol(n) > 0, n, o),
+                lc_k, state.lora_client)
         return SflState(lora_client=lc_k, lora_server=state.lora_server,
                         opt_client=state.opt_client,
                         opt_server=state.opt_server, step=state.step)
@@ -433,10 +614,75 @@ class SflLLM:
         state, metrics = jax.lax.scan(self._local_step, state, round_batches)
         return self._aggregate(state, weights), metrics
 
-    def train_round(self, state: SflState, round_batches, sample_counts):
+    def _train_round_part(self, state: SflState, round_batches, weights,
+                          part, cfg_dyn):
+        """The one compiled global round every caller runs: scan + in-graph
+        FedAvg with the (K,) participation mask — and optionally a whole
+        re-allocated per-client configuration — as traced inputs.  Static
+        rounds pass an all-ones mask; faded / dropped / re-allocated rounds
+        pass this round's values.  Same structure => ONE trace for the
+        entire episode, and full participation is bit-identical to a static
+        round because it IS the same executable."""
+        self._round_traces += 1       # trace-time only: retrace telemetry
+        masks = (cfg_dyn["slot_masks"]
+                 if cfg_dyn is not None
+                 and cfg_dyn.get("slot_masks") is not None
+                 else self._client_masks)
+        state, metrics = jax.lax.scan(
+            lambda st, b: self._step_impl(st, b, cfg_dyn, part),
+            state, round_batches)
+        state = self._aggregate_impl(state, weights, part, masks)
+        return state, dict(metrics, participation=part)
+
+    def _dropout_mask(self, rates_main, rates_fed, f_hz, kappa, ell, rank,
+                      deadline_s, b: int, local_steps: int, seq_len: int):
+        """Deadline-aware straggler dropout, in-graph: the traced twin of
+        the Section V per-client delay (``core.latency.client_round_seconds``)
+        against the round deadline.  Jitted separately from the main round
+        (static_argnums on the shapes) so deadline rounds feed the SAME
+        main executable as static rounds — the mask is data, not structure."""
+        self._mask_traces += 1
+        tables = workload_tables(self.cfg, seq_len)
+        t_k = client_round_seconds(tables, ell, rank, f_hz, kappa,
+                                   rates_main, rates_fed, b, local_steps)
+        return (t_k <= deadline_s).astype(jnp.float32)
+
+    def _participation_for(self, dyn: RoundDynamics, batches):
+        """Resolve the round's (K,) mask: explicit wins, else deadline
+        dropout from the traced channel state, else all ones."""
+        K = self.tc.num_clients
+        if dyn.participation is not None:
+            return jnp.asarray(dyn.participation, jnp.float32)
+        if dyn.deadline_s is None:
+            return jnp.ones(K, jnp.float32)
+        if (dyn.rates_main is None or dyn.rates_fed is None
+                or dyn.f_hz is None or dyn.kappa is None):
+            raise ValueError("deadline dropout needs rates_main, rates_fed,"
+                             " f_hz and kappa in RoundDynamics")
+        I, _, b, S = batches["tokens"].shape
+        ell = (dyn.ell if dyn.ell is not None
+               else jnp.asarray(self.ell_k, jnp.int32))
+        rank = (dyn.rank if dyn.rank is not None
+                else jnp.asarray(self.rank_k or (self.cfg.lora_rank,) * K,
+                                 jnp.float32))
+        return self._jit_mask(dyn.rates_main, dyn.rates_fed, dyn.f_hz,
+                              dyn.kappa, ell, rank, dyn.deadline_s,
+                              int(b), int(I), int(S))
+
+    def train_round(self, state: SflState, round_batches, sample_counts,
+                    dynamics: Optional[RoundDynamics] = None):
         """Run one jitted global round.  Returns (state, metrics) with
-        metrics["loss"] of shape (I,).  State buffers are donated when the
-        runtime was built with donate=True — do not reuse the input state."""
+        metrics["loss"] of shape (I,) and metrics["participation"] of
+        shape (K,).  State buffers are donated when the runtime was built
+        with donate=True — do not reuse the input state.
+
+        ``dynamics``: per-round traced inputs (:class:`RoundDynamics`) for
+        time-varying episodes — fading channel state, deadline dropout /
+        participation, per-round re-allocation.  All rounds of a trainer
+        run ONE compiled graph (mask + optional config arrays are traced
+        inputs; a static round is the all-ones mask), so mixing static and
+        dynamic rounds never retraces as long as the re-allocation arrays
+        are either always or never supplied."""
         batches = {k: jnp.asarray(v) for k, v in round_batches.items()
                    if v is not None}
         weights = jnp.asarray(list(sample_counts), jnp.float32)
@@ -444,7 +690,52 @@ class SflLLM:
             from ..sharding.specs import round_batch_shardings
             batches = jax.device_put(
                 batches, round_batch_shardings(batches, self.mesh))
-        return self._jit_round(state, batches, weights)
+        dyn = RoundDynamics() if dynamics is None else dynamics
+        part = self._participation_for(dyn, batches)
+        cfg_dyn = None
+        if (dyn.rep_hi is not None or dyn.slot_masks is not None
+                or dyn.scales is not None):
+            cfg_dyn = {"rep_hi": dyn.rep_hi, "slot_masks": dyn.slot_masks,
+                       "scales": dyn.scales}
+        if self.mesh is not None:
+            from ..sharding.specs import round_dynamics_shardings
+            part, cfg_dyn = jax.device_put(
+                (part, cfg_dyn),
+                round_dynamics_shardings((part, cfg_dyn), self.mesh))
+        return self._jit_round_part(state, batches, weights, part, cfg_dyn)
+
+    def allocation_dynamics(self, ell_k, rank_k) -> Dict[str, Any]:
+        """A per-client allocation decision as RoundDynamics kwargs (``ell``
+        / ``rank`` / ``rep_hi`` / ``slot_masks`` / ``scales``), expressed
+        against this trainer's capacity envelope.  Swapping these between
+        rounds re-points the existing slot-mask machinery at the new
+        (ell_k, r_k) with NO retrace; the trainer must have been built with
+        a wide enough envelope (``ell_range`` / ``rank_max``, e.g. via
+        ``from_allocation(..., dynamic=True)``)."""
+        K = self.tc.num_clients
+        ells = tuple(int(e) for e in np.asarray(ell_k).reshape(-1))
+        ranks = tuple(int(r) for r in np.asarray(rank_k).reshape(-1))
+        if len(ells) != K or len(ranks) != K:
+            raise ValueError(f"{len(ells)} splits / {len(ranks)} ranks "
+                             f"for {K} clients")
+        reps = tuple(layers_to_reps(self.cfg, e) for e in ells)
+        if max(reps) > self.rep_max or min(reps) < self.rep_min:
+            raise ValueError(
+                f"split points {ells} leave the capacity envelope "
+                f"reps [{self.rep_min}, {self.rep_max}] — build the trainer "
+                "with ell_range (from_allocation(dynamic=True))")
+        if max(ranks) > self.r_max:
+            raise ValueError(f"rank {max(ranks)} > capacity r_max "
+                             f"{self.r_max} — build with rank_max")
+        masks = self._build_client_masks(ranks, reps, force=True)
+        return dict(
+            ell=jnp.asarray(ells, jnp.int32),
+            rank=jnp.asarray(ranks, jnp.float32),
+            rep_hi=jnp.asarray(reps, jnp.int32),
+            slot_masks=masks,
+            scales=jnp.asarray([self.cfg.lora_alpha / r for r in ranks],
+                               jnp.float32),
+        )
 
     # ------------------------------------------------------------------
     def local_step(self, state, batches):

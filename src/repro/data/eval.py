@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import math
 from collections import Counter
-from typing import Iterable, List, Sequence
+from typing import Iterable, Sequence
 
 
 def _ngrams(tokens: Sequence, n: int) -> Counter:

@@ -5,7 +5,7 @@ Targets follow the paper's NLG protocol: loss only on the reference tokens
 """
 from __future__ import annotations
 
-from typing import Dict, Iterator, List, Optional, Sequence
+from typing import Dict, Iterator, List, Sequence
 
 import numpy as np
 

@@ -17,8 +17,8 @@ from typing import Optional
 
 import jax
 
-from ..analysis.roofline import (Roofline, build_report, cost_analysis_dict,
-                                 memory_analysis_dict, parse_collectives)
+from ..analysis.roofline import (build_report, cost_analysis_dict,
+                                 memory_analysis_dict)
 from ..configs import ARCHS, SHAPES, get_arch, get_shape
 from ..models.stack import Runtime
 from ..optim import adamw

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.latency import client_round_seconds_host
 from ..data.pipeline import stack_rounds
 
 
@@ -43,8 +44,9 @@ class SflRound:
         self.sfl = sfl
         self.sample_counts = list(sample_counts)
 
-    def run_round(self, state, round_batches):
-        return self.sfl.train_round(state, round_batches, self.sample_counts)
+    def run_round(self, state, round_batches, dynamics=None):
+        return self.sfl.train_round(state, round_batches, self.sample_counts,
+                                    dynamics=dynamics)
 
     def checkpoint_payload(self, state) -> dict:
         return {"lora_server": state.lora_server,
@@ -153,6 +155,170 @@ def allocation_round_latency(prob, alloc) -> Dict[str, Any]:
 
 
 # ---------------------------------------------------------------------------
+# dynamic wireless rounds: fading -> deadline dropout -> drift re-allocation
+# ---------------------------------------------------------------------------
+
+class WirelessDynamics:
+    """Round-by-round wireless evolution for the compiled round engine.
+
+    Owns the host side of a time-varying episode; the numbers it produces
+    enter the jitted round as *traced* inputs (core.sfl.RoundDynamics), so
+    the whole episode — every fading draw, dropout pattern and re-allocated
+    (ell_k, r_k) — runs on ONE compiled trace:
+
+    * block fading: ``core.channel.FadingProcess`` (AR(1) in dB around the
+      sampled average gains; ``fade_rho=0`` = i.i.d. per-round draws);
+    * per-round rates: the current allocation's subchannels/powers
+      re-evaluated under the faded gains;
+    * straggler dropout: a round deadline on the client-attributable delay
+      share T_k = I(T_k^F + T_k^s + T_k^B) + T_k^f — the mask itself is
+      computed in-graph from the traced channel state;
+    * drift-triggered re-allocation: when the modeled delay of the current
+      allocation under this round's channel exceeds (1 + drift_threshold) x
+      its delay at (re)allocation time, ``bcd_minimize_delay_per_client``
+      re-runs warm-started from the previous HeteroAllocation (monotone:
+      never worse than keeping it), and the clients pick up their new
+      (ell_k, r_k) through the slot-mask machinery with no retrace.
+
+    Knobs:
+      fade_std_db      lognormal block-fading std in dB (paper-style 4-8);
+      fade_rho         AR(1) round-to-round fading correlation in [0, 1);
+      deadline_s       absolute round deadline in seconds (None = off);
+      deadline_factor  alternative: deadline = factor x max_k T_k evaluated
+                       at the last (re)allocation — re-bases on re-allocation;
+      drift_threshold  relative modeled-delay drift that triggers
+                       re-allocation (None = static allocation).
+    """
+
+    def __init__(self, prob, alloc, sfl, *, fade_std_db: float = 4.0,
+                 fade_rho: float = 0.0, deadline_s: Optional[float] = None,
+                 deadline_factor: Optional[float] = None,
+                 drift_threshold: Optional[float] = None,
+                 max_sweeps: int = 2, rng=0):
+        from ..core.channel import FadingProcess
+        from ..core.latency import workload_tables
+        from ..core.resource import as_hetero, total_delay
+
+        self.prob = prob
+        self.alloc = as_hetero(prob, alloc)
+        self.sfl = sfl
+        self.fading = FadingProcess(prob.envs, std_db=fade_std_db,
+                                    rho=fade_rho, rng=rng)
+        self.deadline_factor = deadline_factor
+        self.drift_threshold = drift_threshold
+        self.max_sweeps = max_sweeps
+        self._total_delay = total_delay
+        if drift_threshold is not None:
+            # fail fast: a drift-triggered re-allocation may pick ANY
+            # (ell, rank) in prob's search space — a trainer whose capacity
+            # envelope does not cover it would crash rounds into the episode
+            from ..core.split import layers_to_reps, valid_splits
+            splits = valid_splits(prob.cfg)
+            reps = [layers_to_reps(prob.cfg, e)
+                    for e in (min(splits), max(splits))]
+            if (min(reps) < sfl.rep_min or max(reps) > sfl.rep_max
+                    or max(prob.rank_candidates) > sfl.r_max):
+                raise ValueError(
+                    "re-allocation can leave the trainer's capacity "
+                    "envelope — build it with SflLLM.from_allocation(..., "
+                    "dynamic=True) or a wide enough ell_range/rank_max")
+        self._tables = workload_tables(prob.cfg, prob.seq_len)
+        self.ref_delay = total_delay(prob, self.alloc)
+        # only a re-allocating episode threads the per-client configuration
+        # as traced arrays; with a static allocation the trainer's closure
+        # config already matches, so the episode runs the SAME executable a
+        # plain static trainer uses (all-ones mask == bit-identical rounds)
+        self._cfg_arrays = (
+            sfl.allocation_dynamics(self.alloc.ell_k, self.alloc.rank_k)
+            if drift_threshold is not None else {})
+        self.deadline_s = deadline_s
+        if deadline_factor is not None:
+            if deadline_s is not None:
+                raise ValueError("pass deadline_s OR deadline_factor")
+            self._rebase_deadline(prob.envs)
+
+    # -- deadline re-basing: factor x slowest client at allocation time ----
+    def _client_seconds(self, envs) -> np.ndarray:
+        rates_m = self.alloc.rates_main(self.prob.sys_cfg, envs)
+        rates_f = self.alloc.rates_fed(self.prob.sys_cfg, envs)
+        t = client_round_seconds_host(
+            self._tables, self.alloc.ell_k, self.alloc.rank_k,
+            np.array([e.f_hz for e in envs]),
+            np.array([e.kappa for e in envs]),
+            rates_m, rates_f, self.prob.batch, self.prob.local_steps)
+        return np.asarray(t)
+
+    def _rebase_deadline(self, envs) -> None:
+        self.deadline_s = float(self.deadline_factor
+                                * self._client_seconds(envs).max())
+
+    # ------------------------------------------------------------------
+    def round_dynamics(self):
+        """Advance one round; returns (RoundDynamics, info dict)."""
+        from ..core.resource import bcd_minimize_delay_per_client
+        from ..core.sfl import RoundDynamics
+
+        envs_r = self.fading.step()
+        # with_envs keeps the channel-independent workload caches warm
+        # across rounds (the re-allocation sweeps hit them hundreds of
+        # times); only the channel-dependent pair cache resets
+        prob_r = self.prob.with_envs(envs_r)
+        delay = self._total_delay(prob_r, self.alloc)
+        info = {"modeled_delay": float(delay), "realloc": False}
+        if (self.drift_threshold is not None
+                and delay > (1.0 + self.drift_threshold) * self.ref_delay):
+            self.alloc, _ = bcd_minimize_delay_per_client(
+                prob_r, warm_start=self.alloc, max_sweeps=self.max_sweeps)
+            self.ref_delay = self._total_delay(prob_r, self.alloc)
+            self._cfg_arrays = self.sfl.allocation_dynamics(
+                self.alloc.ell_k, self.alloc.rank_k)
+            if self.deadline_factor is not None:
+                self._rebase_deadline(envs_r)
+            info["realloc"] = True
+            info["modeled_delay"] = float(self.ref_delay)
+
+        sys_cfg = self.prob.sys_cfg
+        rates_m = self.alloc.rates_main(sys_cfg, envs_r)
+        rates_f = self.alloc.rates_fed(sys_cfg, envs_r)
+        t_k = self._client_seconds(envs_r)
+        if self.deadline_s is not None:
+            # f32 compare, matching the in-graph mask bit for bit
+            part = (t_k <= np.float32(self.deadline_s)).astype(float)
+        else:
+            part = np.ones(len(envs_r))
+        info["participation"] = part.astype(int).tolist()
+        info["round_seconds"] = self._round_seconds(envs_r, rates_m, rates_f,
+                                                    part)
+
+        dyn = RoundDynamics(
+            rates_main=jnp.asarray(rates_m, jnp.float32),
+            rates_fed=jnp.asarray(rates_f, jnp.float32),
+            f_hz=jnp.asarray([e.f_hz for e in envs_r], jnp.float32),
+            kappa=jnp.asarray([e.kappa for e in envs_r], jnp.float32),
+            deadline_s=(None if self.deadline_s is None
+                        else jnp.float32(self.deadline_s)),
+            **self._cfg_arrays)
+        return dyn, info
+
+    def _round_seconds(self, envs, rates_m, rates_f, part) -> float:
+        """Modeled wall clock of this round: survivors' eq. 16-17 terms (the
+        server proceeds at the deadline without the stragglers); an empty
+        round costs the waited-out deadline."""
+        from ..core.latency import (het_local_round_latency, t_lora_upload)
+
+        surv = [k for k in range(len(envs)) if part[k] > 0]
+        if not surv:
+            return float(self.deadline_s or 0.0)
+        sws = [self.prob.sw(int(self.alloc.ell_k[k]),
+                            int(self.alloc.rank_k[k])) for k in surv]
+        t_local = het_local_round_latency(
+            sws, [envs[k] for k in surv], [rates_m[k] for k in surv],
+            self.prob.sys_cfg, self.prob.batch)
+        t3 = max(t_lora_upload(sw, rates_f[k]) for sw, k in zip(sws, surv))
+        return float(self.prob.local_steps * t_local + t3)
+
+
+# ---------------------------------------------------------------------------
 # the driver
 # ---------------------------------------------------------------------------
 
@@ -163,6 +329,9 @@ class TrainHistory:
     wall_seconds: float = 0.0
     modeled_seconds: float = 0.0          # wireless-network wall clock
     steps_per_sec: float = 0.0
+    participation: List[List[int]] = field(default_factory=list)  # per round
+    realloc_rounds: List[int] = field(default_factory=list)
+    modeled_delays: List[float] = field(default_factory=list)  # total T per rnd
 
 
 class Trainer:
@@ -173,6 +342,11 @@ class Trainer:
     log_every       print every N rounds (0 = silent)
     round_latency   optional core.latency.latency_report dict; accumulates
                     the modeled wireless wall clock per round
+    dynamics        optional WirelessDynamics — per-round fading, deadline
+                    dropout and drift re-allocation threaded into the
+                    compiled round as traced inputs (SflRound only); the
+                    modeled wall clock then follows each round's actual
+                    faded channel instead of a static report
     checkpoint_path/checkpoint_every
                     save algo.checkpoint_payload(state) every N rounds
     callback        callback(round_idx, state, history) after each round
@@ -180,12 +354,14 @@ class Trainer:
 
     def __init__(self, algo, *, local_steps: int, log_every: int = 0,
                  round_latency: Optional[Dict[str, Any]] = None,
+                 dynamics: Optional[WirelessDynamics] = None,
                  checkpoint_path: str = "", checkpoint_every: int = 0,
                  callback: Optional[Callable] = None):
         self.algo = algo
         self.local_steps = local_steps
         self.log_every = log_every
         self.round_latency = round_latency
+        self.dynamics = dynamics
         self.checkpoint_path = checkpoint_path
         self.checkpoint_every = checkpoint_every
         self.callback = callback
@@ -199,19 +375,37 @@ class Trainer:
         t0 = time.time()
         staged = stack_rounds(data_iter, self.local_steps)
         for e in range(global_rounds):
-            state, metrics = self.algo.run_round(state, staged)
+            if self.dynamics is not None:
+                dyn, info = self.dynamics.round_dynamics()
+                state, metrics = self.algo.run_round(state, staged,
+                                                     dynamics=dyn)
+            else:
+                dyn, info = None, None
+                state, metrics = self.algo.run_round(state, staged)
             if e + 1 < global_rounds:       # prefetch while the device runs
                 staged = stack_rounds(data_iter, self.local_steps)
             losses = np.asarray(jax.device_get(metrics["loss"]),
                                 np.float64).reshape(-1)
             history.losses.extend(float(x) for x in losses)
             history.round_losses.append(float(losses.mean()))
-            history.modeled_seconds += per_round
+            if info is not None:
+                history.modeled_seconds += info["round_seconds"]
+                history.participation.append(info["participation"])
+                history.modeled_delays.append(info["modeled_delay"])
+                if info["realloc"]:
+                    history.realloc_rounds.append(e)
+            else:
+                history.modeled_seconds += per_round
             if self.log_every and (e + 1) % self.log_every == 0:
                 msg = (f"round {e + 1}/{global_rounds}  "
                        f"loss {losses[-1]:.4f}")
-                if per_round:
+                if per_round or info is not None:
                     msg += f"  modeled {history.modeled_seconds:.1f}s"
+                if info is not None:
+                    msg += f"  clients {sum(info['participation'])}/" \
+                           f"{len(info['participation'])}"
+                    if info["realloc"]:
+                        msg += "  [re-allocated]"
                 print(msg)
             if (self.checkpoint_path and self.checkpoint_every
                     and (e + 1) % self.checkpoint_every == 0):

@@ -7,7 +7,6 @@ shapes lower ``decode_step`` (ONE token against a seq_len KV cache), never
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

@@ -12,8 +12,6 @@ sliding-window ring buffers stay correct at arbitrary offsets.
 from __future__ import annotations
 
 import functools
-import math
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -4,7 +4,6 @@ with the KV-cache decode path and a `lax.while_loop` inner loop (one jit).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ technique).  ``init_lora`` builds adapters for ``cfg.lora_targets``.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Optional, Tuple
 
 import jax

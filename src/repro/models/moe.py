@@ -17,7 +17,7 @@ lever (EXPERIMENTS.md §Perf).
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

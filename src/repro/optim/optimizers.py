@@ -8,7 +8,7 @@ a real cluster is a one-line change.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Optional, Union
+from typing import Any, Callable, Union
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,7 @@ Policy (the paper-faithful baseline — §Perf iterates from here):
 from __future__ import annotations
 
 import re
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import numpy as np
@@ -243,6 +243,16 @@ def sfl_state_shardings(state: Any, mesh: Mesh, axis: str = CLIENT_AXIS):
         opt_server=replicated_shardings(state.opt_server, mesh),
         step=NamedSharding(mesh, P()),
     )
+
+
+def round_dynamics_shardings(dyn: Any, mesh: Mesh, axis: str = CLIENT_AXIS):
+    """Per-round traced dynamics (core.sfl.RoundDynamics): every (K,)-lead
+    leaf — participation / rates / f_hz / kappa / ell / rank / rep_hi /
+    scales and the slot-mask tree — shards its client axis next to the
+    matching shard of the stacked state; scalars (the deadline) replicate."""
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, _client_spec(l.shape, mesh, 0, axis)),
+        dyn)
 
 
 def client_batch_shardings(tree: Any, mesh: Mesh, axis: str = CLIENT_AXIS):

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import DEFAULT_SYSTEM, TrainConfig, get_arch
-from repro.core import Problem, bcd_minimize_delay, objective, sample_clients
+from repro.core import Problem, bcd_minimize_delay, sample_clients
 from repro.core.sfl import SflLLM, quantize_activations
 from repro.optim import adamw
 

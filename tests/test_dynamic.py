@@ -1,0 +1,372 @@
+"""Dynamic wireless rounds: per-round fading, deadline straggler dropout,
+partial-participation FedAvg, and drift-triggered re-allocation — all on
+ONE compiled trace per trainer."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import models as M
+from repro.configs import DEFAULT_SYSTEM, TrainConfig, get_arch
+from repro.core import (Problem, RoundDynamics, SflLLM, as_hetero,
+                        bcd_minimize_delay_per_client, objective_het,
+                        sample_clients)
+from repro.core.aggregation import fedavg_het, fedavg_partial, fedavg_stacked
+from repro.core.channel import FadingProcess, fade_clients
+from repro.core.latency import (client_round_seconds, split_workload,
+                                t_act_upload, t_client_bp, t_client_fp,
+                                t_lora_upload, workload_tables)
+from repro.core.lora import client_slot_masks
+from repro.core.workload import layer_workloads
+from repro.optim import adamw
+from repro.launch.engine import SflRound, Trainer, WirelessDynamics
+
+K, B, S, I = 3, 2, 16, 2
+
+
+def _setup(key, layers=4):
+    cfg = get_arch("gpt2-s").reduced(num_layers=layers)
+    params = M.init_params(cfg, key)
+    lora = M.init_lora_stack(cfg, jax.random.key(7))
+    tokens = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (I, K, B, S)).astype(np.int32)
+    return cfg, params, lora, {"tokens": tokens, "labels": tokens.copy()}
+
+
+def _sfl(cfg, params, **kw):
+    tc = TrainConfig(num_clients=K, batch_size=B, local_steps=I)
+    return SflLLM(cfg, params, ell_c=2, train_cfg=tc,
+                  optimizer=adamw(3e-3), **kw)
+
+
+def _leaves_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# partial-participation FedAvg
+# ---------------------------------------------------------------------------
+
+def test_fedavg_partial_all_ones_bitwise_fedavg_stacked(key):
+    stacked = {"a": jax.random.normal(key, (K, 5, 3)),
+               "b": jax.random.normal(jax.random.key(1), (K, 7))}
+    w = jnp.asarray([3.0, 1.0, 2.0])
+    got = fedavg_partial(stacked, w, jnp.ones(K, jnp.float32))
+    want = fedavg_stacked(stacked, w)
+    assert _leaves_equal(got, want)
+    # participation=None is literally the same call
+    assert _leaves_equal(fedavg_partial(stacked, w, None), want)
+
+
+def test_fedavg_partial_dropped_contributes_zero(key):
+    stacked = {"a": jax.random.normal(key, (K, 4, 2))}
+    w = jnp.asarray([1.0, 1.0, 1.0])
+    part = jnp.asarray([1.0, 0.0, 1.0])
+    got = fedavg_partial(stacked, w, part)
+    # survivors-only average, any weight on the dropped client is irrelevant
+    surv = {"a": stacked["a"][jnp.asarray([0, 2])]}
+    want = fedavg_stacked(surv, jnp.asarray([1.0, 1.0]))
+    np.testing.assert_allclose(np.asarray(got["a"]), np.asarray(want["a"]),
+                               atol=1e-7)
+    crazy = fedavg_partial(stacked, jnp.asarray([1.0, 1e6, 1.0]), part)
+    assert _leaves_equal(got, crazy)
+
+
+def test_fedavg_partial_with_slot_masks(key):
+    tmpl = {"x": {"a": jnp.zeros((1, 4, 2)), "b": jnp.zeros((1, 3, 4))}}
+    masks = client_slot_masks(tmpl, ranks=[2, 4])
+    stacked = jax.tree.map(
+        lambda v: jax.random.normal(key, (2,) + v.shape, v.dtype), tmpl)
+    w = jnp.asarray([1.0, 1.0])
+    # all participating == fedavg_het, bitwise
+    got = fedavg_partial(stacked, w, jnp.ones(2, jnp.float32), masks)
+    assert _leaves_equal(got, fedavg_het(stacked, w, masks))
+    # drop the rank-4 owner: its exclusive slots come back zero
+    got = fedavg_partial(stacked, w, jnp.asarray([1.0, 0.0]), masks)
+    assert np.all(np.asarray(got["x"]["a"])[:, 2:, :] == 0.0)
+    assert np.all(np.asarray(got["x"]["b"])[:, :, 2:] == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# full participation == static fleet, bit for bit (same executable)
+# ---------------------------------------------------------------------------
+
+def test_full_participation_bitwise_matches_static(key):
+    cfg, params, lora, rb = _setup(key)
+    stat = _sfl(cfg, params)
+    st_a = stat.init_state(lora)
+    traj_a = []
+    for _ in range(3):
+        st_a, m = stat.train_round(st_a, rb, [1.0] * K)
+        traj_a += [float(x) for x in np.asarray(m["loss"])]
+
+    dyn_t = _sfl(cfg, params)
+    st_b = dyn_t.init_state(lora)
+    dyn = RoundDynamics(participation=jnp.ones(K, jnp.float32))
+    traj_b = []
+    for _ in range(3):
+        st_b, m = dyn_t.train_round(st_b, rb, [1.0] * K, dynamics=dyn)
+        traj_b += [float(x) for x in np.asarray(m["loss"])]
+
+    assert traj_a == traj_b                      # bitwise float equality
+    for name in ("lora_client", "lora_server", "opt_client", "opt_server"):
+        assert _leaves_equal(getattr(st_a, name), getattr(st_b, name)), name
+    assert stat._round_traces == 1 and dyn_t._round_traces == 1
+
+
+def test_dropped_client_frozen_and_contributes_zero(key):
+    cfg, params, lora, rb = _setup(key)
+    sfl = _sfl(cfg, params, donate=False)
+    st0 = sfl.init_state(lora)
+    pre = jax.tree.map(lambda v: np.asarray(v).copy(), st0.lora_client)
+    pre_opt = jax.tree.map(lambda v: np.asarray(v).copy(), st0.opt_client)
+    dyn = RoundDynamics(participation=jnp.asarray([1.0, 0.0, 1.0]))
+    st1, m1 = sfl.train_round(st0, rb, [1.0] * K, dynamics=dyn)
+    assert np.asarray(m1["participation"]).tolist() == [1.0, 0.0, 1.0]
+
+    # the dropped client's adapter is bit-frozen (it missed the round,
+    # broadcast included) ...
+    for x, y in zip(jax.tree.leaves(st1.lora_client), jax.tree.leaves(pre)):
+        assert np.array_equal(np.asarray(x)[1], np.asarray(y)[1])
+    # ... its optimizer moments too (all moment leaves carry the K axis)
+    for x, y in zip(jax.tree.leaves(st1.opt_client),
+                    jax.tree.leaves(pre_opt)):
+        if np.asarray(x).ndim > 0:
+            assert np.array_equal(np.asarray(x)[1], np.asarray(y)[1])
+    # ... the survivors moved
+    assert not _leaves_equal(st1.lora_client, pre)
+
+    # and its sample weight is irrelevant: contributes exactly zero
+    st2, _ = sfl.train_round(st0, rb, [1.0, 1e6, 1.0], dynamics=dyn)
+    assert _leaves_equal(st1.lora_client, st2.lora_client)
+
+
+def test_all_dropped_round_is_identity(key):
+    cfg, params, lora, rb = _setup(key)
+    sfl = _sfl(cfg, params, donate=False)
+    st0 = sfl.init_state(lora)
+    dyn = RoundDynamics(participation=jnp.zeros(K, jnp.float32))
+    st1, _ = sfl.train_round(st0, rb, [1.0] * K, dynamics=dyn)
+    for name in ("lora_client", "lora_server", "opt_client", "opt_server"):
+        got, want = getattr(st1, name), getattr(st0, name)
+        for x, y in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            if np.asarray(x).ndim > 0:       # shared step counters advance
+                assert np.array_equal(np.asarray(x), np.asarray(y)), name
+
+
+# ---------------------------------------------------------------------------
+# deadline dropout: traced latency twin + in-graph mask, one trace
+# ---------------------------------------------------------------------------
+
+def test_client_round_seconds_matches_host_model():
+    cfg = get_arch("gpt2-s").reduced(num_layers=4)
+    sys_cfg = dataclasses.replace(DEFAULT_SYSTEM, num_clients=K)
+    envs = sample_clients(sys_cfg, 0)[:K]
+    tables = workload_tables(cfg, S)
+    ws = layer_workloads(cfg, S)
+    rng = np.random.default_rng(2)
+    ells = rng.integers(1, 4, K)
+    ranks = rng.choice([1, 2, 4], K)
+    r_main = rng.uniform(1e6, 1e8, K)
+    r_fed = rng.uniform(1e6, 1e8, K)
+    got = np.asarray(client_round_seconds(
+        tables, ells, ranks,
+        jnp.asarray([e.f_hz for e in envs], jnp.float32),
+        jnp.asarray([e.kappa for e in envs], jnp.float32),
+        jnp.asarray(r_main, jnp.float32), jnp.asarray(r_fed, jnp.float32),
+        B, I))
+    for k in range(K):
+        sw = split_workload(cfg, ws, int(ells[k]), int(ranks[k]), S)
+        want = I * (t_client_fp(sw, envs[k], B)
+                    + t_act_upload(sw, r_main[k], B)
+                    + t_client_bp(sw, envs[k], B)) \
+            + t_lora_upload(sw, r_fed[k])
+        assert got[k] == pytest.approx(want, rel=1e-4)
+
+
+def test_deadline_dropout_masks_stragglers_one_trace(key):
+    cfg, params, lora, rb = _setup(key)
+    sfl = _sfl(cfg, params, donate=False)
+    state = sfl.init_state(lora)
+    kappa = jnp.full((K,), 1.0, jnp.float32)
+    f_hz = jnp.asarray([1e9, 1e9, 1e9], jnp.float32)
+    tables = workload_tables(cfg, S)
+
+    def dyn_for(rates):
+        return RoundDynamics(
+            rates_main=jnp.asarray(rates, jnp.float32),
+            rates_fed=jnp.asarray(rates, jnp.float32),
+            f_hz=f_hz, kappa=kappa, deadline_s=jnp.float32(deadline))
+
+    # deadline between the fast clients and a starved straggler
+    t_fast = float(np.asarray(client_round_seconds(
+        tables, [2] * K, [cfg.lora_rank] * K, f_hz, kappa,
+        jnp.full((K,), 1e9), jnp.full((K,), 1e9), B, I))[0])
+    deadline = 2.0 * t_fast
+    parts = []
+    for rates in ([1e9, 1e9, 1e9], [1e9, 1e2, 1e9], [1e2, 1e9, 1e2]):
+        state, m = sfl.train_round(state, rb, [1.0] * K,
+                                   dynamics=dyn_for(rates))
+        parts.append(np.asarray(m["participation"]).tolist())
+    assert parts == [[1, 1, 1], [1, 0, 1], [0, 1, 0]]
+    assert sfl._round_traces == 1            # fading never retraces
+    assert sfl._mask_traces == 1
+
+
+# ---------------------------------------------------------------------------
+# per-round re-allocation through the slot-mask machinery, no retrace
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def prob():
+    sys_cfg = dataclasses.replace(
+        DEFAULT_SYSTEM, num_clients=K, total_bandwidth_hz=50e6,
+        f_server_hz=0.4e9, f_client_hz_range=(0.2e9, 5.0e9))
+    envs = tuple(sample_clients(sys_cfg, 3))
+    return Problem(cfg=get_arch("gpt2-s").reduced(num_layers=4),
+                   sys_cfg=sys_cfg, envs=envs, seq_len=32, batch=B,
+                   local_steps=I, rank_candidates=(1, 2, 4))
+
+
+def test_reallocation_rounds_share_one_trace(key, prob):
+    alloc, _ = bcd_minimize_delay_per_client(prob)
+    params = M.init_params(prob.cfg, key)
+    sfl = SflLLM.from_allocation(prob, alloc, params, optimizer=adamw(1e-3),
+                                 dynamic=True)
+    state = sfl.init_state(sfl.init_lora(jax.random.key(7)))
+    tokens = np.random.default_rng(0).integers(
+        0, prob.cfg.vocab_size, (I, K, B, S)).astype(np.int32)
+    rb = {"tokens": tokens, "labels": tokens.copy()}
+    rng = np.random.default_rng(1)
+    losses = []
+    for _ in range(3):
+        ell_k = rng.integers(1, 4, K)
+        rank_k = rng.choice([1, 2, 4], K)
+        dyn = RoundDynamics(participation=jnp.ones(K, jnp.float32),
+                            **sfl.allocation_dynamics(ell_k, rank_k))
+        state, m = sfl.train_round(state, rb, [1.0] * K, dynamics=dyn)
+        losses += [float(x) for x in np.asarray(m["loss"])]
+    assert sfl._round_traces == 1
+    assert np.isfinite(losses).all()
+
+
+def test_allocation_dynamics_rejects_outside_envelope(key, prob):
+    alloc, _ = bcd_minimize_delay_per_client(prob)
+    params = M.init_params(prob.cfg, key)
+    sfl = SflLLM.from_allocation(prob, alloc, params, optimizer=adamw(1e-3),
+                                 dynamic=True)
+    with pytest.raises(ValueError, match="capacity"):
+        sfl.allocation_dynamics([1] * K, [sfl.r_max * 2] * K)
+
+
+# ---------------------------------------------------------------------------
+# fading-driven re-allocation: warm start is monotone on every round
+# ---------------------------------------------------------------------------
+
+def test_warm_reallocation_monotone_under_fading(prob):
+    alloc, _ = bcd_minimize_delay_per_client(prob)
+    cur = as_hetero(prob, alloc)
+    rng = np.random.default_rng(7)
+    for _ in range(4):
+        envs_r = tuple(fade_clients(prob.envs, rng, std_db=6.0))
+        prob_r = dataclasses.replace(prob, envs=envs_r)
+        t_keep = objective_het(prob_r, cur)
+        new, hist = bcd_minimize_delay_per_client(prob_r, warm_start=cur,
+                                                  max_sweeps=1)
+        t_new = objective_het(prob_r, new)
+        assert t_new <= t_keep * (1 + 1e-9)
+        assert hist[0] == pytest.approx(t_keep)
+        cur = new
+
+
+def test_fading_process_marginal_matches_fade_clients():
+    envs = tuple(sample_clients(DEFAULT_SYSTEM, 0))
+    iid = FadingProcess(envs, std_db=4.0, rho=0.0, rng=5)
+    ref = fade_clients(envs, np.random.default_rng(5), std_db=4.0)
+    got = iid.step()
+    assert all(g.gain_main == r.gain_main and g.gain_fed == r.gain_fed
+               for g, r in zip(got, ref))
+    # correlated process drifts smoothly: consecutive rounds closer than
+    # i.i.d. draws on average (rho close to 1)
+    ar = FadingProcess(envs, std_db=4.0, rho=0.95, rng=6)
+    a, b = ar.step(), ar.step()
+    d_ar = np.mean([abs(np.log(x.gain_main / y.gain_main))
+                    for x, y in zip(a, b)])
+    iid2 = FadingProcess(envs, std_db=4.0, rho=0.0, rng=6)
+    c, d = iid2.step(), iid2.step()
+    d_iid = np.mean([abs(np.log(x.gain_main / y.gain_main))
+                     for x, y in zip(c, d)])
+    assert d_ar < d_iid
+
+
+# ---------------------------------------------------------------------------
+# the full loop: Trainer + WirelessDynamics
+# ---------------------------------------------------------------------------
+
+def test_trainer_wireless_dynamics_end_to_end(key, prob):
+    alloc, _ = bcd_minimize_delay_per_client(prob)
+    params = M.init_params(prob.cfg, key)
+    sfl = SflLLM.from_allocation(prob, alloc, params, optimizer=adamw(1e-3),
+                                 dynamic=True)
+    state = sfl.init_state(sfl.init_lora(jax.random.key(7)))
+    tokens = np.random.default_rng(0).integers(
+        0, prob.cfg.vocab_size, (K, B, S)).astype(np.int32)
+    batch = {"tokens": tokens, "labels": tokens.copy()}
+    data = iter(lambda: batch, None)
+    wd = WirelessDynamics(prob, alloc, sfl, fade_std_db=8.0, fade_rho=0.5,
+                          deadline_factor=1.05, drift_threshold=-0.5,
+                          rng=0)
+    trainer = Trainer(SflRound(sfl, [1.0] * K), local_steps=I, dynamics=wd)
+    state, hist = trainer.fit(state, data, global_rounds=3)
+    assert sfl._round_traces == 1            # re-allocation never retraces
+    assert len(hist.participation) == 3
+    assert len(hist.modeled_delays) == 3
+    # drift_threshold=-0.5 forces a re-allocation every round
+    assert hist.realloc_rounds == [0, 1, 2]
+    assert hist.modeled_seconds > 0
+    assert np.isfinite(hist.losses).all()
+
+
+def test_wireless_dynamics_requires_capacity_for_realloc(key, prob):
+    """A re-allocating episode on a trainer whose envelope cannot hold the
+    search space must fail at construction, not rounds into the run."""
+    alloc, _ = bcd_minimize_delay_per_client(prob)
+    params = M.init_params(prob.cfg, key)
+    tc = TrainConfig(num_clients=K, batch_size=B, local_steps=I)
+    narrow = SflLLM(prob.cfg, params, ell_c=1, train_cfg=tc,
+                    optimizer=adamw(1e-3), ranks=[1] * K)
+    with pytest.raises(ValueError, match="capacity"):
+        WirelessDynamics(prob, alloc, narrow, drift_threshold=0.1)
+    # without re-allocation the narrow trainer is fine
+    WirelessDynamics(prob, alloc, narrow, deadline_s=1.0)
+
+
+def test_trainer_dynamics_full_participation_matches_static(key, prob):
+    """A dynamic episode whose deadline never bites reproduces the static
+    trainer's trajectory bit for bit (same executable, all-ones mask)."""
+    alloc, _ = bcd_minimize_delay_per_client(prob)
+    params = M.init_params(prob.cfg, key)
+    tokens = np.random.default_rng(0).integers(
+        0, prob.cfg.vocab_size, (K, B, S)).astype(np.int32)
+    batch = {"tokens": tokens, "labels": tokens.copy()}
+
+    def run(dynamics):
+        sfl = SflLLM.from_allocation(prob, alloc, params,
+                                     optimizer=adamw(1e-3), dynamic=True)
+        wd = None
+        if dynamics:
+            wd = WirelessDynamics(prob, alloc, sfl, fade_std_db=2.0,
+                                  deadline_s=1e9, rng=0)
+        trainer = Trainer(SflRound(sfl, [1.0] * K), local_steps=I,
+                          dynamics=wd)
+        state = sfl.init_state(sfl.init_lora(jax.random.key(7)))
+        return trainer.fit(state, iter(lambda: batch, None),
+                           global_rounds=2)
+
+    _, h_dyn = run(True)
+    _, h_stat = run(False)
+    assert all(p == [1] * K for p in h_dyn.participation)
+    assert h_dyn.losses == h_stat.losses     # bitwise

@@ -4,7 +4,6 @@ the paper's motivation ('time-varying ... channel conditions')."""
 import dataclasses
 
 import numpy as np
-import pytest
 
 from repro.configs import DEFAULT_SYSTEM, get_arch
 from repro.core import (Problem, greedy_subchannels, objective,

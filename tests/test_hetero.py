@@ -16,8 +16,7 @@ from repro.core.lora import client_slot_masks
 from repro.core.resource import (HeteroAllocation, Problem,
                                  bcd_minimize_delay,
                                  bcd_minimize_delay_per_client, objective,
-                                 objective_het, random_allocation,
-                                 total_delay)
+                                 random_allocation, total_delay)
 from repro.core.sfl import SflLLM
 from repro.optim import adamw, sgd
 

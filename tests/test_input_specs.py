@@ -2,7 +2,6 @@
 for every (arch x shape) — no device allocation, decode gets ONE token +
 a seq_len cache, frontend stubs sized correctly."""
 import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.configs import ASSIGNED, SHAPES, get_shape

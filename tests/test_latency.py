@@ -1,7 +1,4 @@
 """Latency model (eqs. 8-17): hand-computed values + structural properties."""
-import math
-
-import numpy as np
 import pytest
 
 from repro.configs import DEFAULT_SYSTEM, get_arch

@@ -1,13 +1,11 @@
 """Additional SFL system behaviour: non-IID convergence, straggler-aware
 greedy allocation, sharding rule units."""
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import DEFAULT_SYSTEM, TrainConfig, get_arch
-from repro.core import Problem, greedy_subchannels, sample_clients
-from repro.core.channel import ClientEnv, subchannel_bandwidths
+from repro.core import Problem, greedy_subchannels
+from repro.core.channel import ClientEnv
 from repro.core.sfl import SflLLM
 from repro.data import WordTokenizer, dirichlet_partition, e2e_splits, sfl_batches
 from repro import models as M
@@ -65,7 +63,6 @@ def test_param_spec_rules():
     import numpy as np
     from jax.sharding import PartitionSpec as P
 
-    from repro.launch.mesh import make_debug_mesh  # needs >= 4 devices? no:
     # build a fake mesh-shape object is overkill; use a 1x1 mesh on CPU
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     from repro.sharding.specs import param_spec

@@ -9,7 +9,7 @@ import pytest
 from repro.checkpoint import restore_pytree, save_pytree
 from repro.configs import get_arch
 from repro.core.workload import layer_workloads
-from repro.data import (WordTokenizer, batches, dirichlet_partition,
+from repro.data import (WordTokenizer, dirichlet_partition,
                         e2e_splits, encode_example, iid_partition, sfl_batches)
 from repro.models.model import IGNORE_ID
 from repro.optim import (adamw, apply_updates, clip_by_global_norm, cosine,
