@@ -81,18 +81,20 @@ def _measured_serving(emit):
 
     cfg = get_arch("gpt2-s").reduced(num_layers=2)
     params = M.init_params(cfg, jax.random.key(0))
-    eng = ServingEngine(cfg, params, max_slots=4, max_len=64,
-                        sc=SampleConfig(greedy=True))
-    reqs = [Request(uid=i, prompt=list(range(5, 13 + i)), max_new_tokens=8)
-            for i in range(6)]
-    for r in reqs:
-        eng.submit(r)
-    t0 = time.time()
-    eng.run()
-    wall = time.time() - t0
-    total = sum(len(r.output) for r in reqs)
-    emit("measured/serving_engine", wall * 1e6,
-         f"tok_s={total / wall:.1f};requests={len(reqs)}")
+    for row, kw in (("measured/serving_engine", dict(paged=False)),
+                    ("measured/serving_engine_paged", dict(page_size=16))):
+        eng = ServingEngine(cfg, params, max_slots=4, max_len=64,
+                            sc=SampleConfig(greedy=True), **kw)
+        reqs = [Request(uid=i, prompt=list(range(5, 13 + i)),
+                        max_new_tokens=8) for i in range(6)]
+        for r in reqs:
+            eng.submit(r)
+        t0 = time.time()
+        eng.run()
+        wall = time.time() - t0
+        total = sum(len(r.output) for r in reqs)
+        emit(row, wall * 1e6,
+             f"tok_s={total / wall:.1f};requests={len(reqs)}")
 
 
 def main(emit):

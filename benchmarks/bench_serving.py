@@ -35,9 +35,11 @@ def _engine(cfg, params, lora, fused, slots=4, max_len=128):
     from repro.models.generate import SampleConfig
     from repro.serving import ServingEngine
 
+    # paged=False: these rows measure the PR-3 slab fused path against the
+    # naive loop; the paged engine has its own suite (bench_traffic)
     return ServingEngine(cfg, params, lora=lora, max_slots=slots,
                          max_len=max_len, sc=SampleConfig(greedy=True),
-                         fused=fused)
+                         fused=fused, paged=False)
 
 
 def _requests(cfg, n, gen, seed=0):

@@ -1,0 +1,185 @@
+"""Traffic-trace serving benchmark: paged vs slab KV under load.
+
+Two phases, both on the same reduced GPT2-S the other serving benches use:
+
+* steady-state decode at EQUAL OCCUPANCY — both engines run the same 4
+  fully-admitted slots, so the row pair isolates the per-step cost of
+  paging (block-table gather + in-graph alloc/free) against the slab's
+  contiguous cache.  Acceptance: paged within a few percent of slab
+  (``check_regression.py`` gates the ratio).
+
+* Poisson load at EQUAL KV HBM — the same arrival trace (Poisson
+  arrivals in engine-step time, lognormal prompt/output lengths) is
+  served by a slab engine with ``slots * max_len`` worst-case tokens and
+  a paged engine whose page pool holds the SAME total tokens but is
+  shared by 3x the slots.  The paged engine admits work that the slab
+  queues behind head-of-line worst-case reservations, so time-to-first-
+  token collapses.  TTFT rows are recorded in deterministic STEP units
+  (the us column holds steps — the trace and admission are fully
+  deterministic, so the regression-gate ratio is noise-free); derived
+  fields carry the wall-scaled values.
+
+Rows land in ``BENCH_traffic.json`` (``benchmarks.run`` snapshots
+``traffic/``); ``check_regression.py`` gates paged-vs-slab steady decode
+and p99-TTFT ratios against the committed baseline.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def _setup():
+    from repro.configs import get_arch
+    from repro import models as M
+
+    cfg = get_arch("gpt2-s").reduced(num_layers=2)
+    params = M.init_params(cfg, jax.random.key(0))
+    return cfg, params
+
+
+def _engine(cfg, params, *, paged, slots, max_len, num_pages=None,
+            page_size=16):
+    from repro.models.generate import SampleConfig
+    from repro.serving import ServingEngine
+
+    kw = dict(page_size=page_size, num_pages=num_pages) if paged else {}
+    return ServingEngine(cfg, params, max_slots=slots, max_len=max_len,
+                         sc=SampleConfig(greedy=True), paged=paged, **kw)
+
+
+def _kv_bytes_per_token(cfg) -> int:
+    """f32 K+V bytes per cached token across the whole stack."""
+    n_attn = sum(1 for p in cfg.pattern) * cfg.pattern_repeats
+    return n_attn * 2 * cfg.num_kv_heads * cfg.head_dim * 4
+
+
+# ---------------------------------------------------------------------------
+# phase 1: steady-state decode at equal occupancy
+# ---------------------------------------------------------------------------
+
+def _steady_state(cfg, params, *, paged, steps=30):
+    from repro.serving import Request
+
+    slots, max_len = 4, 128
+    eng = _engine(cfg, params, paged=paged, slots=slots, max_len=max_len)
+    rng = np.random.default_rng(0)
+    for i in range(slots):
+        eng.submit(Request(uid=i,
+                           prompt=rng.integers(5, cfg.vocab_size, 24).tolist(),
+                           max_new_tokens=steps + 16))
+    eng.step()                      # admit all + compile
+    eng.step()                      # warm
+    t0 = time.time()
+    decoded = 0
+    for _ in range(steps):
+        decoded += eng.step()
+    wall = time.time() - t0
+    return wall / steps * 1e6, decoded / wall
+
+
+# ---------------------------------------------------------------------------
+# phase 2: Poisson traffic at equal KV HBM
+# ---------------------------------------------------------------------------
+
+def _trace(cfg, n=60, lam=1.5, seed=3):
+    """(arrival_step, prompt, max_new) per request — Poisson arrivals,
+    lognormal lengths, deterministic."""
+    rng = np.random.default_rng(seed)
+    t, out = 0.0, []
+    for _ in range(n):
+        t += rng.exponential(1.0 / lam)
+        P = int(np.clip(rng.lognormal(3.0, 0.6), 4, 120))
+        G = int(np.clip(rng.lognormal(2.5, 0.6), 2, 48))
+        prompt = rng.integers(5, cfg.vocab_size, P).tolist()
+        out.append((int(np.ceil(t)), prompt, G))
+    return out
+
+
+def _run_load(eng, trace, max_steps=5_000):
+    """Serve the trace; returns (ttft_steps per request, mean live slots,
+    total tokens, wall seconds, total steps)."""
+    from repro.serving import Request
+
+    reqs, arrived_at, first_tok = {}, {}, {}
+    idx, step, live_sum = 0, 0, 0
+    t0 = time.time()
+    while step < max_steps:
+        while idx < len(trace) and trace[idx][0] <= step:
+            at, prompt, gen = trace[idx]
+            r = Request(uid=idx, prompt=prompt, max_new_tokens=gen)
+            eng.submit(r)
+            reqs[idx], arrived_at[idx] = r, at
+            idx += 1
+        if idx >= len(trace) and not eng.queue and \
+                all(s is None for s in eng.slots):
+            break
+        eng.step()
+        for uid, r in reqs.items():
+            if uid not in first_tok and r.output:
+                first_tok[uid] = step
+        live_sum += sum(s is not None for s in eng.slots)
+        step += 1
+    wall = time.time() - t0
+    assert all(r.done for r in reqs.values()), "trace did not drain"
+    ttft = [first_tok[u] - arrived_at[u] + 1 for u in reqs]
+    total = sum(len(r.output) for r in reqs.values())
+    return ttft, live_sum / max(step, 1), total, wall, step
+
+
+def main(emit):
+    cfg, params = _setup()
+    per_tok = _kv_bytes_per_token(cfg)
+
+    # -- phase 1: equal occupancy, per-step decode cost ------------------
+    us_paged, tok_s_paged = _steady_state(cfg, params, paged=True)
+    us_slab, tok_s_slab = _steady_state(cfg, params, paged=False)
+    emit("traffic/decode_paged", us_paged,
+         f"tok_s={tok_s_paged:.1f};slots=4;max_len=128")
+    emit("traffic/decode_slab", us_slab,
+         f"tok_s={tok_s_slab:.1f};paged_overhead="
+         f"{us_paged / max(us_slab, 1e-9) - 1.0:+.1%}")
+
+    # -- phase 2: equal KV HBM, Poisson load -----------------------------
+    # slab: 4 slots x 192 tokens = 768 worst-case tokens.
+    # paged: a 48-page x 16-token pool = the SAME 768 tokens of HBM
+    # (null page included), shared by 12 slots — 3x the admission width.
+    max_len, PS, pages = 192, 16, 48
+    slab_tokens = 4 * max_len
+    paged_tokens = pages * PS
+    assert slab_tokens == paged_tokens
+
+    trace = _trace(cfg)
+    results = {}
+    for name, eng in (
+        ("slab", _engine(cfg, params, paged=False, slots=4,
+                         max_len=max_len)),
+        ("paged", _engine(cfg, params, paged=True, slots=12,
+                          max_len=max_len, num_pages=pages, page_size=PS)),
+    ):
+        ttft, conc, total, wall, steps = _run_load(eng, trace)
+        us_step = wall / max(steps, 1) * 1e6
+        p50 = float(np.percentile(ttft, 50))
+        p99 = float(np.percentile(ttft, 99))
+        results[name] = conc
+        # TTFT rows carry deterministic STEPS in the us column (gate-
+        # stable); wall-scaled values ride in derived
+        emit(f"traffic/ttft_p50_{name}", p50,
+             f"unit=steps;us={p50 * us_step:.0f}")
+        emit(f"traffic/ttft_p99_{name}", p99,
+             f"unit=steps;us={p99 * us_step:.0f}")
+        emit(f"traffic/tok_s_{name}", us_step,
+             f"tok_s={total / wall:.1f};steps={steps};tokens={total}")
+        emit(f"traffic/concurrency_{name}", conc,
+             f"unit=mean_live_slots;requests={len(trace)}")
+        emit(f"traffic/peak_kv_bytes_{name}",
+             (slab_tokens if name == "slab" else paged_tokens) * per_tok,
+             f"unit=bytes;tokens={slab_tokens};equal_hbm=true")
+    emit("traffic/concurrency_gain", 0.0,
+         f"paged_over_slab={results['paged'] / max(results['slab'], 1e-9):.2f}x")
+
+
+if __name__ == "__main__":
+    main(lambda n, t, d: print(f"{n},{t},{d}"))

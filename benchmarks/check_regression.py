@@ -53,6 +53,24 @@ GATES = [
         "serving/decode_naive",
     ),
     (
+        # paged decode step vs slab at equal occupancy: the paging
+        # overhead (block-table gather + in-graph alloc/free) must not
+        # creep past the slab path
+        "BENCH_traffic.json",
+        "paged_decode_steady",
+        "traffic/decode_paged",
+        "traffic/decode_slab",
+    ),
+    (
+        # p99 TTFT under the Poisson trace at equal HBM: both rows are in
+        # deterministic step units, so this ratio is noise-free — it
+        # catches any erosion of the paged engine's admission advantage
+        "BENCH_traffic.json",
+        "paged_ttft_p99",
+        "traffic/ttft_p99_paged",
+        "traffic/ttft_p99_slab",
+    ),
+    (
         "BENCH_resource.json",
         "bcd_memoized",
         "resource/bcd_wall_memoized",
@@ -71,6 +89,7 @@ GATES = [
 SUITE_FOR_FILE = {
     "BENCH_kernels.json": "kernels,convergence",
     "BENCH_serving.json": "serving",
+    "BENCH_traffic.json": "traffic",
     "BENCH_resource.json": "resource",
     "BENCH_dynamic.json": "dynamic",
 }

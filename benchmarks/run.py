@@ -7,6 +7,7 @@
   fig5-8  bench_latency      latency sweeps, proposed vs baselines a-d
   kernels bench_kernels      kernel twins micro-times + traffic accounting
   serving bench_serving      fused vs naive engine tokens/sec + compiles
+  traffic bench_traffic      paged vs slab KV: steady decode + Poisson TTFT
   roofline bench_roofline    per (arch x shape x mesh) roofline rows
   resource bench_resource    BCD wall time + homogeneous-vs-hetero delay
   dynamic bench_dynamic      dynamic-round overhead + adaptive re-allocation
@@ -23,7 +24,7 @@ import traceback
 
 from . import (bench_complexity, bench_convergence, bench_dynamic,
                bench_kernels, bench_latency, bench_ppl, bench_resource,
-               bench_roofline, bench_serving)
+               bench_roofline, bench_serving, bench_traffic)
 
 SUITES = {
     "table3": bench_complexity.main,
@@ -32,6 +33,7 @@ SUITES = {
     "latency": bench_latency.main,
     "kernels": bench_kernels.main,
     "serving": bench_serving.main,
+    "traffic": bench_traffic.main,
     "roofline": bench_roofline.main,
     "resource": bench_resource.main,
     "dynamic": bench_dynamic.main,
@@ -44,6 +46,7 @@ SUITES = {
 SNAPSHOTS = {
     "BENCH_kernels.json": ("kernel/", "engine/"),
     "BENCH_serving.json": ("serving/",),
+    "BENCH_traffic.json": ("traffic/",),
     "BENCH_resource.json": ("resource/",),
     "BENCH_dynamic.json": ("dynamic/",),
 }

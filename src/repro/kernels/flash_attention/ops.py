@@ -9,8 +9,9 @@ import jax.numpy as jnp
 from ..backend import auto_interpret
 from .decode import flash_decode_kernel
 from .kernel import flash_attention_kernel
-from .ref import flash_attention_ref, flash_decode_ref
-from .tune import best_decode_block
+from .paged_decode import paged_decode_kernel
+from .ref import flash_attention_ref, flash_decode_ref, paged_decode_ref
+from .tune import best_decode_block, best_paged_block
 
 
 @functools.partial(jax.jit, static_argnames=("window", "bq", "bk",
@@ -86,5 +87,45 @@ def flash_decode(q, k, v, lengths, *, window: int = 0,
             vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pk), (0, 0)))
         o = flash_decode_kernel(qt, kt, vt, lengths, window=window, bk=bk,
                                 interpret=interpret)
+    o = o.reshape(B, H, D)
+    return o[:, None] if squeeze else o
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret", "use_kernel"))
+def paged_decode(q, k_pages, v_pages, lengths, block_tables, *,
+                 bk: "int | None" = None, interpret: "bool | None" = None,
+                 use_kernel: "bool | None" = None):
+    """One-token decode attention over a block-table PAGED KV cache.
+
+    q: (B, 1, H, D) or (B, H, D) — the model layout; k_pages/v_pages:
+    (KH, NP, PS, D) global page pool; block_tables: (B, MP) int32 page
+    ids per slot (0 = null page); lengths: (B,) int32 live entries per
+    slot (contiguous in the logical [0, MP*PS) view).
+
+    Dispatch mirrors ``flash_decode``: the native scalar-prefetch Pallas
+    kernel on TPU (the block-table gather IS the kv index map; tile size
+    from the memoized ``tune.best_paged_block``), the jnp gather oracle
+    elsewhere — an explicit ``interpret`` flag forces the kernel
+    (interpret-mode parity testing)."""
+    squeeze = q.ndim == 4
+    if squeeze:
+        q = q[:, 0]
+    B, H, D = q.shape
+    KH, _, PS, _ = k_pages.shape
+    MP = block_tables.shape[1]
+    G = H // KH
+    explicit_interpret = interpret is not None
+    if interpret is None:
+        interpret = auto_interpret()
+    if use_kernel is None:
+        use_kernel = explicit_interpret or not interpret
+    qt = q.reshape(B, KH, G, D)
+    if not use_kernel:
+        o = paged_decode_ref(qt, k_pages, v_pages, lengths, block_tables)
+    else:
+        if bk is None:
+            bk = best_paged_block(B, KH, G, MP, PS, D, q.dtype)
+        o = paged_decode_kernel(qt, k_pages, v_pages, lengths, block_tables,
+                                bk=bk, interpret=interpret)
     o = o.reshape(B, H, D)
     return o[:, None] if squeeze else o

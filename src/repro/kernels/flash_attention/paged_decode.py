@@ -1,0 +1,131 @@
+"""Paged flash-decode Pallas kernel: one-token GQA attention over a
+block-table PAGED KV cache, split-K over the logical cache length.
+
+The serving engine's KV lives in a global page pool ``(KH, NP, PS, D)``
+rather than per-slot slabs: each slot owns a ``(MP,)`` block-table row
+naming the page that holds its absolute positions ``[j*PS, (j+1)*PS)``.
+This kernel extends ``decode.flash_decode_kernel`` with the second
+scalar-prefetch operand that makes the pool addressable from the grid:
+
+* grid (B, KH, MP * PS/bk) — batch and kv-head axes parallel, the
+  LOGICAL cache length axis is the sequential online-softmax reduction;
+* both the per-slot live lengths AND the block tables ride in as
+  scalar-prefetch operands (``pltpu.PrefetchScalarGridSpec``), so the
+  kv BlockSpec index map can compute the physical DMA source — pool tile
+  ``bt[b, j // spp] * spp + j % spp`` (``spp = PS/bk`` sub-tiles per
+  page, pool viewed as (KH, NP*spp, bk, D)) — before the kernel body
+  runs.  The gather IS the index map; no materialized per-slot copy;
+* the live-length tile skipping of ``decode.py`` carries over verbatim:
+  a slot at position 37 pays ceil(38/bk) tiles, not MP*PS/bk, and tiles
+  past the live prefix leave their (null-page) DMA unread;
+* all G = H/KH query heads fold into the (G, bk) score tile; m/l/acc
+  scratch persist across the split-K steps in VMEM.
+
+Entries are contiguous within the logical view ([0, length) live), so
+the mask is ``k_idx < length`` exactly as in the dense-slab kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+_LANES = 128
+
+
+def _kernel(len_ref, bt_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+            acc_ref, *, bk: int, k_steps: int, scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    length = len_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # any live entry in this tile?  (dead slots: length <= 0 skips all;
+    # unallocated table entries only sit past the live prefix, so their
+    # null-page tiles are skipped here too)
+    live = j * bk < length
+
+    @pl.when(live)
+    def _compute():
+        G = q_ref.shape[2]
+        k_idx = j * bk + jax.lax.broadcasted_iota(jnp.int32, (G, bk), 1)
+        mask = k_idx < length
+        s = jax.lax.dot_general(
+            q_ref[0, 0], k_ref[0, 0],
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale      # (G, bk)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...][:, :1]                           # (G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+        p = jnp.exp(s - m_new) * mask
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = jnp.broadcast_to(
+            l_ref[...][:, :1] * alpha + jnp.sum(p, -1, keepdims=True),
+            l_ref.shape)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0, 0],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(j == k_steps - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...][:, :1], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_decode_kernel(q, k_pages, v_pages, lengths, block_tables, *,
+                        bk: "int | None" = None, interpret: bool = False):
+    """q: (B, KH, G, D); k_pages/v_pages: (KH, NP, PS, D) global pool;
+    block_tables: (B, MP) int32 page ids (0 = null/unallocated); lengths:
+    (B,) int32 live entries per slot, contiguous in the logical view.
+    ``bk`` must divide the page size (default: one page per tile).
+    Returns (B, KH, G, D)."""
+    B, KH, G, D = q.shape
+    PS = k_pages.shape[2]
+    MP = block_tables.shape[1]
+    bk = PS if bk is None else min(bk, PS)
+    if PS % bk:
+        raise ValueError(f"bk={bk} must divide page_size={PS}")
+    spp = PS // bk                       # sub-tiles per page
+    grid = (B, KH, MP * spp)
+
+    # the pool reshape is free (contiguous): page p sub-tile t lives at
+    # tile index p*spp + t, which is what the index map computes from the
+    # prefetched block table
+    kr = k_pages.reshape(KH, k_pages.shape[1] * spp, bk, D)
+    vr = v_pages.reshape(KH, v_pages.shape[1] * spp, bk, D)
+
+    def _kv_idx(b, h, j, lens, bt):
+        del lens
+        return (h, bt[b, j // spp] * spp + j % spp, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j, lens, bt: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, D), _kv_idx),
+            pl.BlockSpec((1, 1, bk, D), _kv_idx),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, j, lens, bt: (b, h, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((G, _LANES), jnp.float32),
+                        pltpu.VMEM((G, _LANES), jnp.float32),
+                        pltpu.VMEM((G, D), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, bk=bk, k_steps=grid[2], scale=D ** -0.5),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KH, G, D), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), block_tables.astype(jnp.int32), q, kr, vr)

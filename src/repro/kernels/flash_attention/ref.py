@@ -28,6 +28,29 @@ def flash_decode_ref(q, k, v, lengths, *, window: int = 0):
     return o.astype(q.dtype)
 
 
+def paged_decode_ref(q, k_pages, v_pages, lengths, block_tables):
+    """Paged decode oracle: q (B, KH, G, D) — one query token per slot,
+    GQA folded; k_pages/v_pages (KH, NP, PS, D) — the GLOBAL page pool
+    shared by every slot (page 0 is the never-allocated null page);
+    block_tables (B, MP) int32 — entry j of a slot's row names the page
+    holding its absolute positions [j*PS, (j+1)*PS); lengths (B,) live
+    entries per slot.
+
+    Gathers each slot's pages into its logical (MP*PS,) KV view — entry i
+    of the gathered axis IS absolute position i, so the length mask of
+    ``flash_decode_ref`` applies unchanged.  The jnp twin of
+    ``paged_decode.paged_decode_kernel`` and the off-TPU fallback of
+    ``ops.paged_decode``."""
+    B = q.shape[0]
+    KH, _, PS, D = k_pages.shape
+    MP = block_tables.shape[1]
+    kg = k_pages[:, block_tables]                # (KH, B, MP, PS, D)
+    vg = v_pages[:, block_tables]
+    k = kg.transpose(1, 0, 2, 3, 4).reshape(B, KH, MP * PS, D)
+    v = vg.transpose(1, 0, 2, 3, 4).reshape(B, KH, MP * PS, D)
+    return flash_decode_ref(q, k, v, lengths)
+
+
 def flash_attention_ref(q, k, v, *, window: int = 0, seq_k: int = 0):
     """q: (B, H, Sq, D); k/v: (B, KH, Sk, D); causal with q and k aligned at
     the sequence end (q_pos = Sk - Sq + arange(Sq)).  seq_k masks padding

@@ -88,3 +88,67 @@ def best_decode_block(B: int, KH: int, G: int, L: int, D: int,
         best = min(cands, key=lambda bk: _heuristic_key(L, bk))
     _CACHE[key] = best
     return best
+
+
+# -- paged decode: the kv tile must divide the page size --------------------
+
+_PAGED_CACHE: Dict[Tuple[int, int, int, int, int, int, str, str], int] = {}
+
+
+def clear_paged_cache() -> None:
+    _PAGED_CACHE.clear()
+
+
+def _time_paged_candidates(B: int, KH: int, G: int, MP: int, PS: int, D: int,
+                           dtype, cands: List[int]) -> int:
+    from .paged_decode import paged_decode_kernel
+
+    NP = B * MP + 1                                  # pool incl. null page
+    q = jnp.zeros((B, KH, G, D), dtype)
+    kp = jnp.zeros((KH, NP, PS, D), dtype)
+    bt = (jnp.arange(B * MP, dtype=jnp.int32).reshape(B, MP) + 1)
+    lens = jnp.full((B,), MP * PS, jnp.int32)
+    best, best_t = cands[0], float("inf")
+    for bk in cands:
+        try:
+            fn = jax.jit(lambda q, k, v, n, t, bk=bk: paged_decode_kernel(
+                q, k, v, n, t, bk=bk, interpret=False))
+            fn(q, kp, kp, lens, bt).block_until_ready()       # compile
+            t = float("inf")
+            for _ in range(3):
+                t0 = time.perf_counter()
+                fn(q, kp, kp, lens, bt).block_until_ready()
+                t = min(t, time.perf_counter() - t0)
+        except Exception:                                     # noqa: BLE001
+            continue            # tile shape the backend rejects — skip it
+        if t < best_t:
+            best, best_t = bk, t
+    return best
+
+
+def best_paged_block(B: int, KH: int, G: int, MP: int, PS: int, D: int,
+                     dtype=jnp.float32, backend: str | None = None) -> int:
+    """Memoized kv-tile size for one paged-decode problem — the
+    ``(page_size, bk)`` twin of ``best_decode_block``.  Candidates are the
+    divisors of ``page_size`` within the VMEM budget (a paged tile can
+    never span two pages: they are not adjacent in the pool), timed
+    against the real kernel on TPU; elsewhere the largest divisor wins —
+    paged tiles are fully live up to the length boundary, so fewer grid
+    steps is the whole game."""
+    backend = backend or jax.default_backend()
+    key = (int(B), int(KH), int(G), int(MP), int(PS), int(D),
+           jnp.dtype(dtype).name, backend)
+    hit = _PAGED_CACHE.get(key)
+    if hit is not None:
+        return hit
+    itemsize = jnp.dtype(dtype).itemsize
+    cands = [bk for bk in set(_CANDIDATES) | {PS}
+             if bk <= PS and PS % bk == 0
+             and _vmem_bytes(bk, max(G, 1), D, itemsize) <= _VMEM_BUDGET]
+    cands = sorted(cands) or [PS]
+    if backend == "tpu":
+        best = _time_paged_candidates(B, KH, G, MP, PS, D, dtype, cands)
+    else:
+        best = cands[-1]
+    _PAGED_CACHE[key] = best
+    return best

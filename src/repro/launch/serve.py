@@ -1,5 +1,7 @@
 """Serving driver: continuous-batching engine over the (optionally
-LoRA-adapted) model — fused in-graph decode, bucketed prefill.  CPU demo:
+LoRA-adapted) model — fused in-graph decode with a paged KV cache and
+chunked prefill by default (``--slab`` forces the fixed-slab layout,
+``--naive`` the pre-PR host loop).  CPU demo:
 
   PYTHONPATH=src python -m repro.launch.serve --arch gpt2-s --reduced \
       --requests 12 --slots 4 --gen 16
@@ -25,6 +27,12 @@ def main() -> None:
                     help="0 = greedy")
     ap.add_argument("--naive", action="store_true",
                     help="pre-PR per-token host loop (baseline)")
+    ap.add_argument("--slab", action="store_true",
+                    help="fixed-slab KV cache instead of the paged pool")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="KV page pool size (0 = slab-equivalent capacity); "
+                         "shrink to oversubscribe slots against HBM")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -49,9 +57,12 @@ def main() -> None:
 
     sc = (SampleConfig(greedy=True) if args.temperature == 0.0
           else SampleConfig(temperature=args.temperature))
+    paged = False if (args.slab or args.naive) else None    # None = auto
     eng = ServingEngine(cfg, params, lora=lora, max_slots=args.slots,
                         max_len=args.max_len, sc=sc, seed=args.seed,
-                        fused=not args.naive)
+                        fused=not args.naive, paged=paged,
+                        page_size=args.page_size,
+                        num_pages=args.num_pages or None)
 
     rng = np.random.default_rng(args.seed)
     reqs = [Request(uid=i,
@@ -70,10 +81,13 @@ def main() -> None:
         steps += 1
     wall = time.time() - t0
     total = sum(len(r.output) for r in reqs)
+    mode = "naive" if args.naive else ("slab" if not eng.paged else
+                                       f"paged(ps={eng.page_size},"
+                                       f"np={eng.num_pages})")
     print(f"served {len(reqs)} requests / {total} tokens in {wall:.2f}s "
           f"({total / wall:.1f} tok/s) with {args.slots} slots, "
           f"{steps} engine steps, {eng.prefill_compiles()} prefill "
-          f"compiles ({'naive' if args.naive else 'fused'} engine)")
+          f"compiles ({mode} engine)")
     print("sample token ids:", reqs[0].output[:12])
 
 

@@ -1,9 +1,11 @@
 from .stack import (Runtime, apply_stack, default_serve_runtime,
-                    default_train_runtime, init_stack, init_stack_cache)
+                    default_train_runtime, init_stack, init_stack_cache,
+                    init_paged_stack_cache)
 from .model import (
     abstract_cache, abstract_lora, abstract_params, decode_step, forward,
-    init_cache, init_lora_stack, init_params, loss_fn, lora_num_params,
-    num_active_params, num_params, prefill, IGNORE_ID,
+    init_cache, init_lora_stack, init_paged_cache, init_params, loss_fn,
+    lora_num_params, num_active_params, num_params, paged_decode_step,
+    paged_prefill_chunk, prefill, IGNORE_ID,
 )
 from .generate import (SampleConfig, generate, sample_logits,
                        sample_logits_per_key)
@@ -11,9 +13,11 @@ from .generate import (SampleConfig, generate, sample_logits,
 __all__ = [
     "Runtime", "apply_stack", "default_serve_runtime",
     "default_train_runtime", "init_stack", "init_stack_cache",
+    "init_paged_stack_cache",
     "abstract_cache", "abstract_lora", "abstract_params", "decode_step",
-    "forward", "init_cache", "init_lora_stack", "init_params", "loss_fn",
-    "lora_num_params", "num_active_params", "num_params", "prefill",
+    "forward", "init_cache", "init_lora_stack", "init_paged_cache",
+    "init_params", "loss_fn", "lora_num_params", "num_active_params",
+    "num_params", "paged_decode_step", "paged_prefill_chunk", "prefill",
     "IGNORE_ID", "SampleConfig", "generate", "sample_logits",
     "sample_logits_per_key",
 ]

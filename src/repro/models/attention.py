@@ -337,6 +337,113 @@ def init_attn_cache(cfg, batch: int, cache_len: int, dtype) -> dict:
     }
 
 
+def init_paged_attn_cache(cfg, num_pages: int, page_size: int, dtype) -> dict:
+    """Global KV page pool: (KH, NP, PS, D) per k/v.  Page 0 is the null
+    page — dead slots write there and the allocator never hands it out.
+    Unlike the slab cache there is no per-slot "pos" row: block tables and
+    live lengths are engine state shared by every layer."""
+    if cfg.attn_window:
+        raise NotImplementedError(
+            "paged KV assumes a length-contiguous logical view; ring-wrapped "
+            "sliding-window caches keep the slab layout")
+    kh, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((kh, num_pages, page_size, hd), dtype),
+        "v": jnp.zeros((kh, num_pages, page_size, hd), dtype),
+    }
+
+
+def paged_decode_attention(cfg, p, x, cache, block_table, cur_index, *,
+                           lora=None, lora_scale=1.0, impl="naive",
+                           dense_impl: str = "einsum"):
+    """One-token decode over the paged pool: x (B, 1, d); cache {"k","v"}
+    (KH, NP, PS, D); block_table (B, MP) page ids; cur_index (B,) absolute
+    positions (each serving slot at its own).
+
+    Writes the new KV into page ``block_table[b, pos // PS]`` at offset
+    ``pos % PS`` (dead slots hit the null page 0) and attends over the
+    slot's logical view.  ``impl="flash"`` routes through
+    ``kernels.flash_attention.paged_decode`` — the scalar-prefetch Pallas
+    gather kernel on TPU, the jnp gather oracle elsewhere; any other impl
+    forces the oracle (whole-gather einsum GSPMD can shard).
+    """
+    B = x.shape[0]
+    PS = cache["k"].shape[2]
+    MP = block_table.shape[1]
+    q, k, v = _proj_qkv(cfg, p, x, lora, lora_scale, dense_impl)
+    pos_vec = jnp.broadcast_to(jnp.asarray(cur_index, jnp.int32), (B,))
+    pos = pos_vec[:, None]
+    if cfg.pos_emb == "rope":
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    bidx = jnp.arange(B)
+    # dead slots can sit one past the table (pos == max_len); their row is
+    # all-null anyway — clamp so the gather stays in bounds by construction
+    page = block_table[bidx, jnp.minimum(pos_vec // PS, MP - 1)]
+    off = pos_vec % PS
+    kc = cache["k"].at[:, page, off].set(
+        k[:, 0].astype(cache["k"].dtype).transpose(1, 0, 2))
+    vc = cache["v"].at[:, page, off].set(
+        v[:, 0].astype(cache["v"].dtype).transpose(1, 0, 2))
+    from ..kernels.flash_attention import paged_decode
+    o = paged_decode(q, kc, vc, pos_vec + 1, block_table,
+                     use_kernel=None if impl == "flash" else False)
+    y = dense(o.reshape(B, 1, -1), p["wo"]["w"], p["wo"].get("b"),
+              None if lora is None or "o" not in lora else lora["o"], lora_scale,
+              impl=dense_impl)
+    return y, {"k": kc, "v": vc}
+
+
+def paged_chunk_attention(cfg, p, x, cache, block_table, start, *,
+                          lora=None, lora_scale=1.0,
+                          dense_impl: str = "einsum"):
+    """One chunked-prefill step: x (1, C, d) with C == page_size — the
+    chunk covering absolute positions [start, start + C); block_table
+    (MP,) the slot's page row, the chunk's own page already allocated.
+
+    Writes the whole chunk's KV into page ``block_table[start // PS]``
+    with ONE dynamic_update_slice (chunk == page by construction), then
+    attends causally over the gathered logical view — entry i of the
+    gather IS absolute position i, so the mask is plain
+    ``k_idx <= q_pos``.  Padded tail queries (beyond the prompt) produce
+    garbage the caller never reads, and their KV is overwritten in place
+    as decode advances through the same page.  Stays on the jnp gather
+    form: chunk prefill is off the steady-state path the Pallas kernel
+    serves."""
+    B, C, _ = x.shape
+    KH, _, PS, D = cache["k"].shape
+    MP = block_table.shape[0]
+    q, k, v = _proj_qkv(cfg, p, x, lora, lora_scale, dense_impl)
+    positions = start + jnp.arange(C, dtype=jnp.int32)
+    if cfg.pos_emb == "rope":
+        bpos = jnp.broadcast_to(positions, (B, C))
+        q = apply_rope(q, bpos, cfg.rope_theta)
+        k = apply_rope(k, bpos, cfg.rope_theta)
+    page = block_table[start // PS]
+    kc = jax.lax.dynamic_update_slice(
+        cache["k"], k[0].astype(cache["k"].dtype).transpose(1, 0, 2)[:, None],
+        (0, page, 0, 0))
+    vc = jax.lax.dynamic_update_slice(
+        cache["v"], v[0].astype(cache["v"].dtype).transpose(1, 0, 2)[:, None],
+        (0, page, 0, 0))
+    kg = kc[:, block_table].reshape(KH, MP * PS, D)
+    vg = vc[:, block_table].reshape(KH, MP * PS, D)
+    G = q.shape[2] // KH
+    qr = q[0].reshape(C, KH, G, D)
+    s = jnp.einsum("qhgd,hkd->hgqk", qr.astype(jnp.float32),
+                   kg.astype(jnp.float32)) * D ** -0.5
+    k_idx = jnp.arange(MP * PS)
+    mask = k_idx[None, :] <= positions[:, None]              # (C, MP*PS)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("hgqk,hkd->qhgd", pr, vg.astype(jnp.float32))
+    o = o.reshape(1, C, -1).astype(x.dtype)
+    y = dense(o, p["wo"]["w"], p["wo"].get("b"),
+              None if lora is None or "o" not in lora else lora["o"], lora_scale,
+              impl=dense_impl)
+    return y, {"k": kc, "v": vc}
+
+
 def decode_masked_attention(q, k, v, q_pos, k_pos, window: int = 0):
     """Whole-score decode attention with PER-SLOT positions.
 

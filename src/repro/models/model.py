@@ -211,8 +211,61 @@ def decode_step(cfg: ArchConfig, params: dict, token: jax.Array, caches,
     return logits, caches
 
 
+def paged_decode_step(cfg: ArchConfig, params: dict, token: jax.Array, caches,
+                      block_tables, cur_index, *, lora=None,
+                      rt: Runtime = Runtime()):
+    """One decode step over the paged KV pool.  token: (B, 1) int32;
+    block_tables: (B, MP) int32 page ids; cur_index: (B,) absolute
+    positions (serving slots each at their own).
+
+    Returns (logits (B, V), new caches) — the caches are the page pools
+    from ``init_paged_cache``, updated in place (donation-friendly)."""
+    cur_index = jnp.asarray(cur_index, jnp.int32)
+    positions = cur_index[:, None]
+    x = embed(cfg, params["embed"], token, positions)
+    x, caches, _ = stack_mod.apply_stack(cfg, params["layers"], x,
+                                         positions=positions, lora=lora, rt=rt,
+                                         mode="decode", caches=caches,
+                                         cur_index=cur_index,
+                                         block_tables=block_tables)
+    x = apply_norm(cfg, x, params["final_norm"])
+    logits = unembed(cfg, params["embed"], x)[:, 0]
+    return logits, caches
+
+
+def paged_prefill_chunk(cfg: ArchConfig, params: dict, tokens: jax.Array,
+                        caches, block_table, start, logit_index, *,
+                        lora=None, rt: Runtime = Runtime()):
+    """One chunked-prefill step: tokens (1, C) with C == page_size, the
+    prompt chunk covering absolute positions [start, start + C);
+    block_table (MP,) the slot's page row (the chunk's page already
+    allocated); logit_index the CHUNK-relative index to read logits at
+    (clamped by the caller; only meaningful on the final chunk).
+
+    Returns (logits (1, V), new caches).  One compiled executable serves
+    every chunk of every prompt — start/logit_index are traced scalars."""
+    C = tokens.shape[1]
+    start = jnp.asarray(start, jnp.int32)
+    positions = start + jnp.arange(C, dtype=jnp.int32)
+    x = embed(cfg, params["embed"], tokens, positions)
+    x, caches, _ = stack_mod.apply_stack(cfg, params["layers"], x,
+                                         positions=positions, lora=lora, rt=rt,
+                                         mode="chunk", caches=caches,
+                                         cur_index=start,
+                                         block_tables=block_table)
+    x = jax.lax.dynamic_slice_in_dim(x, logit_index, 1, axis=1)
+    x = apply_norm(cfg, x, params["final_norm"])
+    logits = unembed(cfg, params["embed"], x)[:, 0]
+    return logits, caches
+
+
 def init_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype=jnp.bfloat16):
     return stack_mod.init_stack_cache(cfg, batch, cache_len, dtype)
+
+
+def init_paged_cache(cfg: ArchConfig, num_pages: int, page_size: int,
+                     dtype=jnp.bfloat16):
+    return stack_mod.init_paged_stack_cache(cfg, num_pages, page_size, dtype)
 
 
 def abstract_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype=jnp.bfloat16):

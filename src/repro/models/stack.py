@@ -93,13 +93,28 @@ def _mixer_lora(lora):
 
 
 def apply_block(cfg, pat, p: dict, x, *, positions, lora, lora_scale, rt: Runtime,
-                mode: str, cache=None, cur_index=None, cache_len: int = 0):
-    """mode: "train" | "prefill" | "decode".  Returns (x, cache_out, aux)."""
+                mode: str, cache=None, cur_index=None, cache_len: int = 0,
+                block_tables=None):
+    """mode: "train" | "prefill" | "decode" | "chunk".  Returns
+    (x, cache_out, aux).  ``block_tables`` switches decode onto the paged
+    KV pool ((B, MP) page ids; cache is then the (KH, NP, PS, D) pool);
+    mode "chunk" is one paged-prefill chunk (block_tables (MP,), cur_index
+    the chunk's absolute start)."""
     aux = jnp.zeros((), jnp.float32)
     h = apply_norm(cfg, x, p["norm1"])
     cache_out = cache
     if pat.mixer == "attention":
-        if mode == "decode":
+        if mode == "decode" and block_tables is not None:
+            m, cache_out = attn_mod.paged_decode_attention(
+                cfg, p["mixer"], h, cache, block_tables, cur_index,
+                lora=_mixer_lora(lora), lora_scale=lora_scale,
+                impl=rt.decode_attn_impl, dense_impl=rt.dense_impl)
+        elif mode == "chunk":
+            m, cache_out = attn_mod.paged_chunk_attention(
+                cfg, p["mixer"], h, cache, block_tables, cur_index,
+                lora=_mixer_lora(lora), lora_scale=lora_scale,
+                dense_impl=rt.dense_impl)
+        elif mode == "decode":
             m, cache_out = attn_mod.decode_attention(
                 cfg, p["mixer"], h, cache, cur_index,
                 lora=_mixer_lora(lora), lora_scale=lora_scale,
@@ -118,6 +133,10 @@ def apply_block(cfg, pat, p: dict, x, *, positions, lora, lora_scale, rt: Runtim
                 q_chunk=rt.q_chunk, s_low_precision=rt.attn_s_bf16,
                 dense_impl=rt.dense_impl)
     else:  # mamba
+        if mode == "chunk":
+            raise NotImplementedError(
+                "paged chunk prefill is attention-only (mamba state is not "
+                "paged); init_paged_stack_cache rejects such patterns")
         if mode == "decode":
             m, cache_out = ssm_mod.mamba_step(
                 cfg, p["mixer"], h, cache, lora=_mixer_lora(lora),
@@ -179,6 +198,21 @@ def init_stack_cache(cfg, batch: int, cache_len: int, dtype) -> Tuple[Any, ...]:
     return tuple(out)
 
 
+def init_paged_stack_cache(cfg, num_pages: int, page_size: int,
+                           dtype) -> Tuple[Any, ...]:
+    """Paged KV pools, stacked over repeats, tuple over pattern positions.
+    Attention-only: mamba state has no length axis to page."""
+    if any(pat.mixer != "attention" for pat in cfg.pattern):
+        raise NotImplementedError(
+            "paged KV cache requires an attention-only pattern")
+    R = cfg.pattern_repeats
+    out = []
+    for _ in cfg.pattern:
+        one = attn_mod.init_paged_attn_cache(cfg, num_pages, page_size, dtype)
+        out.append(jax.tree.map(lambda x: jnp.broadcast_to(x, (R,) + x.shape), one))
+    return tuple(out)
+
+
 # ---------------------------------------------------------------------------
 # stack apply (scan over repeats)
 # ---------------------------------------------------------------------------
@@ -188,7 +222,7 @@ def apply_stack(cfg, stack_params, x, *, positions, lora=None, rt: Runtime,
                 cache_len: int = 0,
                 rep_slice: Optional[Tuple[int, int]] = None,
                 rep_gate: Optional[Tuple[Any, Any]] = None,
-                lora_scale=None):
+                lora_scale=None, block_tables=None):
     """Run (a slice of) the layer stack.
 
     ``rep_slice=(a, b)`` runs pattern repeats [a, b) — the SFL split point
@@ -245,7 +279,8 @@ def apply_stack(cfg, stack_params, x, *, positions, lora=None, rt: Runtime,
                 lora=None if l_slices is None else l_slices[pi],
                 lora_scale=scale, rt=rt, mode=mode,
                 cache=None if c_slices is None else c_slices[pi],
-                cur_index=cur_index, cache_len=cache_len)
+                cur_index=cur_index, cache_len=cache_len,
+                block_tables=block_tables)
             c_outs.append(c_out)
             aux = aux + a
         x = _constrain(x)       # keep scan-carried activations batch-sharded

@@ -1,3 +1,5 @@
-from .engine import Request, ServingEngine
+from .engine import Request, ServingEngine, bucket_len
+from .paging import NULL_PAGE, alloc_pages, free_pages, init_pager
 
-__all__ = ["Request", "ServingEngine"]
+__all__ = ["Request", "ServingEngine", "bucket_len",
+           "NULL_PAGE", "alloc_pages", "free_pages", "init_pager"]

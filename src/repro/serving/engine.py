@@ -31,6 +31,33 @@ decode, host-side sampling, full-cache admission copy) as the measured
 baseline for the serving benchmark and the fused-vs-naive equivalence
 test; it shares the per-request RNG streams so both modes sample
 identically.
+
+PAGED KV (default where eligible): instead of per-slot ``max_len`` slabs
+the KV lives in a global page pool ``(KH, num_pages, page_size, D)`` with
+per-slot ``(max_pages,)`` block tables — HBM is sized for the EXPECTED
+total tokens in flight, not worst-case ``slots * max_len``, so the same
+budget holds more concurrent sequences (``benchmarks/bench_traffic.py``
+measures the TTFT/throughput win under Poisson traffic):
+
+* pages allocate and free IN-GRAPH (``serving.paging``: a free-list
+  stack carried in the donated step state) — a slot crossing a page
+  boundary pops a page, finished slots push all theirs back, inside the
+  same single jitted step; the one-call property of the fused path is
+  preserved and asserted (``_jit_step_paged._cache_size() == 1``);
+* admission is reservation-based: the host mirrors a conservative free
+  count and admits a request only when its worst-case page demand
+  (``ceil(min(P + max_new, max_len) / page_size)``) fits, so the
+  in-graph allocator can never underflow (head-of-line FIFO
+  backpressure otherwise — no silent drops);
+* prefill is CHUNKED: prompts stream through ONE compiled chunk
+  executable ``page_size`` tokens at a time (chunk == page), collapsing
+  the log2(max_len) bucketed prefill variants to a single program;
+* sampling keys are unchanged (``fold_in(fold_in(key, uid), idx)``), so
+  outputs stay independent of page layout, slot index, and arrival
+  order — the paged engine is token-identical to the slab engine.
+
+``paged=False`` forces the PR-3 slab layout (the benchmark baseline);
+mamba/windowed/frontend archs fall back to it automatically.
 """
 from __future__ import annotations
 
@@ -46,6 +73,7 @@ from ..models import model as model_mod
 from ..models.generate import (SampleConfig, sample_logits,
                                sample_logits_per_key)
 from ..models.stack import Runtime, default_serve_runtime
+from . import paging
 
 
 @dataclass
@@ -65,19 +93,32 @@ def _is_pos(kp) -> bool:
 
 
 def bucket_len(n: int, max_len: int) -> int:
-    """Smallest power of two >= n (floor 8, capped at max_len): mixed
-    prompt lengths compile at most log2(max_len) prefill variants."""
+    """Smallest power of two >= n (floor 8), capped at the largest power
+    of two <= max_len: mixed prompt lengths compile at most log2(max_len)
+    prefill variants.  For a non-power-of-two ``max_len`` the cap rounds
+    DOWN — capping at ``max_len`` itself would leak a non-power-of-two
+    shape into the compile cache and (worse) return a bucket shorter than
+    the prompt.  Prompts longer than the cap are the caller's problem
+    (the engine prefills them at exact length); the assert keeps that
+    contract honest."""
     b = 8
     while b < n:
         b *= 2
-    return min(b, max_len)
+    cap = 1 << (max_len.bit_length() - 1)
+    b = min(b, cap)
+    assert b >= n, (
+        f"prompt length {n} exceeds the largest bucket {b} for "
+        f"max_len={max_len}; use exact-length prefill for gap prompts")
+    return b
 
 
 class ServingEngine:
     def __init__(self, cfg, params, *, lora=None, rt: Optional[Runtime] = None,
                  max_slots: int = 4, max_len: int = 256,
                  sc: SampleConfig = SampleConfig(greedy=True), seed: int = 0,
-                 fused: bool = True, prefill_buckets: bool = True):
+                 fused: bool = True, prefill_buckets: bool = True,
+                 paged: Optional[bool] = None, page_size: int = 16,
+                 num_pages: Optional[int] = None):
         if getattr(cfg, "frontend", None):
             raise NotImplementedError(
                 "ServingEngine serves text-only requests; frontend archs "
@@ -91,9 +132,21 @@ class ServingEngine:
         # rings have no such tail — those archs prefill at exact length
         self.prefill_buckets = (prefill_buckets and not cfg.attn_window and
                                 all(p.mixer == "attention" for p in cfg.pattern))
+        # paged KV needs the same length-contiguous attention-only shape,
+        # and the chunk == page layout needs max_len to divide into pages
+        paged_ok = (fused and not cfg.attn_window and
+                    all(p.mixer == "attention" for p in cfg.pattern))
+        if paged is None:
+            paged = paged_ok and max_len % page_size == 0
+        elif paged and not fused:
+            raise ValueError("paged KV requires the fused engine "
+                             "(page alloc/free live inside the fused step)")
+        elif paged and not paged_ok:
+            raise NotImplementedError(
+                "paged KV requires an attention-only, non-windowed pattern")
+        self.paged = paged
         self.key = jax.random.key(seed)
 
-        self.caches = model_mod.init_cache(cfg, max_slots, max_len, jnp.float32)
         self.queue: collections.deque[Request] = collections.deque()
         self.slots: List[Optional[Request]] = [None] * max_slots
 
@@ -109,6 +162,31 @@ class ServingEngine:
         # host-side mirrors for the legacy (fused=False) loop
         self._np_positions = np.zeros(B, np.int64)
         self._np_last = np.zeros(B, np.int64)
+
+        if self.paged:
+            if max_len % page_size:
+                raise ValueError(f"max_len={max_len} must be a multiple of "
+                                 f"page_size={page_size} (chunk == page)")
+            self.page_size = page_size
+            self.max_pages = max_len // page_size
+            # default pool matches slab capacity exactly (+ the null page):
+            # callers shrink num_pages to oversubscribe slots against HBM
+            self.num_pages = (num_pages if num_pages is not None
+                              else max_slots * self.max_pages + 1)
+            if self.num_pages < self.max_pages + 1:
+                raise ValueError("num_pages too small for a single request")
+            self.caches = model_mod.init_paged_cache(
+                cfg, self.num_pages, page_size, jnp.float32)
+            self._bt = jnp.zeros((B, self.max_pages), jnp.int32)
+            self._pager = paging.init_pager(self.num_pages)
+            # conservative host mirror of the in-graph free count: admission
+            # reserves worst-case pages per request, so in-graph demand
+            # (lazy, actual) can never underflow the stack
+            self._free_host = self.num_pages - 1
+            self._reserved = [0] * B
+        else:
+            self.caches = model_mod.init_cache(cfg, max_slots, max_len,
+                                               jnp.float32)
 
         self._build_jits()
 
@@ -138,6 +216,78 @@ class ServingEngine:
                     positions + live.astype(jnp.int32), live & ~done, ngen1)
 
         self._jit_step = jax.jit(_step, donate_argnums=(2, 3, 4, 5, 7))
+
+        if self.paged:
+            PS, MP = self.page_size, self.max_pages
+
+            # -- fused PAGED decode step: page alloc + decode + sample +
+            #    bookkeeping + page free, ONE donated call ----------------
+            def _step_paged(params, lora, caches, pager, bt, last, positions,
+                            live, uids, ngen, maxnew, eos):
+                bidx = jnp.arange(B)
+                # a live slot about to write at a page boundary needs a
+                # fresh page (prefill only covered [0, ceil(P/PS)*PS));
+                # each boundary is crossed exactly once, so this is the
+                # request's lazy, actual page demand
+                need = live & (positions % PS == 0)
+                pager, newp, _ = paging.alloc_pages(pager, need)
+                page_idx = jnp.minimum(positions // PS, MP - 1)
+                cur = bt[bidx, page_idx]
+                bt = bt.at[bidx, page_idx].set(jnp.where(need, newp, cur))
+                logits, caches = model_mod.paged_decode_step(
+                    cfg, params, last[:, None], caches, bt, positions,
+                    lora=lora, rt=rt)
+                nxt = sample_logits_per_key(logits, _slot_keys(uids, ngen), sc)
+                nxt = jnp.where(live, nxt, 0)
+                ngen1 = ngen + live.astype(jnp.int32)
+                done = live & ((nxt == eos) | (ngen1 >= maxnew) |
+                               (positions + 1 >= max_len))
+                pager, bt = paging.free_pages(pager, bt, done)
+                return (nxt, done, caches, pager, bt,
+                        jnp.where(live, nxt, last),
+                        positions + live.astype(jnp.int32), live & ~done,
+                        ngen1)
+
+            self._jit_step_paged = jax.jit(
+                _step_paged, donate_argnums=(2, 3, 4, 5, 6, 7, 9))
+
+            # -- chunked prefill: ONE compiled executable serves every
+            #    chunk of every prompt (start/true_len/uid/slot traced) ---
+            def _chunk(params, lora, caches, pager, bt, tokens, slot, start,
+                       true_len, uid):
+                pager, newp, _ = paging.alloc_pages(
+                    pager, jnp.ones((1,), bool))
+                bt = bt.at[slot, start // PS].set(newp[0])
+                row = jax.lax.dynamic_index_in_dim(bt, slot, 0,
+                                                   keepdims=False)
+                li = jnp.clip(true_len - 1 - start, 0, PS - 1)
+                logits, caches = model_mod.paged_prefill_chunk(
+                    cfg, params, tokens, caches, row, start, li,
+                    lora=lora, rt=rt)
+                k = jax.random.fold_in(jax.random.fold_in(base_key, uid), 0)
+                tok0 = sample_logits(logits, k, sc)[0]
+                return tok0, caches, pager, bt
+
+            self._jit_chunk = jax.jit(_chunk, donate_argnums=(2, 3, 4))
+
+            # -- claim a slot after its prompt streamed through ----------
+            def _claim(last, positions, live, uids, ngen, maxnew, eos, slot,
+                       tok0, true_len, uid, req_maxnew, req_eos):
+                return (last.at[slot].set(tok0),
+                        positions.at[slot].set(true_len),
+                        live.at[slot].set(True), uids.at[slot].set(uid),
+                        ngen.at[slot].set(1), maxnew.at[slot].set(req_maxnew),
+                        eos.at[slot].set(req_eos))
+
+            self._jit_claim = jax.jit(
+                _claim, donate_argnums=(0, 1, 2, 3, 4, 5, 6))
+
+            # -- release a slot's pages (request finished mid-prefill) ---
+            def _release(pager, bt, slot):
+                return paging.free_pages(pager, bt,
+                                         jnp.arange(B) == slot)
+
+            self._jit_release = jax.jit(_release, donate_argnums=(0, 1))
 
         # -- bucketed prefill: KV for one request + its first token ------
         def _prefill(params, lora, tokens, true_len, uid):
@@ -203,14 +353,61 @@ class ServingEngine:
         self.queue.append(req)
 
     def prefill_compiles(self) -> int:
-        """Number of distinct prefill programs compiled so far (bounded by
-        the bucket count for mixed-length traffic)."""
+        """Number of distinct prefill programs compiled so far (paged:
+        exactly one chunk executable for ANY prompt-length mix; slab:
+        bounded by the power-of-two bucket count)."""
+        if self.paged:
+            return self._jit_chunk._cache_size()
         fn = self._jit_prefill if self.fused else self._jit_prefill_full
         return fn._cache_size()
+
+    def pages_in_use(self) -> int:
+        """Pages currently allocated out of the in-graph pool."""
+        return self.num_pages - 1 - int(self._pager["head"])
+
+    def _worst_pages(self, req: Request) -> int:
+        """Worst-case page demand of one request: every position it can
+        ever write KV at is < min(P + max_new, max_len)."""
+        toks = min(len(req.prompt) + req.max_new_tokens, self.max_len)
+        return -(-toks // self.page_size)
 
     # ------------------------------------------------------------------
     # admission
     # ------------------------------------------------------------------
+    def _admit_one_paged(self, s: int, req: Request) -> bool:
+        """Stream ``req``'s prompt through the compiled chunk executable
+        (one page per chunk) and claim slot ``s``.  The caller has already
+        reserved ``_worst_pages(req)`` in the host mirror.  Returns False
+        when the request finished on its very first token (pages released,
+        slot stays free)."""
+        P, PS = len(req.prompt), self.page_size
+        tok0_d = None
+        for start in range(0, P, PS):
+            n = min(PS, P - start)
+            chunk = req.prompt[start:start + n] + [0] * (PS - n)
+            tokens = jnp.asarray(chunk, jnp.int32)[None]
+            (tok0_d, self.caches, self._pager, self._bt) = self._jit_chunk(
+                self.params, self.lora, self.caches, self._pager, self._bt,
+                tokens, jnp.int32(s), jnp.int32(start), jnp.int32(P),
+                jnp.int32(req.uid))
+        tok0 = int(tok0_d)
+        req.output.append(tok0)
+        if (tok0 == req.eos_id) or (req.max_new_tokens <= 1):
+            req.done = True
+            self._pager, self._bt = self._jit_release(
+                self._pager, self._bt, jnp.int32(s))
+            self._free_host += self._reserved[s]
+            self._reserved[s] = 0
+            return False
+        (self._last, self._positions, self._live, self._uids, self._ngen,
+         self._maxnew, self._eos) = self._jit_claim(
+            self._last, self._positions, self._live, self._uids, self._ngen,
+            self._maxnew, self._eos, jnp.int32(s), tok0_d, jnp.int32(P),
+            jnp.int32(req.uid), jnp.int32(req.max_new_tokens),
+            jnp.int32(req.eos_id))
+        self.slots[s] = req
+        return True
+
     def _admit_one(self, s: int, req: Request) -> bool:
         """Prefill ``req`` and claim slot ``s``.  Returns False when the
         request finished on its very first token (slot stays free)."""
@@ -218,8 +415,15 @@ class ServingEngine:
         if P >= self.max_len:       # no room to decode even one token
             req.done = True
             return False
+        if self.paged:
+            return self._admit_one_paged(s, req)
         if self.fused:
-            Lb = bucket_len(P, self.max_len) if self.prefill_buckets else P
+            # prompts longer than the largest power-of-two bucket (only
+            # possible for non-power-of-two max_len) prefill at exact
+            # length — bucket_len would otherwise return a bucket < P
+            cap = 1 << (self.max_len.bit_length() - 1)
+            use_bucket = self.prefill_buckets and P <= cap
+            Lb = bucket_len(P, self.max_len) if use_bucket else P
             tokens = jnp.asarray(req.prompt + [0] * (Lb - P), jnp.int32)[None]
             tok0_d, cache1 = self._jit_prefill(self.params, self.lora, tokens,
                                                jnp.int32(P), jnp.int32(req.uid))
@@ -252,6 +456,16 @@ class ServingEngine:
     def _admit(self) -> None:
         for s in range(self.max_slots):
             while self.slots[s] is None and self.queue:
+                if self.paged:
+                    head = self.queue[0]
+                    if len(head.prompt) < self.max_len:
+                        worst = self._worst_pages(head)
+                        if worst > self._free_host:
+                            # FIFO backpressure: hold the whole queue until
+                            # enough pages free (no reordering, no drops)
+                            return
+                        self._free_host -= worst
+                        self._reserved[s] = worst
                 if self._admit_one(s, self.queue.popleft()):
                     break
 
@@ -265,7 +479,24 @@ class ServingEngine:
         live = [s for s in range(self.max_slots) if self.slots[s] is not None]
         if not live:
             return 0
-        if self.fused:
+        if self.paged:
+            (nxt, done, self.caches, self._pager, self._bt, self._last,
+             self._positions, self._live, self._ngen) = self._jit_step_paged(
+                self.params, self.lora, self.caches, self._pager, self._bt,
+                self._last, self._positions, self._live, self._uids,
+                self._ngen, self._maxnew, self._eos)
+            nxt_h, done_h = np.asarray(nxt), np.asarray(done)
+            for s in live:
+                req = self.slots[s]
+                req.output.append(int(nxt_h[s]))
+                if done_h[s]:
+                    req.done = True
+                    self.slots[s] = None
+                    # pages were pushed back in-graph this same step;
+                    # return the full reservation to the host mirror
+                    self._free_host += self._reserved[s]
+                    self._reserved[s] = 0
+        elif self.fused:
             (nxt, done, self.caches, self._last, self._positions, self._live,
              self._ngen) = self._jit_step(
                 self.params, self.lora, self.caches, self._last,

@@ -1,0 +1,73 @@
+"""In-graph KV page allocator: a free-list stack that lives inside the
+engine's donated step state, so page allocate/free compile into the fused
+serving step (the one-jitted-call property survives paging).
+
+The pool has ``num_pages`` physical pages.  Page 0 is the NULL page: block
+tables are zero-initialised, dead slots write their (garbage) KV there,
+and the allocator never hands it out — ``init_pager`` stacks pages
+[1, num_pages) and keeps a sentinel 0 at the bottom that ``head`` never
+reaches while the reservation invariant holds (the host admission mirror
+reserves worst-case pages per request, so in-graph demand never exceeds
+the stack).
+
+All three operations are fixed-shape jnp — no cond branches, no dynamic
+shapes — so they trace once inside the donated step:
+
+* ``alloc_pages``: vectorized multi-pop.  Requesters are ranked by cumsum
+  over the request mask and read ``free[head - 1 - rank]``; non-requesting
+  lanes get the null page.  All-or-nothing: if the stack holds fewer pages
+  than requested nobody allocates (``ok`` false) — the serving engine
+  never hits this path (admission backpressure reserves ahead), but the
+  property tests exercise it.
+* ``free_pages``: vectorized multi-push of every non-null page of the
+  masked block-table rows, via a scatter whose out-of-bounds lanes
+  (non-freed pages → dest index num_pages) drop silently
+  (``mode="drop"``).  The freed rows come back zeroed (all-null).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NULL_PAGE = 0
+
+
+def init_pager(num_pages: int) -> dict:
+    """Free-list stack over pages [1, num_pages): ``free[:head]`` are the
+    available page ids (top of stack at ``head - 1``)."""
+    free = jnp.concatenate([jnp.arange(1, num_pages, dtype=jnp.int32),
+                            jnp.zeros((1,), jnp.int32)])
+    return {"free": free, "head": jnp.int32(num_pages - 1)}
+
+
+def alloc_pages(pager: dict, need):
+    """Pop one page per True lane of ``need`` (bool (B,)), all-or-nothing.
+
+    Returns (pager, pages (B,) int32, ok scalar bool) — non-requesting
+    lanes (and every lane when ``ok`` is False) get NULL_PAGE."""
+    need = need.astype(jnp.int32)
+    n = jnp.sum(need)
+    ok = n <= pager["head"]
+    take = need * ok.astype(jnp.int32)
+    rank = jnp.cumsum(take) - take                      # 0-based pop order
+    idx = jnp.clip(pager["head"] - 1 - rank, 0, pager["free"].shape[0] - 1)
+    pages = jnp.where(take.astype(bool), pager["free"][idx], NULL_PAGE)
+    head = pager["head"] - n * ok.astype(jnp.int32)
+    return {"free": pager["free"], "head": head}, pages, ok
+
+
+def free_pages(pager: dict, block_tables, mask):
+    """Push every non-null page of the masked rows back onto the stack.
+
+    block_tables: (S, MP) int32; mask: bool (S,) — rows to free.  Returns
+    (pager, block_tables) with the freed rows zeroed."""
+    S, MP = block_tables.shape
+    NP = pager["free"].shape[0]
+    flat_p = block_tables.reshape(-1)
+    flat_m = (mask[:, None] & (block_tables != NULL_PAGE)).reshape(-1)
+    fm = flat_m.astype(jnp.int32)
+    rank = jnp.cumsum(fm) - fm
+    dest = jnp.where(flat_m, pager["head"] + rank, NP)  # OOB lanes drop
+    free = pager["free"].at[dest].set(flat_p, mode="drop")
+    head = pager["head"] + jnp.sum(fm)
+    bt = jnp.where(mask[:, None], NULL_PAGE, block_tables)
+    return {"free": free, "head": head}, bt

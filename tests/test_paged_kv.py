@@ -1,0 +1,386 @@
+"""Paged KV cache: the in-graph free-list allocator's invariants
+(conservation, no double allocation, alloc-after-free reuse,
+all-or-nothing backpressure — property-tested under hypothesis where
+available, deterministically otherwise), interpret-mode parity of the
+scalar-prefetch paged-decode kernel vs the jnp gather oracle, and the
+paged serving engine end to end (token parity with the slab engine,
+page-pool backpressure, and the one-compiled-call property of the fused
+paged step)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro import models as M
+from repro.models.generate import SampleConfig
+from repro.kernels.flash_attention import (best_paged_block, paged_decode,
+                                           paged_decode_ref)
+from repro.serving import Request, ServingEngine
+from repro.serving.paging import (NULL_PAGE, alloc_pages, free_pages,
+                                  init_pager)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:                                   # CI installs hypothesis
+    HAVE_HYP = False
+
+TOLS = {jnp.float32: dict(atol=1e-5, rtol=1e-5),
+        jnp.bfloat16: dict(atol=3e-2, rtol=3e-2)}
+
+
+# ---------------------------------------------------------------------------
+# allocator — deterministic invariants (always run)
+# ---------------------------------------------------------------------------
+
+def _pool_state(pager):
+    """(set of free page ids, head) from the device pytree."""
+    head = int(pager["head"])
+    return set(np.asarray(pager["free"][:head]).tolist()), head
+
+
+def test_pager_init_excludes_null_page():
+    pager = init_pager(9)
+    free, head = _pool_state(pager)
+    assert head == 8
+    assert free == set(range(1, 9))
+    assert NULL_PAGE not in free
+
+
+def test_alloc_pages_pop_and_masking():
+    pager = init_pager(9)
+    pager, pages, ok = alloc_pages(pager, jnp.asarray([True, False, True]))
+    assert bool(ok)
+    p = np.asarray(pages)
+    assert p[1] == NULL_PAGE                    # non-requesting lane
+    assert p[0] != p[2] and NULL_PAGE not in (p[0], p[2])
+    free, head = _pool_state(pager)
+    assert head == 6
+    assert {int(p[0]), int(p[2])} & free == set()   # popped pages gone
+
+
+def test_alloc_pages_all_or_nothing():
+    pager = init_pager(4)                       # 3 usable pages
+    pager, _, ok = alloc_pages(pager, jnp.ones((2,), bool))
+    assert bool(ok)
+    before = _pool_state(pager)
+    pager, pages, ok = alloc_pages(pager, jnp.ones((2,), bool))
+    assert not bool(ok)                         # 1 page left, 2 wanted
+    assert np.all(np.asarray(pages) == NULL_PAGE)
+    assert _pool_state(pager) == before         # nothing consumed
+
+
+def test_free_pages_returns_and_zeroes_rows():
+    pager = init_pager(9)
+    pager, pages, _ = alloc_pages(pager, jnp.ones((4,), bool))
+    bt = jnp.stack([pages[:2], pages[2:]]).reshape(2, 2)
+    pager, bt = free_pages(pager, bt, jnp.asarray([True, False]))
+    free, head = _pool_state(pager)
+    assert head == 6                            # two pages came back
+    assert {int(pages[0]), int(pages[1])} <= free
+    assert np.all(np.asarray(bt[0]) == NULL_PAGE)
+    np.testing.assert_array_equal(np.asarray(bt[1]), np.asarray(pages[2:]))
+
+
+def test_alloc_after_free_reuses_pages():
+    """The freed pages are exactly the ones handed out next (stack
+    discipline) — the pool never grows and never leaks."""
+    pager = init_pager(5)
+    pager, pages, _ = alloc_pages(pager, jnp.ones((4,), bool))
+    bt = pages.reshape(4, 1)
+    pager, bt = free_pages(pager, bt, jnp.ones((4,), bool))
+    pager, again, ok = alloc_pages(pager, jnp.ones((4,), bool))
+    assert bool(ok)
+    assert set(np.asarray(again).tolist()) == set(np.asarray(pages).tolist())
+
+
+def _random_episode(seed, num_pages, slots, max_pages, steps):
+    """Drive alloc/free with random demands; check conservation, no
+    double allocation, and all-or-nothing at every step."""
+    rng = np.random.default_rng(seed)
+    pager = init_pager(num_pages)
+    bt = jnp.zeros((slots, max_pages), jnp.int32)
+    owned = [[] for _ in range(slots)]          # host model of allocation
+    for _ in range(steps):
+        if rng.random() < 0.6:                  # alloc round
+            need = rng.random(slots) < 0.5
+            # a slot with a full table can't take another page
+            need &= np.asarray([len(o) < max_pages for o in owned])
+            pager, pages, ok = alloc_pages(pager, jnp.asarray(need))
+            pages = np.asarray(pages)
+            if bool(ok):
+                for s in np.flatnonzero(need):
+                    bt = bt.at[s, len(owned[s])].set(int(pages[s]))
+                    owned[s].append(int(pages[s]))
+            else:
+                assert int(need.sum()) > int(pager["head"])
+                assert np.all(pages == NULL_PAGE)
+        else:                                   # free round
+            mask = rng.random(slots) < 0.4
+            pager, bt = free_pages(pager, bt, jnp.asarray(mask))
+            for s in np.flatnonzero(mask):
+                owned[s] = []
+        free, head = _pool_state(pager)
+        held = [p for o in owned for p in o]
+        # no double allocation: every held page unique, none also free
+        assert len(held) == len(set(held))
+        assert not (set(held) & free)
+        # conservation: free + held == the full pool, every step
+        assert head + len(held) == num_pages - 1
+        assert free | set(held) == set(range(1, num_pages))
+
+
+def test_pager_random_episode_invariants():
+    _random_episode(0, num_pages=9, slots=3, max_pages=3, steps=60)
+    _random_episode(1, num_pages=5, slots=4, max_pages=2, steps=60)
+
+
+if HAVE_HYP:
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           num_pages=st.integers(2, 12),
+           slots=st.integers(1, 5),
+           max_pages=st.integers(1, 4),
+           steps=st.integers(1, 40))
+    def test_pager_property_invariants(seed, num_pages, slots, max_pages,
+                                       steps):
+        """Free-list conservation, no double allocation, reuse after free,
+        and all-or-nothing backpressure over arbitrary traffic."""
+        _random_episode(seed, num_pages, slots, max_pages, steps)
+
+
+# ---------------------------------------------------------------------------
+# kernel — interpret-mode parity vs the gather oracle
+# ---------------------------------------------------------------------------
+
+def _paged_inputs(B, H, KH, MP, PS, D, dtype, seed=0):
+    """Pool sized to not divide evenly into the tables (null page + spares),
+    block tables a scrambled permutation — parity must be layout-blind."""
+    NP = B * MP + 3
+    ks = jax.random.split(jax.random.key(seed), 4)
+    q = jax.random.normal(ks[0], (B, H, D), jnp.float32).astype(dtype)
+    kp = jax.random.normal(ks[1], (KH, NP, PS, D), jnp.float32).astype(dtype)
+    vp = jax.random.normal(ks[2], (KH, NP, PS, D), jnp.float32).astype(dtype)
+    perm = jax.random.permutation(ks[3], jnp.arange(1, NP, dtype=jnp.int32))
+    bt = perm[:B * MP].reshape(B, MP)
+    return q, kp, vp, bt
+
+
+def _ref(q, kp, vp, lengths, bt):
+    B, H, D = q.shape
+    KH = kp.shape[0]
+    o = paged_decode_ref(q.reshape(B, KH, H // KH, D), kp, vp, lengths, bt)
+    return o.reshape(B, H, D)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,KH,MP,PS,D,bk", [
+    (2, 4, 2, 3, 16, 32, 16),     # grouped, one tile per page
+    (3, 4, 1, 4, 32, 16, 16),     # MQA, sub-page tiles (bk < PS)
+    (2, 8, 8, 2, 16, 32, 8),      # MHA, sub-page tiles
+    (1, 6, 3, 5, 16, 64, 16),     # ragged heads, deep table
+])
+def test_paged_decode_kernel_parity(B, H, KH, MP, PS, D, bk, dtype):
+    """Interpret-mode kernel (block-table gather via scalar-prefetch index
+    map) vs the jnp gather oracle, ragged live lengths, scrambled pages."""
+    q, kp, vp, bt = _paged_inputs(B, H, KH, MP, PS, D, dtype)
+    lengths = jnp.asarray(np.linspace(1, MP * PS, B).round(), jnp.int32)
+    ok = paged_decode(q, kp, vp, lengths, bt, bk=bk, interpret=True)
+    oref = _ref(q, kp, vp, lengths, bt)
+    np.testing.assert_allclose(np.asarray(ok, np.float32),
+                               np.asarray(oref, np.float32), **TOLS[dtype])
+
+
+def test_paged_decode_every_length():
+    """Exhaustive live-length scan 1..MP*PS with sub-page tiles: crosses
+    every tile AND page boundary, one slot per possible length."""
+    MP, PS, bk = 3, 16, 8
+    B = MP * PS
+    q, kp, vp, bt = _paged_inputs(B, 4, 2, MP, PS, 16, jnp.float32)
+    lengths = jnp.arange(1, MP * PS + 1, dtype=jnp.int32)
+    ok = paged_decode(q, kp, vp, lengths, bt, bk=bk, interpret=True)
+    oref = _ref(q, kp, vp, lengths, bt)
+    np.testing.assert_allclose(np.asarray(ok), np.asarray(oref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_paged_decode_dead_slot_returns_zeros():
+    """length 0 (dead slot, all-null table row) skips every tile and
+    yields zeros — never NaN from an empty softmax or a null-page DMA."""
+    q, kp, vp, bt = _paged_inputs(2, 4, 2, 3, 16, 16, jnp.float32)
+    bt = bt.at[0].set(NULL_PAGE)
+    lengths = jnp.asarray([0, 29], jnp.int32)
+    o = paged_decode(q, kp, vp, lengths, bt, bk=8, interpret=True)
+    assert np.isfinite(np.asarray(o)).all()
+    np.testing.assert_array_equal(np.asarray(o[0]), 0.0)
+
+
+def test_paged_decode_layout_independence():
+    """The same logical cache under two different physical page layouts
+    must produce identical outputs (oracle path: bit-identical)."""
+    B, H, KH, MP, PS, D = 2, 4, 2, 3, 8, 16
+    q, kp, vp, bt = _paged_inputs(B, H, KH, MP, PS, D, jnp.float32)
+    lengths = jnp.asarray([13, 22], jnp.int32)
+    # build a second pool holding the same logical KV on different pages
+    perm = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                            jnp.flip(jnp.arange(1, kp.shape[1],
+                                                dtype=jnp.int32))])
+    kp2 = jnp.zeros_like(kp).at[:, perm].set(kp)
+    vp2 = jnp.zeros_like(vp).at[:, perm].set(vp)
+    bt2 = perm[bt]
+    o1 = paged_decode(q, kp, vp, lengths, bt, use_kernel=False)
+    o2 = paged_decode(q, kp2, vp2, lengths, bt2, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+
+
+def test_paged_decode_q_rank4():
+    q, kp, vp, bt = _paged_inputs(2, 4, 2, 2, 16, 16, jnp.float32)
+    lengths = jnp.asarray([5, 20], jnp.int32)
+    o4 = paged_decode(q[:, None], kp, vp, lengths, bt)
+    assert o4.shape == (2, 1, 4, 16)
+    np.testing.assert_array_equal(np.asarray(o4[:, 0]),
+                                  np.asarray(_ref(q, kp, vp, lengths, bt)))
+
+
+def test_paged_block_autotuner_memoizes_and_divides():
+    from repro.kernels.flash_attention.tune import (_PAGED_CACHE,
+                                                    clear_paged_cache)
+
+    clear_paged_cache()
+    got = best_paged_block(4, 2, 2, 8, 16, 64)
+    assert got == best_paged_block(4, 2, 2, 8, 16, 64)     # memo hit
+    assert len(_PAGED_CACHE) == 1
+    assert 16 % got == 0                                   # divides the page
+    assert best_paged_block(4, 2, 2, 4, 256, 64) <= 256
+
+
+# ---------------------------------------------------------------------------
+# engine — paged end to end
+# ---------------------------------------------------------------------------
+
+def _setup():
+    cfg = get_arch("gpt2-s").reduced(num_layers=2)
+    params = M.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(4)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(5, cfg.vocab_size,
+                                        rng.integers(3, 20)).tolist(),
+                    max_new_tokens=int(rng.integers(2, 12)))
+            for i in range(8)]
+    return cfg, params, reqs
+
+
+def _clone(reqs):
+    return [Request(uid=r.uid, prompt=list(r.prompt),
+                    max_new_tokens=r.max_new_tokens, eos_id=r.eos_id)
+            for r in reqs]
+
+
+@pytest.mark.parametrize("sc", [SampleConfig(greedy=True),
+                                SampleConfig(temperature=0.7)],
+                         ids=["greedy", "temperature"])
+def test_paged_engine_matches_slab_engine(sc):
+    """The paged engine (chunked prefill + in-graph paging) must be
+    token-identical to the PR-3 slab engine on the same traffic."""
+    cfg, params, reqs = _setup()
+    rt = M.Runtime(attn_impl="naive")
+    out = {}
+    for name, kw in (("slab", dict(paged=False)),
+                     ("paged", dict(page_size=8))):
+        rs = _clone(reqs)
+        eng = ServingEngine(cfg, params, rt=rt, max_slots=2, max_len=32,
+                            sc=sc, seed=7, **kw)
+        assert eng.paged == (name == "paged")
+        for r in rs:
+            eng.submit(r)
+        eng.run()
+        assert all(r.done for r in rs)
+        out[name] = [r.output for r in rs]
+    assert out["slab"] == out["paged"]
+
+
+def test_non_page_aligned_max_len_falls_back_to_slab():
+    """chunk == page needs page_size | max_len: the auto gate (paged=None)
+    must degrade to the slab layout for odd max_len instead of raising;
+    only an explicit paged=True hard-fails."""
+    cfg, params, _ = _setup()
+    eng = ServingEngine(cfg, params, rt=M.Runtime(attn_impl="naive"),
+                        max_slots=2, max_len=21)
+    assert not eng.paged
+    r = Request(uid=0, prompt=[5, 6, 7], max_new_tokens=4)
+    eng.submit(r)
+    eng.run()
+    assert r.done and len(r.output) == 4
+    with pytest.raises(ValueError):
+        ServingEngine(cfg, params, rt=M.Runtime(attn_impl="naive"),
+                      max_slots=2, max_len=21, paged=True)
+
+
+def test_paged_engine_single_compiled_step_and_chunk():
+    """The one-jitted-call property survives paging: over a multi-wave
+    episode (mixed prompt lengths, slot churn, page recycling) the fused
+    paged step AND the chunk prefill each compile exactly ONE program."""
+    cfg, params, reqs = _setup()
+    eng = ServingEngine(cfg, params, rt=M.Runtime(attn_impl="naive"),
+                        max_slots=2, max_len=32, page_size=8)
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert all(r.done for r in reqs)
+    assert eng._jit_step_paged._cache_size() == 1
+    assert eng._jit_chunk._cache_size() == 1
+    assert eng.prefill_compiles() == 1
+
+
+def test_paged_engine_backpressure_and_drain():
+    """A pool two requests wide serving eight: admission must hold the
+    queue (never underflow the allocator), every request completes, and
+    the pool drains back to fully free."""
+    cfg, params, reqs = _setup()
+    eng = ServingEngine(cfg, params, rt=M.Runtime(attn_impl="naive"),
+                        max_slots=4, max_len=32, page_size=8,
+                        num_pages=9)                  # 8 usable pages
+    for r in reqs:
+        eng.submit(r)
+    held_back = False
+    for _ in range(10_000):
+        if not eng.queue and all(s is None for s in eng.slots):
+            break
+        eng.step()
+        # reservation accounting is exact: reserved + free == whole pool
+        assert eng._free_host >= 0
+        assert eng._free_host + sum(eng._reserved) == eng.num_pages - 1
+        # actual allocation never exceeds the reservations
+        assert eng.pages_in_use() <= sum(eng._reserved)
+        if eng.queue and any(s is None for s in eng.slots):
+            held_back = True      # a free slot idled for lack of pages
+    assert all(r.done for r in reqs)
+    assert held_back              # backpressure actually engaged
+    assert eng.pages_in_use() == 0
+    assert eng._free_host == eng.num_pages - 1
+
+
+def test_paged_engine_oversubscribed_pool_beats_slab_slots():
+    """The point of paging: with the SAME KV HBM, a paged pool admits more
+    concurrent sequences than worst-case slab slots.  8 usable pages of 8
+    tokens = 64 cache tokens = 2 slab slots of max_len 32; short requests
+    (2 pages each) run 4-wide on the paged engine."""
+    cfg, params, _ = _setup()
+    rng = np.random.default_rng(11)
+    reqs = [Request(uid=i, prompt=rng.integers(5, 50, 6).tolist(),
+                    max_new_tokens=8)                 # worst = 2 pages
+            for i in range(8)]
+    eng = ServingEngine(cfg, params, rt=M.Runtime(attn_impl="naive"),
+                        max_slots=4, max_len=16, page_size=8,
+                        num_pages=9)
+    for r in reqs:
+        eng.submit(r)
+    max_live = 0
+    for _ in range(10_000):
+        if not eng.queue and all(s is None for s in eng.slots):
+            break
+        eng.step()
+        max_live = max(max_live, sum(s is not None for s in eng.slots))
+    assert all(r.done for r in reqs)
+    assert max_live == 4          # 2x the slab's 2 slots at equal HBM

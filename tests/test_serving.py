@@ -2,7 +2,11 @@
 generation per request, under mixed admission order and slot reuse; the
 fused in-graph step must match the naive per-token loop; outputs must be
 a pure function of the request (arrival order / occupancy independent);
-prefill compiles must stay within the power-of-two bucket bound."""
+prefill compiles must stay within the power-of-two bucket bound;
+``bucket_len`` must stay a power of two (and >= the prompt) for
+non-power-of-two ``max_len``.  The default engine here is the PAGED one
+(auto-gated), so every end-to-end test doubles as paged coverage;
+``tests/test_paged_kv.py`` holds the paged-specific properties."""
 import math
 
 import jax
@@ -13,7 +17,7 @@ import pytest
 from repro.configs import get_arch
 from repro import models as M
 from repro.models.generate import SampleConfig, generate
-from repro.serving import Request, ServingEngine
+from repro.serving import Request, ServingEngine, bucket_len
 
 
 def test_engine_matches_independent_generation(key):
@@ -148,6 +152,77 @@ def test_bucketed_prefill_matches_exact_prefill():
                           max_new_tokens=5, sc=sc)
         np.testing.assert_array_equal(np.asarray(req.output),
                                       np.asarray(ref[0]))
+
+
+def test_bucket_len_non_power_of_two_max_len():
+    """Regression: for non-power-of-two max_len the cap must round DOWN
+    to a power of two — the old ``min(b, max_len)`` leaked max_len itself
+    as a "bucket" (unbounded compile variants) and could return a bucket
+    SHORTER than the prompt."""
+    assert bucket_len(5, 48) == 8
+    assert bucket_len(20, 48) == 32          # not 48
+    assert bucket_len(32, 48) == 32
+    assert bucket_len(3, 64) == 8            # floor unchanged
+    assert bucket_len(33, 64) == 64          # power-of-two cap unchanged
+    for n in (33, 40, 47):                   # gap prompts: cap < n < max_len
+        with pytest.raises(AssertionError):
+            bucket_len(n, 48)
+
+
+def test_gap_length_prompts_served_exactly():
+    """Prompts longer than the largest power-of-two bucket but shorter
+    than a non-power-of-two max_len must be served (exact-length prefill),
+    on both the bucketed and unbucketed slab paths."""
+    cfg, params, _ = _shared_setup()
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(5, cfg.vocab_size, 40).tolist()     # 32 < 40 < 48
+    sc = SampleConfig(greedy=True)
+    rt = M.Runtime(attn_impl="naive")
+    ref, _ = generate(cfg, params, jnp.asarray(prompt)[None], rt=rt,
+                      max_new_tokens=4, sc=sc)
+    for buckets in (True, False):
+        eng = ServingEngine(cfg, params, rt=rt, max_slots=1, max_len=48,
+                            sc=sc, paged=False, prefill_buckets=buckets)
+        req = Request(uid=0, prompt=prompt, max_new_tokens=4)
+        eng.submit(req)
+        eng.run()
+        assert req.done
+        np.testing.assert_array_equal(np.asarray(req.output),
+                                      np.asarray(ref[0]))
+
+
+@pytest.mark.parametrize("sc", [SampleConfig(greedy=True),
+                                SampleConfig(temperature=0.7)],
+                         ids=["greedy", "temperature"])
+def test_paged_outputs_independent_of_page_layout(sc):
+    """Satellite regression: the fold_in RNG contract must survive paging.
+    The same request served on a FRESH pool vs after page-fragmenting
+    churn (different physical pages, different slot, different free-list
+    order) must produce identical tokens — same uid + token_idx => same
+    draw, regardless of page layout."""
+    cfg, params, prompts = _shared_setup()
+    rt = M.Runtime(attn_impl="naive")
+    probe = Request(uid=99, prompt=prompts[0], max_new_tokens=6)
+
+    fresh = ServingEngine(cfg, params, rt=rt, max_slots=2, max_len=32,
+                          sc=sc, seed=7, page_size=8)
+    assert fresh.paged
+    fresh.submit(Request(uid=99, prompt=prompts[0], max_new_tokens=6))
+    r_fresh = fresh.queue[0]
+    fresh.run()
+
+    churned = ServingEngine(cfg, params, rt=rt, max_slots=2, max_len=32,
+                            sc=sc, seed=7, page_size=8)
+    # fragment the pool: interleaved lifetimes scramble the free list
+    for i, n in enumerate((3, 9, 2, 7, 4)):
+        churned.submit(Request(uid=i, prompt=prompts[i % len(prompts)],
+                               max_new_tokens=n))
+    churned.run()
+    assert churned.pages_in_use() == 0
+    churned.submit(probe)
+    churned.run()
+    assert probe.done and r_fresh.done
+    assert probe.output == r_fresh.output
 
 
 def test_fused_engine_with_flash_decode_runtime(key):
