@@ -1,0 +1,179 @@
+"""Failure-recovery cost benchmark: what a fault costs, deterministically.
+
+Two phases, both fully deterministic so every gated row is noise-free:
+
+* serving chaos — the same fixed request set is served twice on the paged
+  engine: once fault-free, once with deadline preemptions armed on a
+  subset of requests plus mid-decode slot crashes injected at fixed step
+  numbers (``repro.faults.ServingFaults``).  Every request still
+  completes and — because preempted requests recompute their prefix and
+  resume the per-(uid, token-index) RNG — delivers the SAME tokens as the
+  clean run (asserted).  Rows record the recovery cost in COUNT units:
+  recomputed prefix tokens per delivered token, and total engine steps
+  chaos vs clean.  Both gated ratios are exact integers over integers.
+
+* training rollback — a short wireless episode takes one poisoned round
+  (``repro.faults.TrainingFaults``): the divergence sentinel rolls the
+  round back bit-exactly and the row records rollbacks seen vs rounds
+  run, plus the HARQ retransmission inflation of the traced delay.
+
+Rows land in ``BENCH_faults.json`` (``benchmarks.run`` snapshots
+``faults/``); ``check_regression.py`` gates the recompute-cost and
+step-overhead ratios against the committed baseline.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+# fixed chaos schedule: (engine step -> slot to crash).  Chosen mid-decode
+# so the victims have delivered tokens worth recomputing.
+CRASH_AT = {6: 0, 14: 1}
+DEADLINE_STEPS = 10          # armed on every 3rd request
+N_REQS = 8
+
+
+def _setup():
+    from repro.configs import get_arch
+    from repro import models as M
+
+    cfg = get_arch("gpt2-s").reduced(num_layers=2)
+    params = M.init_params(cfg, jax.random.key(0))
+    return cfg, params
+
+
+def _engine(cfg, params, *, preempt=False):
+    from repro.models.generate import SampleConfig
+    from repro.serving import ServingEngine
+
+    return ServingEngine(cfg, params, max_slots=4, max_len=128,
+                         sc=SampleConfig(greedy=True), paged=True,
+                         page_size=16, seed=11, preempt=preempt)
+
+
+def _requests(cfg, *, deadlines):
+    from repro.serving import Request
+
+    rng = np.random.default_rng(5)
+    reqs = []
+    for i in range(N_REQS):
+        prompt = rng.integers(5, cfg.vocab_size, 16 + (i % 3) * 4).tolist()
+        dl = DEADLINE_STEPS if (deadlines and i % 3 == 0) else None
+        reqs.append(Request(uid=i, prompt=prompt, max_new_tokens=12 + i % 5,
+                            deadline_steps=dl))
+    return reqs
+
+
+def _drain(eng, reqs, crash_at=None, max_steps=600):
+    from repro.faults import ServingFaults
+
+    sf = ServingFaults(eng) if crash_at else None
+    for r in reqs:
+        eng.submit(r)
+    t0, steps = time.time(), 0
+    while steps < max_steps:
+        if not eng.queue and all(s is None for s in eng.slots):
+            break
+        if sf is not None and steps in crash_at:
+            s = crash_at[steps]
+            if eng.slots[s] is not None:
+                sf.crash_slot(s)
+        eng.step()
+        steps += 1
+    wall = time.time() - t0
+    assert all(r.done for r in reqs), "chaos trace did not drain"
+    assert eng.check_consistency()
+    return steps, wall
+
+
+def _serving_phase(cfg, params, emit):
+    clean_reqs = _requests(cfg, deadlines=False)
+    eng = _engine(cfg, params)
+    steps_clean, wall_clean = _drain(eng, clean_reqs)
+
+    chaos_reqs = _requests(cfg, deadlines=True)
+    eng = _engine(cfg, params)
+    steps_chaos, wall_chaos = _drain(eng, chaos_reqs, crash_at=CRASH_AT)
+
+    # recovery correctness: every request survived its faults and
+    # delivered the exact clean-run tokens
+    for a, b in zip(clean_reqs, chaos_reqs):
+        assert b.error is None and b.output == a.output, \
+            f"uid {a.uid}: recovered output diverged"
+    delivered = sum(len(r.output) for r in chaos_reqs)
+    preempted = sum(r.preempted for r in chaos_reqs)
+
+    emit("faults/tokens_delivered", delivered,
+         f"unit=tokens;requests={N_REQS};bit_equal_to_clean=true")
+    emit("faults/tokens_recomputed", eng.stats["recomputed_tokens"],
+         f"unit=tokens;per_delivered="
+         f"{eng.stats['recomputed_tokens'] / max(delivered, 1):.2f}")
+    emit("faults/steps_clean", steps_clean,
+         f"unit=steps;us_step={wall_clean / max(steps_clean, 1) * 1e6:.0f}")
+    emit("faults/steps_chaos", steps_chaos,
+         f"unit=steps;overhead="
+         f"{steps_chaos / max(steps_clean, 1) - 1.0:+.1%};"
+         f"us_step={wall_chaos / max(steps_chaos, 1) * 1e6:.0f}")
+    emit("faults/preemptions", eng.stats["preemptions"],
+         f"unit=count;victims={preempted};"
+         f"deadline={eng.stats['deadline_preemptions']};"
+         f"crash={eng.stats['preemptions'] - eng.stats['deadline_preemptions']}")
+
+
+def _training_phase(emit):
+    import dataclasses
+
+    from repro import models as M
+    from repro.configs import DEFAULT_SYSTEM, get_arch
+    from repro.core import (Problem, SflLLM, bcd_minimize_delay_per_client,
+                            sample_clients)
+    from repro.faults import TrainingFaults
+    from repro.launch.engine import SflRound, Trainer, WirelessDynamics
+    from repro.optim import adamw
+
+    K, B, S, I = 3, 2, 16, 2
+    sys_cfg = dataclasses.replace(
+        DEFAULT_SYSTEM, num_clients=K, total_bandwidth_hz=50e6,
+        f_server_hz=0.4e9, f_client_hz_range=(0.2e9, 5.0e9))
+    envs = tuple(sample_clients(sys_cfg, 3))
+    prob = Problem(cfg=get_arch("gpt2-s").reduced(num_layers=2),
+                   sys_cfg=sys_cfg, envs=envs, seq_len=S, batch=B,
+                   local_steps=I, rank_candidates=(1, 2, 4))
+    alloc, _ = bcd_minimize_delay_per_client(prob)
+    params = M.init_params(prob.cfg, jax.random.key(0))
+    sfl = SflLLM.from_allocation(prob, alloc, params, optimizer=adamw(1e-3),
+                                 dynamic=True)
+    wd = WirelessDynamics(prob, alloc, sfl, fade_std_db=2.0, rng=0,
+                          deadline_s=1e9, outage_snr_db=0.0, max_harq=3)
+    tf = TrainingFaults(wd)
+    tr = Trainer(SflRound(sfl, [1.0] * K), local_steps=I, dynamics=wd)
+    st = sfl.init_state(sfl.init_lora(jax.random.key(7)))
+    tokens = np.random.default_rng(0).integers(
+        0, prob.cfg.vocab_size, (K, B, S)).astype(np.int32)
+    data = iter(lambda: {"tokens": tokens, "labels": tokens.copy()}, None)
+
+    rounds = 3
+    st, _ = tr.fit(st, data, global_rounds=rounds - 1)
+    tf.poison_round()                        # next round trips the sentinel
+    t0 = time.time()
+    _, hist = tr.fit(st, data, global_rounds=1)
+    wall = time.time() - t0
+    dyn, _ = wd.round_dynamics()
+    retx = float(np.mean(np.asarray(dyn.retx_main)))
+
+    emit("faults/rollbacks", len(hist.rolled_back_rounds),
+         f"unit=count;rounds={rounds};round_wall_us={wall * 1e6:.0f}")
+    emit("faults/harq_retx_mean", retx,
+         f"unit=expected_transmissions;max_harq=3;snr_th_db=0.0")
+
+
+def main(emit):
+    cfg, params = _setup()
+    _serving_phase(cfg, params, emit)
+    _training_phase(emit)
+
+
+if __name__ == "__main__":
+    main(lambda n, t, d: print(f"{n},{t},{d}"))

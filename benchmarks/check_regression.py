@@ -82,6 +82,25 @@ GATES = [
         "dynamic/round_wall_masked",
         "dynamic/round_wall_legacy",
     ),
+    (
+        # prefix tokens recomputed per token delivered under the fixed
+        # chaos schedule: both rows are deterministic counts, so the
+        # ratio is noise-free — it catches recovery regressions that
+        # recompute more than a preemption strictly requires
+        "BENCH_faults.json",
+        "fault_recompute_cost",
+        "faults/tokens_recomputed",
+        "faults/tokens_delivered",
+    ),
+    (
+        # engine steps to drain the chaos trace vs the fault-free trace
+        # (deterministic step counts): preemption must not stretch the
+        # schedule beyond the recompute work itself
+        "BENCH_faults.json",
+        "fault_step_overhead",
+        "faults/steps_chaos",
+        "faults/steps_clean",
+    ),
 ]
 
 
@@ -92,6 +111,7 @@ SUITE_FOR_FILE = {
     "BENCH_traffic.json": "traffic",
     "BENCH_resource.json": "resource",
     "BENCH_dynamic.json": "dynamic",
+    "BENCH_faults.json": "faults",
 }
 
 
@@ -168,10 +188,19 @@ def main() -> int:
             f"fresh={fresh:.3f} baseline={base:.3f} ({slowdown:+.1%})"
         )
         if slowdown > args.threshold:
-            failures.append(gate_id)
+            failures.append(
+                f"  [{gate_id}] suite={SUITE_FOR_FILE[fname]} ({fname}): "
+                f"{num}/{den} regressed {slowdown:+.1%} past the "
+                f"{args.threshold:.0%} threshold "
+                f"(fresh={fresh:.3f} vs baseline={base:.3f})"
+            )
 
     if failures:
-        print(f"\nbench regression gate FAILED: {', '.join(failures)}", file=sys.stderr)
+        print(
+            f"\nbench regression gate FAILED ({len(failures)} gate(s)):\n"
+            + "\n".join(failures),
+            file=sys.stderr,
+        )
         return 1
     print("\nbench regression gate passed")
     return 0

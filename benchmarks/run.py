@@ -11,6 +11,7 @@
   roofline bench_roofline    per (arch x shape x mesh) roofline rows
   resource bench_resource    BCD wall time + homogeneous-vs-hetero delay
   dynamic bench_dynamic      dynamic-round overhead + adaptive re-allocation
+  faults  bench_faults       failure-recovery cost: preemption recompute + rollback
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only table4,fig5 ...]
 """
@@ -23,8 +24,8 @@ import time
 import traceback
 
 from . import (bench_complexity, bench_convergence, bench_dynamic,
-               bench_kernels, bench_latency, bench_ppl, bench_resource,
-               bench_roofline, bench_serving, bench_traffic)
+               bench_faults, bench_kernels, bench_latency, bench_ppl,
+               bench_resource, bench_roofline, bench_serving, bench_traffic)
 
 SUITES = {
     "table3": bench_complexity.main,
@@ -37,6 +38,7 @@ SUITES = {
     "roofline": bench_roofline.main,
     "resource": bench_resource.main,
     "dynamic": bench_dynamic.main,
+    "faults": bench_faults.main,
 }
 
 # perf-trajectory snapshots: these row prefixes land in JSON files CI
@@ -49,6 +51,7 @@ SNAPSHOTS = {
     "BENCH_traffic.json": ("traffic/",),
     "BENCH_resource.json": ("resource/",),
     "BENCH_dynamic.json": ("dynamic/",),
+    "BENCH_faults.json": ("faults/",),
 }
 
 

@@ -1,3 +1,5 @@
-from .io import restore_pytree, save_pytree
+from .io import (restore_episode, restore_pytree, save_episode,
+                 save_pytree)
 
-__all__ = ["restore_pytree", "save_pytree"]
+__all__ = ["restore_episode", "restore_pytree", "save_episode",
+           "save_pytree"]

@@ -3,11 +3,19 @@
 Arrays are stored as (dtype, shape, raw bytes); tree structure via
 path-keyed flat dict, so checkpoints are robust to container-type changes
 (dict vs dataclass) as long as field names match.
+
+``save_episode``/``restore_episode`` extend the same format with a JSON
+metadata sidecar carried *inside* the file: training-episode resume needs
+host state next to the device state — the round cursor, the fading /
+outage RNG cursors (numpy PCG64 state is a 128-bit int, which JSON
+handles natively and msgpack does not), the current allocation, loss
+history.  One file, one atomic rename, resumable bit-for-bit.
 """
 from __future__ import annotations
 
+import json
 import os
-from typing import Any
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +37,7 @@ def _key_str(path) -> str:
     return "/".join(parts)
 
 
-def save_pytree(path: str, tree: Any) -> None:
+def _flatten(tree: Any) -> dict:
     flat = {}
     for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         arr = np.asarray(leaf)
@@ -38,16 +46,10 @@ def save_pytree(path: str, tree: Any) -> None:
             "shape": list(arr.shape),
             "data": arr.tobytes(),
         }
-    tmp = path + ".tmp"
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    with open(tmp, "wb") as f:
-        f.write(msgpack.packb(flat, use_bin_type=True))
-    os.replace(tmp, path)
+    return flat
 
 
-def restore_pytree(path: str, template: Any) -> Any:
-    with open(path, "rb") as f:
-        flat = msgpack.unpackb(f.read(), raw=False)
+def _unflatten(flat: dict, template: Any) -> Any:
     leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(template)
     new_leaves = []
     for kp, leaf in leaves_paths:
@@ -58,3 +60,44 @@ def restore_pytree(path: str, template: Any) -> Any:
         arr = np.frombuffer(rec["data"], dtype=rec["dtype"]).reshape(rec["shape"])
         new_leaves.append(jnp.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def _atomic_write(path: str, payload: bytes) -> None:
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(payload)
+    os.replace(tmp, path)
+
+
+def save_pytree(path: str, tree: Any) -> None:
+    _atomic_write(path, msgpack.packb(_flatten(tree), use_bin_type=True))
+
+
+def restore_pytree(path: str, template: Any) -> Any:
+    with open(path, "rb") as f:
+        flat = msgpack.unpackb(f.read(), raw=False)
+    if "__tree__" in flat:                      # episode file: device part
+        flat = flat["__tree__"]
+    return _unflatten(flat, template)
+
+
+def save_episode(path: str, tree: Any, meta: dict) -> None:
+    """One-file episode checkpoint: device state (same flat-dict format as
+    :func:`save_pytree`) plus a JSON metadata blob — round cursor, RNG
+    cursors (arbitrary-precision ints survive JSON), history.  ``meta``
+    must be JSON-serializable.  Atomic tmp+rename, like save_pytree."""
+    payload = {"__tree__": _flatten(tree),
+               "__meta__": json.dumps(meta)}
+    _atomic_write(path, msgpack.packb(payload, use_bin_type=True))
+
+
+def restore_episode(path: str, template: Any) -> Tuple[Any, dict]:
+    """Inverse of :func:`save_episode`: returns (tree, meta)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    if "__tree__" not in payload or "__meta__" not in payload:
+        raise KeyError(f"{path!r} is not an episode checkpoint "
+                       "(save_episode writes __tree__ + __meta__)")
+    return (_unflatten(payload["__tree__"], template),
+            json.loads(payload["__meta__"]))

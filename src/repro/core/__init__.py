@@ -1,8 +1,11 @@
 """The paper's primary contribution: SflLLM — split federated LoRA
 fine-tuning (Algorithm 1) + joint resource allocation (Algorithms 2-3)."""
 from .aggregation import (broadcast_het, broadcast_stacked, fedavg,
-                          fedavg_het, fedavg_partial, fedavg_stacked)
-from .channel import ClientEnv, FadingProcess, fade_clients, sample_clients
+                          fedavg_het, fedavg_partial, fedavg_stacked,
+                          tree_all_finite)
+from .channel import (ClientEnv, FadingProcess, expected_transmissions,
+                      fade_clients, outage_probability, residual_outage,
+                      sample_clients)
 from .convergence import ConvergenceModel, DEFAULT_E, fit_convergence_model
 from .latency import (client_round_seconds, client_round_seconds_host,
                       het_local_round_latency, het_total_latency,
@@ -25,8 +28,10 @@ from .workload import layer_workloads, lm_head_flops
 
 __all__ = [
     "fedavg", "fedavg_het", "fedavg_partial", "fedavg_stacked",
-    "broadcast_het", "broadcast_stacked", "ClientEnv", "FadingProcess",
-    "fade_clients", "sample_clients", "ConvergenceModel", "DEFAULT_E",
+    "broadcast_het", "broadcast_stacked", "tree_all_finite", "ClientEnv",
+    "FadingProcess", "expected_transmissions", "outage_probability",
+    "residual_outage", "fade_clients", "sample_clients",
+    "ConvergenceModel", "DEFAULT_E",
     "fit_convergence_model", "latency_report", "latency_report_het",
     "local_round_latency", "het_local_round_latency", "het_total_latency",
     "split_workload", "total_latency", "client_round_seconds",

@@ -92,6 +92,21 @@ def fedavg_partial(stacked: Any, weights: jax.Array, participation,
     return fedavg_het(stacked, w, masks)
 
 
+def tree_all_finite(tree: Any) -> jax.Array:
+    """Scalar bool: every element of every inexact (float/complex) leaf is
+    finite.  Integer/bool leaves (step counters, masks) are skipped — they
+    cannot diverge.  This is the in-graph divergence sentinel the round
+    engine gates its state commit on (``SflLLM._train_round_part``): a
+    NaN/inf anywhere in the aggregated update rolls the round back to the
+    last-good state instead of poisoning every client."""
+    flags = [jnp.all(jnp.isfinite(leaf))
+             for leaf in jax.tree.leaves(tree)
+             if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.inexact)]
+    if not flags:
+        return jnp.bool_(True)
+    return jnp.stack(flags).all()
+
+
 def broadcast_het(global_tree: Any, num_clients: int, masks: Any) -> Any:
     """Broadcast + per-client truncation: every client receives the global
     adapter with its dead slots (rank > r_k, repeats >= rep_k) re-zeroed,

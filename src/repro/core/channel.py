@@ -110,6 +110,59 @@ class FadingProcess:
                        + math.sqrt(1.0 - self.rho ** 2) * n)
         return _apply_shadow_db(self.base, self._x)
 
+    # -- checkpoint/resume cursor (launch.engine.WirelessDynamics) ---------
+    def get_state(self) -> dict:
+        """JSON-able process cursor: generator state (PCG64 carries 128-bit
+        ints — JSON handles them, msgpack does not) + the AR(1) dB state.
+        Restoring it makes the resumed draw sequence bit-identical."""
+        return {
+            "rng": self.rng.bit_generator.state,
+            "x": None if self._x is None else np.asarray(self._x).tolist(),
+        }
+
+    def set_state(self, state: dict) -> None:
+        self.rng.bit_generator.state = state["rng"]
+        self._x = (None if state["x"] is None
+                   else np.asarray(state["x"], float))
+
+
+# ---------------------------------------------------------------------------
+# link outages + HARQ retransmissions (beyond-paper robustness model)
+# ---------------------------------------------------------------------------
+
+def outage_probability(snr_avg, snr_th) -> np.ndarray:
+    """Per-transmission outage probability under Rayleigh fast fading
+    within a round: the instantaneous SNR is exponentially distributed
+    around the block average ``snr_avg`` (the AR(1) shadowed gain), so
+
+        p_out = P[snr < snr_th] = 1 - exp(-snr_th / snr_avg).
+
+    Both arguments are linear (not dB); broadcasts elementwise."""
+    snr_avg = np.maximum(np.asarray(snr_avg, float), 1e-30)
+    return 1.0 - np.exp(-np.asarray(snr_th, float) / snr_avg)
+
+
+def expected_transmissions(p_out, max_tx: int) -> np.ndarray:
+    """Expected number of HARQ transmission attempts under truncated
+    retransmission: each attempt fails i.i.d. with ``p_out`` and the link
+    gives up after ``max_tx`` tries, so the attempt count is a truncated
+    geometric with mean (1 - p^m) / (1 - p) — exactly 1.0 at p=0 (the
+    retransmission multiplier is then bit-exact identity on the delay
+    model).  The residual failure probability p^m is a *hard outage*
+    (the round's payload never arrives; see ``residual_outage``)."""
+    m = int(max_tx)
+    if m < 1:
+        raise ValueError(f"max_tx must be >= 1, got {max_tx}")
+    # clip strictly below 1 so the p -> 1 limit evaluates to m (every
+    # attempt is made and fails), not 0/0
+    p = np.clip(np.asarray(p_out, float), 0.0, 1.0 - 1e-12)
+    return (1.0 - p ** m) / (1.0 - p)
+
+
+def residual_outage(p_out, max_tx: int) -> np.ndarray:
+    """Probability that all ``max_tx`` HARQ attempts fail: p^m."""
+    return np.clip(np.asarray(p_out, float), 0.0, 1.0) ** int(max_tx)
+
 
 def subchannel_bandwidths(sys_cfg: SystemConfig, which: str) -> np.ndarray:
     """Equal split of the total bandwidth (Table II)."""

@@ -98,10 +98,10 @@ def workload_tables(cfg: ArchConfig, seq_len: int) -> Dict[str, np.ndarray]:
 
 def client_round_seconds(tables: Dict[str, np.ndarray], ell, rank, f_hz,
                          kappa, rates_main, rates_fed, batch: int,
-                         local_steps: int):
+                         local_steps: int, retx_main=None, retx_fed=None):
     """Traced (jnp) client share of one global round, per client:
 
-        T_k = I * (T_k^F + T_k^s + T_k^B) + T_k^f            (eqs. 8/10/13/15)
+        T_k = I * (T_k^F + E[m] T_k^s + T_k^B) + E[m] T_k^f  (eqs. 8/10/13/15)
 
     i.e. the part of eq. (16)-(17) attributable to client k alone (the
     pooled server FP/BP is common to the fleet).  ``ell``/``rank`` may be
@@ -109,7 +109,14 @@ def client_round_seconds(tables: Dict[str, np.ndarray], ell, rank, f_hz,
     retrace — as may the channel state (``f_hz``, ``rates_*``).  Matches
     the host-side ``t_client_fp``/``t_act_upload``/``t_client_bp``/
     ``t_lora_upload`` exactly (BP = 2 x FP).
-    """
+
+    ``retx_main``/``retx_fed`` (optional (K,) arrays): expected HARQ
+    transmission counts per uplink (``core.channel.expected_transmissions``)
+    — each upload term is paid E[m] >= 1 times under link outages.  ``None``
+    skips the multiply entirely (the static graph is untouched); an
+    explicit all-ones array multiplies by 1.0, which is bit-exact, so an
+    outage-free round of an outage-aware episode reproduces the plain
+    deadline trajectory."""
     import jax.numpy as jnp
 
     ell = jnp.asarray(ell, jnp.int32)
@@ -120,14 +127,19 @@ def client_round_seconds(tables: Dict[str, np.ndarray], ell, rank, f_hz,
     dtheta = rank * jnp.asarray(tables["dxi_cum"], jnp.float32)[ell]
     t_fp = batch * kappa * (phi + dphi) / f_hz
     t_up = batch * gamma * 8.0 / jnp.maximum(rates_main, 1e-9)
+    if retx_main is not None:
+        t_up = t_up * retx_main
     t_bp = 2.0 * t_fp
     t_fed = dtheta * 8.0 / jnp.maximum(rates_fed, 1e-9)
+    if retx_fed is not None:
+        t_fed = t_fed * retx_fed
     return local_steps * (t_fp + t_up + t_bp) + t_fed
 
 
 def client_round_seconds_host(tables: Dict[str, np.ndarray], ell_k, rank_k,
                               f_hz, kappa, rates_main, rates_fed,
-                              batch: int, local_steps: int) -> np.ndarray:
+                              batch: int, local_steps: int,
+                              retx_main=None, retx_fed=None) -> np.ndarray:
     """Numpy twin of :func:`client_round_seconds` — same tables, same
     formula, and the SAME float32 arithmetic (term order included), so a
     host-side dropout prediction agrees bit for bit with the traced
@@ -144,9 +156,13 @@ def client_round_seconds_host(tables: Dict[str, np.ndarray], ell_k, rank_k,
         / np.asarray(f_hz, f32)
     t_up = f32(batch) * gamma * f32(8.0) / np.maximum(
         np.asarray(rates_main, f32), f32(1e-9))
+    if retx_main is not None:
+        t_up = t_up * np.asarray(retx_main, f32)
     t_bp = f32(2.0) * t_fp
     t_fed = dtheta * f32(8.0) / np.maximum(
         np.asarray(rates_fed, f32), f32(1e-9))
+    if retx_fed is not None:
+        t_fed = t_fed * np.asarray(retx_fed, f32)
     return f32(local_steps) * (t_fp + t_up + t_bp) + t_fed
 
 

@@ -68,7 +68,7 @@ from ..models.layers import apply_norm, embed, unembed
 from ..models.model import IGNORE_ID
 from ..models.stack import Runtime, default_train_runtime
 from ..optim import Optimizer, apply_updates
-from .aggregation import broadcast_het, fedavg_partial
+from .aggregation import broadcast_het, fedavg_partial, tree_all_finite
 from .latency import client_round_seconds, workload_tables
 from .lora import client_slot_masks
 from .split import layers_to_reps
@@ -141,6 +141,26 @@ class RoundDynamics:
       rep_hi           (K,) int32 split boundaries in repeat units;
       slot_masks       pytree of per-client slot occupancy masks;
       scales           (K,) adapter scales alpha / r_k.
+
+    Outage + HARQ retransmissions (``core.channel`` outage model):
+      retx_main / retx_fed  (K,) expected transmission counts E[m] >= 1 per
+                            uplink — they inflate the traced delay twin's
+                            upload terms, so a client whose retransmissions
+                            push T_k past the deadline drops for the round
+                            (composition with deadline dropout).  All-ones
+                            multiplies by 1.0 exactly (bit-identical to the
+                            outage-free trajectory).  Hard outages (all
+                            HARQ attempts failed) are expressed through
+                            ``participation``, which now COMPOSES with the
+                            deadline mask (product) instead of replacing it.
+
+    Fault injection (``faults.inject`` — chaos tests only):
+      poison           scalar 0/1; 1 overwrites the post-aggregation server
+                       adapter with NaN, deterministically tripping the
+                       divergence-rollback sentinel.  0 selects the clean
+                       values leaf-for-leaf (``jnp.where`` — bit-exact), so
+                       an unpoisoned round of a chaos episode reproduces
+                       the fault-free trajectory.
     """
 
     participation: Optional[jax.Array] = None
@@ -154,6 +174,9 @@ class RoundDynamics:
     rep_hi: Optional[jax.Array] = None
     slot_masks: Optional[Any] = None
     scales: Optional[jax.Array] = None
+    retx_main: Optional[jax.Array] = None
+    retx_fed: Optional[jax.Array] = None
+    poison: Optional[jax.Array] = None
 
 
 class SflLLM:
@@ -276,7 +299,7 @@ class SflLLM:
         self._jit_round_part = jax.jit(self._train_round_part,
                                        donate_argnums=(0,) if donate else ())
         self._jit_mask = jax.jit(self._dropout_mask,
-                                 static_argnums=(7, 8, 9))
+                                 static_argnums=(9, 10, 11))
 
     # ------------------------------------------------------------------
     def _build_client_masks(self, ranks, reps, force: bool = False):
@@ -615,46 +638,79 @@ class SflLLM:
         return self._aggregate(state, weights), metrics
 
     def _train_round_part(self, state: SflState, round_batches, weights,
-                          part, cfg_dyn):
+                          part, cfg_dyn, poison=None):
         """The one compiled global round every caller runs: scan + in-graph
         FedAvg with the (K,) participation mask — and optionally a whole
         re-allocated per-client configuration — as traced inputs.  Static
         rounds pass an all-ones mask; faded / dropped / re-allocated rounds
         pass this round's values.  Same structure => ONE trace for the
         entire episode, and full participation is bit-identical to a static
-        round because it IS the same executable."""
+        round because it IS the same executable.
+
+        Divergence rollback: after the scan + aggregation the whole new
+        state is checked all-finite in-graph (``tree_all_finite``); a
+        NaN/inf anywhere (an exploded update, or an injected ``poison``)
+        rolls the ENTIRE round back — every leaf, optimizer moments and
+        step counter included, via ``jnp.where`` per leaf — so a diverged
+        round is bit-identical to the last-good state (the all-dropped
+        identity, reached through a different trigger).  A finite round
+        commits through ``where(True, new, old)``, which is bit-exact, so
+        the sentinel never perturbs a healthy trajectory."""
         self._round_traces += 1       # trace-time only: retrace telemetry
         masks = (cfg_dyn["slot_masks"]
                  if cfg_dyn is not None
                  and cfg_dyn.get("slot_masks") is not None
                  else self._client_masks)
-        state, metrics = jax.lax.scan(
+        new, metrics = jax.lax.scan(
             lambda st, b: self._step_impl(st, b, cfg_dyn, part),
             state, round_batches)
-        state = self._aggregate_impl(state, weights, part, masks)
-        return state, dict(metrics, participation=part)
+        new = self._aggregate_impl(new, weights, part, masks)
+        if poison is not None:
+            # deterministic fault injection: poison > 0 NaNs the aggregated
+            # server adapter; poison == 0 keeps the clean values bit-exactly
+            new = SflState(
+                lora_client=new.lora_client,
+                lora_server=jax.tree.map(
+                    lambda v: jnp.where(poison > 0, jnp.full_like(v, jnp.nan),
+                                        v), new.lora_server),
+                opt_client=new.opt_client, opt_server=new.opt_server,
+                step=new.step)
+        finite = tree_all_finite(new)
+        state = jax.tree.map(lambda n, o: jnp.where(finite, n, o),
+                             new, state)
+        return state, dict(metrics, participation=part,
+                           rolled_back=~finite)
 
     def _dropout_mask(self, rates_main, rates_fed, f_hz, kappa, ell, rank,
-                      deadline_s, b: int, local_steps: int, seq_len: int):
+                      deadline_s, retx_main, retx_fed,
+                      b: int, local_steps: int, seq_len: int):
         """Deadline-aware straggler dropout, in-graph: the traced twin of
         the Section V per-client delay (``core.latency.client_round_seconds``)
-        against the round deadline.  Jitted separately from the main round
-        (static_argnums on the shapes) so deadline rounds feed the SAME
-        main executable as static rounds — the mask is data, not structure."""
+        against the round deadline — with the upload terms inflated by the
+        expected HARQ transmission counts when an outage model is active.
+        Jitted separately from the main round (static_argnums on the
+        shapes) so deadline rounds feed the SAME main executable as static
+        rounds — the mask is data, not structure."""
         self._mask_traces += 1
         tables = workload_tables(self.cfg, seq_len)
         t_k = client_round_seconds(tables, ell, rank, f_hz, kappa,
-                                   rates_main, rates_fed, b, local_steps)
+                                   rates_main, rates_fed, b, local_steps,
+                                   retx_main=retx_main, retx_fed=retx_fed)
         return (t_k <= deadline_s).astype(jnp.float32)
 
     def _participation_for(self, dyn: RoundDynamics, batches):
-        """Resolve the round's (K,) mask: explicit wins, else deadline
-        dropout from the traced channel state, else all ones."""
+        """Resolve the round's (K,) mask.  An explicit ``participation``
+        and a ``deadline_s`` COMPOSE (product of the two masks — a client
+        must both survive the deadline and not be in hard outage); either
+        alone is used as-is, neither means all ones.  Multiplying by an
+        all-ones mask is exact, so composing a never-outaged explicit mask
+        with the deadline mask reproduces the deadline-only trajectory."""
         K = self.tc.num_clients
-        if dyn.participation is not None:
-            return jnp.asarray(dyn.participation, jnp.float32)
+        explicit = (None if dyn.participation is None
+                    else jnp.asarray(dyn.participation, jnp.float32))
         if dyn.deadline_s is None:
-            return jnp.ones(K, jnp.float32)
+            return explicit if explicit is not None \
+                else jnp.ones(K, jnp.float32)
         if (dyn.rates_main is None or dyn.rates_fed is None
                 or dyn.f_hz is None or dyn.kappa is None):
             raise ValueError("deadline dropout needs rates_main, rates_fed,"
@@ -665,9 +721,11 @@ class SflLLM:
         rank = (dyn.rank if dyn.rank is not None
                 else jnp.asarray(self.rank_k or (self.cfg.lora_rank,) * K,
                                  jnp.float32))
-        return self._jit_mask(dyn.rates_main, dyn.rates_fed, dyn.f_hz,
+        part = self._jit_mask(dyn.rates_main, dyn.rates_fed, dyn.f_hz,
                               dyn.kappa, ell, rank, dyn.deadline_s,
+                              dyn.retx_main, dyn.retx_fed,
                               int(b), int(I), int(S))
+        return part if explicit is None else part * explicit
 
     def train_round(self, state: SflState, round_batches, sample_counts,
                     dynamics: Optional[RoundDynamics] = None):
@@ -702,7 +760,8 @@ class SflLLM:
             part, cfg_dyn = jax.device_put(
                 (part, cfg_dyn),
                 round_dynamics_shardings((part, cfg_dyn), self.mesh))
-        return self._jit_round_part(state, batches, weights, part, cfg_dyn)
+        return self._jit_round_part(state, batches, weights, part, cfg_dyn,
+                                    dyn.poison)
 
     def allocation_dynamics(self, ell_k, rank_k) -> Dict[str, Any]:
         """A per-client allocation decision as RoundDynamics kwargs (``ell``

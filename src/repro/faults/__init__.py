@@ -1,0 +1,10 @@
+"""Failure-hardening toolkit: deterministic fault injection for the
+serving engine (page exhaustion, slot crashes, NaN pokes) and the
+wireless training loop (outage bursts, divergence poison).  The recovery
+machinery itself lives with the engines — ``serving.engine`` (preemptive
+eviction, requeue recompute, NaN quarantine, reservation audit) and
+``core.sfl`` / ``launch.engine`` (HARQ retransmissions, divergence
+rollback, episode kill/resume); this package only *drives* it."""
+from .inject import ServingFaults, TrainingFaults
+
+__all__ = ["ServingFaults", "TrainingFaults"]

@@ -1,0 +1,94 @@
+"""Deterministic fault injection for chaos tests and the recovery-cost
+benchmark (``benchmarks/bench_faults.py``).
+
+Every injector here flips HOST-side state that the engines already
+consume as traced data — eviction flags, NaN masks, outage probabilities,
+poison scalars — so injecting a fault never compiles a new executable and
+never perturbs an RNG stream another component owns.  Disarmed injectors
+are bit-exact no-ops: a run with a ``ServingFaults``/``TrainingFaults``
+attached but never fired reproduces the fault-free trajectory token for
+token (the chaos tests assert exactly this).
+
+Kill/resume is not an injector: killing a training episode is simply not
+calling ``fit`` further, and resuming is ``Trainer.fit(..., resume=True)``
+against the episode checkpoint — the tests drive that API directly.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+
+class ServingFaults:
+    """Fault injection for a paged :class:`repro.serving.ServingEngine`."""
+
+    def __init__(self, engine):
+        if not getattr(engine, "paged", False):
+            raise ValueError("ServingFaults drives the paged engine's "
+                             "eviction/sentinel machinery (paged=True)")
+        self.engine = engine
+        self._held = 0
+
+    # -- page exhaustion ------------------------------------------------
+    def exhaust_pages(self, hold: Optional[int] = None) -> int:
+        """Steal ``hold`` pages (default: every free page) from the host
+        admission mirror, forcing backpressure / preemption on the next
+        admission exactly as if the pool were that much smaller.  Returns
+        the number of pages held; ``release_pages`` gives them back."""
+        free = max(self.engine._free_host, 0)
+        hold = free if hold is None else min(int(hold), free)
+        self.engine._free_host -= hold
+        self._held += hold
+        return hold
+
+    def release_pages(self) -> None:
+        self.engine._free_host += self._held
+        self._held = 0
+
+    # -- slot crash / NaN poke ------------------------------------------
+    def crash_slot(self, slot: int) -> None:
+        """Kill the request in ``slot`` mid-decode: the next fused step
+        evicts it in-graph (pages freed) and the engine requeues it for
+        prefix recompute — the delivered tokens survive the crash."""
+        self.engine._evict_req[int(slot)] = True
+
+    def poke_nan(self, slot: int) -> None:
+        """Overwrite ``slot``'s next logits with NaN inside the fused
+        step, tripping the non-finite sentinel (quarantine, not garbage)."""
+        self.engine._nan_poke[int(slot)] = True
+
+    # -- accounting corruption (check_consistency test) ------------------
+    def desync_mirror(self, pages: int = 1) -> None:
+        """Corrupt the host free-page mirror by ``pages`` without any
+        matching reservation — the drift ``check_consistency`` exists to
+        catch and repair.  Unlike ``exhaust_pages`` this is NOT tracked
+        and can only be undone by the resync."""
+        self.engine._free_host -= int(pages)
+
+
+class TrainingFaults:
+    """Fault injection for a :class:`repro.launch.engine.WirelessDynamics`
+    episode.  Attaching the injector arms the poison channel (a constant
+    traced 0/1 scalar) BEFORE the first round, so the episode's traced
+    structure is fixed up front and firing a poison later cannot retrace."""
+
+    def __init__(self, dynamics):
+        self.dynamics = dynamics
+        if dynamics.poison_next is None:
+            dynamics.poison_next = False
+
+    # -- outage bursts ----------------------------------------------------
+    def outage_burst(self, p: float = 1.0) -> None:
+        """Force every link's per-transmission outage probability to ``p``
+        for the following rounds (p=1.0: all HARQ attempts fail — every
+        client hard-outages and the round aggregates nobody)."""
+        self.dynamics.outage_override = float(p)
+
+    def clear_outage(self) -> None:
+        self.dynamics.outage_override = None
+
+    # -- divergence poke --------------------------------------------------
+    def poison_round(self) -> None:
+        """NaN the NEXT round's aggregated server adapter in-graph — the
+        divergence sentinel must roll that round back to the last good
+        state bit-for-bit.  One-shot: auto-disarms after the round."""
+        self.dynamics.poison_next = True

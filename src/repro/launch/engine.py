@@ -21,6 +21,8 @@ The three trainers plug in via small adapters exposing
 """
 from __future__ import annotations
 
+import dataclasses
+import os
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterator, List, Optional
@@ -180,6 +182,16 @@ class WirelessDynamics:
       never worse than keeping it), and the clients pick up their new
       (ell_k, r_k) through the slot-mask machinery with no retrace.
 
+    * outages + HARQ retransmissions (``core.channel`` outage model): with
+      ``outage_snr_db`` set, each uplink's per-transmission outage
+      probability follows Rayleigh fast fading around this round's block
+      average SNR; the expected (truncated-geometric) transmission count
+      E[m] inflates the traced delay twin's upload terms — stragglers now
+      include retransmission victims, composing with the deadline — and a
+      client whose ``max_harq`` attempts ALL fail is in hard outage for
+      the round (explicit participation 0, drawn from a dedicated RNG so
+      disabling outages never perturbs the fading stream).
+
     Knobs:
       fade_std_db      lognormal block-fading std in dB (paper-style 4-8);
       fade_rho         AR(1) round-to-round fading correlation in [0, 1);
@@ -187,14 +199,30 @@ class WirelessDynamics:
       deadline_factor  alternative: deadline = factor x max_k T_k evaluated
                        at the last (re)allocation — re-bases on re-allocation;
       drift_threshold  relative modeled-delay drift that triggers
-                       re-allocation (None = static allocation).
+                       re-allocation (None = static allocation);
+      outage_snr_db    per-transmission outage SNR threshold in dB
+                       (None = outage model off: RoundDynamics keeps the
+                       exact pre-outage traced structure);
+      max_harq         HARQ attempt cap m >= 1;
+      outage_rng       seed/Generator for the hard-outage Bernoulli draws.
+
+    Fault-injection hooks (``faults.inject.TrainingFaults`` drives these;
+    both are traced DATA, so flipping them mid-episode never retraces):
+      outage_override  None, or per-round outage probability override
+                       (scalar or (K,)) replacing the channel-derived p;
+      poison_next      None (no sentinel input in the trace), or bool —
+                       True NaNs the next round's aggregated server adapter
+                       in-graph, deterministically exercising divergence
+                       rollback; auto-resets to False after firing.
     """
 
     def __init__(self, prob, alloc, sfl, *, fade_std_db: float = 4.0,
                  fade_rho: float = 0.0, deadline_s: Optional[float] = None,
                  deadline_factor: Optional[float] = None,
                  drift_threshold: Optional[float] = None,
-                 max_sweeps: int = 2, rng=0):
+                 max_sweeps: int = 2, rng=0,
+                 outage_snr_db: Optional[float] = None, max_harq: int = 4,
+                 outage_rng=0):
         from ..core.channel import FadingProcess
         from ..core.latency import workload_tables
         from ..core.resource import as_hetero, total_delay
@@ -208,6 +236,14 @@ class WirelessDynamics:
         self.drift_threshold = drift_threshold
         self.max_sweeps = max_sweeps
         self._total_delay = total_delay
+        self.outage_snr_db = outage_snr_db
+        if max_harq < 1:
+            raise ValueError(f"max_harq must be >= 1, got {max_harq}")
+        self.max_harq = int(max_harq)
+        self.outage_rng = (np.random.default_rng(outage_rng)
+                           if isinstance(outage_rng, int) else outage_rng)
+        self.outage_override = None     # faults.inject: per-round p override
+        self.poison_next: Optional[bool] = None  # faults.inject: NaN poke
         if drift_threshold is not None:
             # fail fast: a drift-triggered re-allocation may pick ANY
             # (ell, rank) in prob's search space — a trainer whose capacity
@@ -238,14 +274,16 @@ class WirelessDynamics:
             self._rebase_deadline(prob.envs)
 
     # -- deadline re-basing: factor x slowest client at allocation time ----
-    def _client_seconds(self, envs) -> np.ndarray:
+    def _client_seconds(self, envs, retx_main=None, retx_fed=None
+                        ) -> np.ndarray:
         rates_m = self.alloc.rates_main(self.prob.sys_cfg, envs)
         rates_f = self.alloc.rates_fed(self.prob.sys_cfg, envs)
         t = client_round_seconds_host(
             self._tables, self.alloc.ell_k, self.alloc.rank_k,
             np.array([e.f_hz for e in envs]),
             np.array([e.kappa for e in envs]),
-            rates_m, rates_f, self.prob.batch, self.prob.local_steps)
+            rates_m, rates_f, self.prob.batch, self.prob.local_steps,
+            retx_main=retx_main, retx_fed=retx_fed)
         return np.asarray(t)
 
     def _rebase_deadline(self, envs) -> None:
@@ -280,15 +318,57 @@ class WirelessDynamics:
         sys_cfg = self.prob.sys_cfg
         rates_m = self.alloc.rates_main(sys_cfg, envs_r)
         rates_f = self.alloc.rates_fed(sys_cfg, envs_r)
-        t_k = self._client_seconds(envs_r)
+
+        # -- outage + HARQ: per-link E[m] and hard-outage survival ---------
+        retx_m = retx_f = survival = None
+        if self.outage_snr_db is not None or self.outage_override is not None:
+            from ..core.channel import (expected_transmissions,
+                                        outage_probability, residual_outage)
+            K = len(envs_r)
+            if self.outage_override is not None:
+                p_m = np.broadcast_to(
+                    np.asarray(self.outage_override, float), (K,))
+                p_f = p_m
+            else:
+                snr_th = 10.0 ** (self.outage_snr_db / 10.0)
+                noise = sys_cfg.noise_psd_w_hz
+                bw_m = np.maximum(self.alloc.bw_main(sys_cfg), 1e-30)
+                bw_f = np.maximum(self.alloc.bw_fed(sys_cfg), 1e-30)
+                snr_m = (self.alloc.power_main / bw_m / noise
+                         * np.array([e.gain_main for e in envs_r]))
+                snr_f = (self.alloc.power_fed / bw_f / noise
+                         * np.array([e.gain_fed for e in envs_r]))
+                p_m = outage_probability(snr_m, snr_th)
+                p_f = outage_probability(snr_f, snr_th)
+            retx_m = expected_transmissions(p_m, self.max_harq
+                                            ).astype(np.float32)
+            retx_f = expected_transmissions(p_f, self.max_harq
+                                            ).astype(np.float32)
+            u = self.outage_rng.uniform(size=(K, 2))
+            hard = ((u[:, 0] < residual_outage(p_m, self.max_harq))
+                    | (u[:, 1] < residual_outage(p_f, self.max_harq)))
+            survival = (~hard).astype(np.float32)
+            info["hard_outages"] = hard.astype(int).tolist()
+
+        t_k = self._client_seconds(envs_r, retx_m, retx_f)
         if self.deadline_s is not None:
             # f32 compare, matching the in-graph mask bit for bit
             part = (t_k <= np.float32(self.deadline_s)).astype(float)
         else:
             part = np.ones(len(envs_r))
+        if survival is not None:
+            part = part * survival          # compose: straggler AND outage
         info["participation"] = part.astype(int).tolist()
         info["round_seconds"] = self._round_seconds(envs_r, rates_m, rates_f,
                                                     part)
+
+        # poison sentinel: only a chaos episode (poison_next armed to a
+        # bool before round 1) carries the traced scalar; it auto-disarms
+        # after firing so exactly one round is poisoned per arm
+        poison = None
+        if self.poison_next is not None:
+            poison = jnp.float32(1.0 if self.poison_next else 0.0)
+            self.poison_next = False
 
         dyn = RoundDynamics(
             rates_main=jnp.asarray(rates_m, jnp.float32),
@@ -297,6 +377,13 @@ class WirelessDynamics:
             kappa=jnp.asarray([e.kappa for e in envs_r], jnp.float32),
             deadline_s=(None if self.deadline_s is None
                         else jnp.float32(self.deadline_s)),
+            retx_main=(None if retx_m is None
+                       else jnp.asarray(retx_m, jnp.float32)),
+            retx_fed=(None if retx_f is None
+                      else jnp.asarray(retx_f, jnp.float32)),
+            participation=(None if survival is None
+                           else jnp.asarray(survival, jnp.float32)),
+            poison=poison,
             **self._cfg_arrays)
         return dyn, info
 
@@ -317,6 +404,52 @@ class WirelessDynamics:
         t3 = max(t_lora_upload(sw, rates_f[k]) for sw, k in zip(sws, surv))
         return float(self.prob.local_steps * t_local + t3)
 
+    # -- episode checkpoint cursor (Trainer.fit kill/resume) ---------------
+    def cursor(self) -> dict:
+        """JSON-able snapshot of all host-side episode state: RNG cursors,
+        the current (possibly re-allocated) HeteroAllocation, the drift
+        reference delay and the (possibly re-based) deadline.  Restoring it
+        makes the resumed round sequence bit-identical to an uninterrupted
+        run (fault-injection hooks are transient and NOT checkpointed)."""
+        a = self.alloc
+        return {
+            "fading": self.fading.get_state(),
+            "outage_rng": self.outage_rng.bit_generator.state,
+            "ref_delay": float(self.ref_delay),
+            "deadline_s": (None if self.deadline_s is None
+                           else float(self.deadline_s)),
+            "alloc": {
+                "assign_main": np.asarray(a.assign_main).tolist(),
+                "assign_fed": np.asarray(a.assign_fed).tolist(),
+                "power_main": np.asarray(a.power_main).tolist(),
+                "power_fed": np.asarray(a.power_fed).tolist(),
+                "ell_c": int(a.ell_c),
+                "rank": int(a.rank),
+                "ell_k": np.asarray(a.ell_k).tolist(),
+                "rank_k": np.asarray(a.rank_k).tolist(),
+            },
+        }
+
+    def restore_cursor(self, c: dict) -> None:
+        from ..core.resource import HeteroAllocation
+        self.fading.set_state(c["fading"])
+        self.outage_rng.bit_generator.state = c["outage_rng"]
+        self.ref_delay = float(c["ref_delay"])
+        self.deadline_s = (None if c["deadline_s"] is None
+                           else float(c["deadline_s"]))
+        a = c["alloc"]
+        self.alloc = HeteroAllocation(
+            assign_main=np.asarray(a["assign_main"], int),
+            assign_fed=np.asarray(a["assign_fed"], int),
+            power_main=np.asarray(a["power_main"], float),
+            power_fed=np.asarray(a["power_fed"], float),
+            ell_c=int(a["ell_c"]), rank=int(a["rank"]),
+            ell_k=np.asarray(a["ell_k"], int),
+            rank_k=np.asarray(a["rank_k"], int))
+        self._cfg_arrays = (
+            self.sfl.allocation_dynamics(self.alloc.ell_k, self.alloc.rank_k)
+            if self.drift_threshold is not None else {})
+
 
 # ---------------------------------------------------------------------------
 # the driver
@@ -332,6 +465,7 @@ class TrainHistory:
     participation: List[List[int]] = field(default_factory=list)  # per round
     realloc_rounds: List[int] = field(default_factory=list)
     modeled_delays: List[float] = field(default_factory=list)  # total T per rnd
+    rolled_back_rounds: List[int] = field(default_factory=list)  # divergence
 
 
 class Trainer:
@@ -349,6 +483,13 @@ class Trainer:
                     faded channel instead of a static report
     checkpoint_path/checkpoint_every
                     save algo.checkpoint_payload(state) every N rounds
+    episode_path/episode_every
+                    full-fidelity episode checkpoint every N rounds: device
+                    state + round cursor + history + the dynamics cursor
+                    (fading/outage RNG, allocation, deadline) in ONE atomic
+                    file — ``fit(..., resume=True)`` continues a killed
+                    episode bit-identically (same data_iter seed required:
+                    the consumed rounds are re-drawn and discarded)
     callback        callback(round_idx, state, history) after each round
     """
 
@@ -356,6 +497,7 @@ class Trainer:
                  round_latency: Optional[Dict[str, Any]] = None,
                  dynamics: Optional[WirelessDynamics] = None,
                  checkpoint_path: str = "", checkpoint_every: int = 0,
+                 episode_path: str = "", episode_every: int = 0,
                  callback: Optional[Callable] = None):
         self.algo = algo
         self.local_steps = local_steps
@@ -364,17 +506,36 @@ class Trainer:
         self.dynamics = dynamics
         self.checkpoint_path = checkpoint_path
         self.checkpoint_every = checkpoint_every
+        self.episode_path = episode_path
+        self.episode_every = episode_every
         self.callback = callback
 
     # ------------------------------------------------------------------
-    def fit(self, state, data_iter: Iterator[Dict], *, global_rounds: int):
+    def fit(self, state, data_iter: Iterator[Dict], *, global_rounds: int,
+            resume: bool = False):
         history = TrainHistory()
+        start_round = 0
+        if resume and self.episode_path and os.path.exists(self.episode_path):
+            from ..checkpoint import restore_episode
+            state, meta = restore_episode(self.episode_path, state)
+            start_round = int(meta["round"])
+            h = meta.get("history", {})
+            for f in dataclasses.fields(TrainHistory):
+                if f.name in h:
+                    setattr(history, f.name, h[f.name])
+            if self.dynamics is not None and meta.get("dynamics") is not None:
+                self.dynamics.restore_cursor(meta["dynamics"])
         per_round = (modeled_round_seconds(self.round_latency,
                                            self.local_steps)
                      if self.round_latency else 0.0)
+        prev_wall = history.wall_seconds
         t0 = time.time()
+        # replay the consumed data stream so round start_round sees exactly
+        # the batches it would have in the uninterrupted run
+        for _ in range(start_round):
+            stack_rounds(data_iter, self.local_steps)
         staged = stack_rounds(data_iter, self.local_steps)
-        for e in range(global_rounds):
+        for e in range(start_round, global_rounds):
             if self.dynamics is not None:
                 dyn, info = self.dynamics.round_dynamics()
                 state, metrics = self.algo.run_round(state, staged,
@@ -388,6 +549,10 @@ class Trainer:
                                 np.float64).reshape(-1)
             history.losses.extend(float(x) for x in losses)
             history.round_losses.append(float(losses.mean()))
+            rb = (metrics.get("rolled_back")
+                  if isinstance(metrics, dict) else None)
+            if rb is not None and bool(jax.device_get(rb)):
+                history.rolled_back_rounds.append(e)
             if info is not None:
                 history.modeled_seconds += info["round_seconds"]
                 history.participation.append(info["participation"])
@@ -410,9 +575,13 @@ class Trainer:
             if (self.checkpoint_path and self.checkpoint_every
                     and (e + 1) % self.checkpoint_every == 0):
                 self._save(state)
+            if (self.episode_path and self.episode_every
+                    and (e + 1) % self.episode_every == 0):
+                history.wall_seconds = prev_wall + (time.time() - t0)
+                self._save_episode(state, e + 1, history)
             if self.callback is not None:
                 self.callback(e, state, history)
-        history.wall_seconds = time.time() - t0
+        history.wall_seconds = prev_wall + (time.time() - t0)
         steps = len(history.losses)
         if history.wall_seconds > 0:
             history.steps_per_sec = steps / history.wall_seconds
@@ -424,3 +593,13 @@ class Trainer:
         from ..checkpoint import save_pytree
         save_pytree(self.checkpoint_path,
                     self.algo.checkpoint_payload(state))
+
+    def _save_episode(self, state, round_idx: int, history) -> None:
+        from ..checkpoint import save_episode
+        # block so the saved device state is the state AT this round
+        state = jax.block_until_ready(state)
+        meta = {"round": int(round_idx),
+                "history": dataclasses.asdict(history),
+                "dynamics": (None if self.dynamics is None
+                             else self.dynamics.cursor())}
+        save_episode(self.episode_path, state, meta)

@@ -33,6 +33,15 @@ def main() -> None:
     ap.add_argument("--num-pages", type=int, default=0,
                     help="KV page pool size (0 = slab-equivalent capacity); "
                          "shrink to oversubscribe slots against HBM")
+    ap.add_argument("--deadline-steps", type=int, default=0,
+                    help="per-request decode-step residency budget; a "
+                         "request over budget is preempted in-graph and "
+                         "requeued for prefix recompute (0 = no deadline; "
+                         "paged engine only)")
+    ap.add_argument("--preempt", action="store_true",
+                    help="under page pressure, evict the lowest-priority "
+                         "resident instead of queueing new work "
+                         "(paged engine only)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -62,14 +71,19 @@ def main() -> None:
                         max_len=args.max_len, sc=sc, seed=args.seed,
                         fused=not args.naive, paged=paged,
                         page_size=args.page_size,
-                        num_pages=args.num_pages or None)
+                        num_pages=args.num_pages or None,
+                        preempt=args.preempt)
+    if (args.deadline_steps or args.preempt) and not eng.paged:
+        raise SystemExit("--deadline-steps/--preempt need the paged engine "
+                         "(drop --slab/--naive)")
 
     rng = np.random.default_rng(args.seed)
     reqs = [Request(uid=i,
                     prompt=rng.integers(5, cfg.vocab_size,
                                         rng.integers(4, args.prompt_len + 1)
                                         ).tolist(),
-                    max_new_tokens=args.gen)
+                    max_new_tokens=args.gen,
+                    deadline_steps=args.deadline_steps or None)
             for i in range(args.requests)]
     for r in reqs:
         eng.submit(r)
@@ -88,6 +102,11 @@ def main() -> None:
           f"({total / wall:.1f} tok/s) with {args.slots} slots, "
           f"{steps} engine steps, {eng.prefill_compiles()} prefill "
           f"compiles ({mode} engine)")
+    if eng.paged and (args.deadline_steps or args.preempt):
+        print(f"fault stats: {eng.stats['preemptions']} preemptions "
+              f"({eng.stats['deadline_preemptions']} deadline), "
+              f"{eng.stats['recomputed_tokens']} tokens recomputed, "
+              f"{eng.stats['quarantined']} quarantined")
     print("sample token ids:", reqs[0].output[:12])
 
 

@@ -1,5 +1,5 @@
-from .engine import Request, ServingEngine, bucket_len
+from .engine import AdmissionError, Request, ServingEngine, bucket_len
 from .paging import NULL_PAGE, alloc_pages, free_pages, init_pager
 
-__all__ = ["Request", "ServingEngine", "bucket_len",
+__all__ = ["AdmissionError", "Request", "ServingEngine", "bucket_len",
            "NULL_PAGE", "alloc_pages", "free_pages", "init_pager"]

@@ -58,6 +58,33 @@ measures the TTFT/throughput win under Poisson traffic):
 
 ``paged=False`` forces the PR-3 slab layout (the benchmark baseline);
 mamba/windowed/frontend archs fall back to it automatically.
+
+FAILURE HANDLING (paged engine only — the slab/naive paths stay frozen
+baselines): the fused step additionally takes per-slot eviction flags, a
+per-slot residency deadline, and a NaN-injection mask, all traced data —
+
+* preemptive KV eviction: under page pressure (``preempt=True``) the host
+  flags a strictly-lower-priority victim; a victim (or a slot whose
+  ``deadline_steps`` residency budget fires) frees its pages INSIDE the
+  fused donated step, is excluded from sampling, and requeues for
+  chunked-prefill recompute of its prefix — delivered tokens are kept
+  verbatim and the next token resumes the request's own
+  ``fold_in(uid, token_idx)`` RNG stream, so (with greedy sampling) the
+  completed output is identical to an un-preempted run;
+* NaN/inf sentinel: non-finite logits (model blow-up or an injected
+  poke) quarantine the slot — pages freed, ``Request.error`` set —
+  instead of sampling garbage;
+* malformed requests (empty, or no room to decode) are rejected at
+  ``submit()`` with a typed ``AdmissionError`` rather than silently
+  finishing empty;
+* ``check_consistency()`` audits the host reservation mirror against the
+  in-graph free list whenever the engine drains, resyncing (with a
+  warning) if an external actor corrupted the counters.
+
+All fault masks default to all-false, which the step consumes as
+bit-exact no-ops: a fault-free run reproduces the pre-fault engine token
+for token, and the one-call property still holds
+(``_jit_step_paged._cache_size() == 1``).
 """
 from __future__ import annotations
 
@@ -76,15 +103,29 @@ from ..models.stack import Runtime, default_serve_runtime
 from . import paging
 
 
+class AdmissionError(ValueError):
+    """A request the engine can NEVER serve, rejected at ``submit()`` with
+    a typed reason (``empty-prompt`` | ``prompt-too-long``) — instead of
+    the silent done-with-no-output a malformed request used to get."""
+
+    def __init__(self, reason: str, msg: str):
+        super().__init__(msg)
+        self.reason = reason
+
+
 @dataclass
 class Request:
     uid: int
     prompt: List[int]
     max_new_tokens: int = 32
     eos_id: int = -1
+    priority: int = 0              # preemption: lower loses its slot first
+    deadline_steps: Optional[int] = None   # max decode steps per residency
     # filled by the engine
     output: List[int] = field(default_factory=list)
     done: bool = False
+    preempted: int = 0             # times evicted + requeued
+    error: Optional[str] = None    # quarantine reason (non-finite logits)
 
 
 def _is_pos(kp) -> bool:
@@ -118,7 +159,7 @@ class ServingEngine:
                  sc: SampleConfig = SampleConfig(greedy=True), seed: int = 0,
                  fused: bool = True, prefill_buckets: bool = True,
                  paged: Optional[bool] = None, page_size: int = 16,
-                 num_pages: Optional[int] = None):
+                 num_pages: Optional[int] = None, preempt: bool = False):
         if getattr(cfg, "frontend", None):
             raise NotImplementedError(
                 "ServingEngine serves text-only requests; frontend archs "
@@ -162,6 +203,18 @@ class ServingEngine:
         # host-side mirrors for the legacy (fused=False) loop
         self._np_positions = np.zeros(B, np.int64)
         self._np_last = np.zeros(B, np.int64)
+        # failure handling (paged only): per-slot decode-step age vs the
+        # request's residency deadline, host-set eviction / NaN-injection
+        # flags (cleared every step), and recovery counters
+        self.preempt = preempt
+        self._age = jnp.zeros((B,), jnp.int32)
+        self._deadline = jnp.full((B,), -1, jnp.int32)
+        self._evict_req = np.zeros(B, bool)     # crash / page-pressure evict
+        self._evict_behind = np.zeros(B, bool)  # requeue behind queue head
+        self._nan_poke = np.zeros(B, bool)      # faults.inject: NaN logits
+        self.stats = {"preemptions": 0, "deadline_preemptions": 0,
+                      "quarantined": 0, "recomputed_tokens": 0,
+                      "resyncs": 0}
 
         if self.paged:
             if max_len % page_size:
@@ -220,16 +273,29 @@ class ServingEngine:
         if self.paged:
             PS, MP = self.page_size, self.max_pages
 
-            # -- fused PAGED decode step: page alloc + decode + sample +
-            #    bookkeeping + page free, ONE donated call ----------------
+            # -- fused PAGED decode step: preempt + page alloc + decode +
+            #    NaN sentinel + sample + bookkeeping + page free, ONE
+            #    donated call --------------------------------------------
             def _step_paged(params, lora, caches, pager, bt, last, positions,
-                            live, uids, ngen, maxnew, eos):
+                            live, uids, ngen, maxnew, eos, age, deadline,
+                            evict, nan_poke):
                 bidx = jnp.arange(B)
+                # preemption first: a slot the host marked for eviction or
+                # whose residency deadline fired gives its pages back to
+                # the pool THIS step (free_pages zeroes its block-table
+                # row; the victim still flows through the batched decode
+                # reading the null page, but is excluded from sampling and
+                # every state write).  All-false masks are bit-exact
+                # no-ops, so a fault-free step reproduces the pre-fault
+                # engine token for token.
+                victim = live & (evict | ((deadline >= 0) & (age >= deadline)))
+                pager, bt = paging.free_pages(pager, bt, victim)
+                ok = live & ~victim
                 # a live slot about to write at a page boundary needs a
                 # fresh page (prefill only covered [0, ceil(P/PS)*PS));
                 # each boundary is crossed exactly once, so this is the
                 # request's lazy, actual page demand
-                need = live & (positions % PS == 0)
+                need = ok & (positions % PS == 0)
                 pager, newp, _ = paging.alloc_pages(pager, need)
                 page_idx = jnp.minimum(positions // PS, MP - 1)
                 cur = bt[bidx, page_idx]
@@ -237,24 +303,38 @@ class ServingEngine:
                 logits, caches = model_mod.paged_decode_step(
                     cfg, params, last[:, None], caches, bt, positions,
                     lora=lora, rt=rt)
-                nxt = sample_logits_per_key(logits, _slot_keys(uids, ngen), sc)
-                nxt = jnp.where(live, nxt, 0)
-                ngen1 = ngen + live.astype(jnp.int32)
-                done = live & ((nxt == eos) | (ngen1 >= maxnew) |
-                               (positions + 1 >= max_len))
-                pager, bt = paging.free_pages(pager, bt, done)
-                return (nxt, done, caches, pager, bt,
-                        jnp.where(live, nxt, last),
-                        positions + live.astype(jnp.int32), live & ~done,
-                        ngen1)
+                # NaN/inf sentinel: a slot whose logits go non-finite
+                # (model blow-up, or an injected poke) is quarantined —
+                # its pages free below and the host records the error —
+                # instead of sampling garbage into the output stream
+                logits = jnp.where(nan_poke[:, None], jnp.nan, logits)
+                finite = jnp.all(jnp.isfinite(logits), axis=-1)
+                bad = ok & ~finite
+                ok = ok & finite
+                safe = jnp.where(finite[:, None], logits, 0.0)
+                nxt = sample_logits_per_key(safe, _slot_keys(uids, ngen), sc)
+                nxt = jnp.where(ok, nxt, 0)
+                ngen1 = ngen + ok.astype(jnp.int32)
+                done = ok & ((nxt == eos) | (ngen1 >= maxnew) |
+                             (positions + 1 >= max_len))
+                pager, bt = paging.free_pages(pager, bt, done | bad)
+                live1 = ok & ~done
+                return (nxt, done, victim, bad, caches, pager, bt,
+                        jnp.where(ok, nxt, last),
+                        positions + ok.astype(jnp.int32), live1,
+                        ngen1, jnp.where(live1, age + 1, 0))
 
             self._jit_step_paged = jax.jit(
-                _step_paged, donate_argnums=(2, 3, 4, 5, 6, 7, 9))
+                _step_paged, donate_argnums=(2, 3, 4, 5, 6, 7, 9, 12))
 
             # -- chunked prefill: ONE compiled executable serves every
-            #    chunk of every prompt (start/true_len/uid/slot traced) ---
+            #    chunk of every prompt (start/true_len/uid/slot traced);
+            #    ``tok_idx`` is the request's next token index — 0 for a
+            #    fresh prompt, len(output) for a preempted request being
+            #    recomputed, so the requeued request resumes its OWN RNG
+            #    stream and continues token-identically -------------------
             def _chunk(params, lora, caches, pager, bt, tokens, slot, start,
-                       true_len, uid):
+                       true_len, uid, tok_idx):
                 pager, newp, _ = paging.alloc_pages(
                     pager, jnp.ones((1,), bool))
                 bt = bt.at[slot, start // PS].set(newp[0])
@@ -264,23 +344,27 @@ class ServingEngine:
                 logits, caches = model_mod.paged_prefill_chunk(
                     cfg, params, tokens, caches, row, start, li,
                     lora=lora, rt=rt)
-                k = jax.random.fold_in(jax.random.fold_in(base_key, uid), 0)
+                k = jax.random.fold_in(jax.random.fold_in(base_key, uid),
+                                       tok_idx)
                 tok0 = sample_logits(logits, k, sc)[0]
                 return tok0, caches, pager, bt
 
             self._jit_chunk = jax.jit(_chunk, donate_argnums=(2, 3, 4))
 
             # -- claim a slot after its prompt streamed through ----------
-            def _claim(last, positions, live, uids, ngen, maxnew, eos, slot,
-                       tok0, true_len, uid, req_maxnew, req_eos):
+            def _claim(last, positions, live, uids, ngen, maxnew, eos, age,
+                       deadline, slot, tok0, true_len, uid, ngen0,
+                       req_maxnew, req_eos, req_deadline):
                 return (last.at[slot].set(tok0),
                         positions.at[slot].set(true_len),
                         live.at[slot].set(True), uids.at[slot].set(uid),
-                        ngen.at[slot].set(1), maxnew.at[slot].set(req_maxnew),
-                        eos.at[slot].set(req_eos))
+                        ngen.at[slot].set(ngen0),
+                        maxnew.at[slot].set(req_maxnew),
+                        eos.at[slot].set(req_eos), age.at[slot].set(0),
+                        deadline.at[slot].set(req_deadline))
 
             self._jit_claim = jax.jit(
-                _claim, donate_argnums=(0, 1, 2, 3, 4, 5, 6))
+                _claim, donate_argnums=(0, 1, 2, 3, 4, 5, 6, 7, 8))
 
             # -- release a slot's pages (request finished mid-prefill) ---
             def _release(pager, bt, slot):
@@ -350,6 +434,14 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
+        if len(req.prompt) == 0:
+            raise AdmissionError("empty-prompt",
+                                 f"request {req.uid}: empty prompt")
+        if len(req.prompt) >= self.max_len:
+            raise AdmissionError(
+                "prompt-too-long",
+                f"request {req.uid}: prompt length {len(req.prompt)} leaves "
+                f"no room to decode (max_len={self.max_len})")
         self.queue.append(req)
 
     def prefill_compiles(self) -> int:
@@ -365,6 +457,33 @@ class ServingEngine:
         """Pages currently allocated out of the in-graph pool."""
         return self.num_pages - 1 - int(self._pager["head"])
 
+    def check_consistency(self, resync: bool = True) -> bool:
+        """Audit the host reservation mirror against the in-graph free
+        list: the mirror must account for every page (free + reserved =
+        pool) and the allocator can never have handed out more pages than
+        were reserved (lazy demand <= worst case).  On drift — which only
+        an external actor poking ``_free_host``/``_reserved`` can cause —
+        warn and rebuild the mirror from the live slots, so one corrupted
+        counter degrades admission throughput for a moment instead of
+        deadlocking the queue or underflowing the allocator forever.
+        Returns True when the mirror was consistent."""
+        used = self.pages_in_use()
+        reserved = sum(self._reserved)
+        ok = (self._free_host == self.num_pages - 1 - reserved
+              and used <= reserved)
+        if not ok and resync:
+            import warnings
+            warnings.warn(
+                f"page-accounting drift: free_host={self._free_host} "
+                f"reserved={reserved} in_use={used} "
+                f"pool={self.num_pages - 1}; resyncing from live slots",
+                RuntimeWarning, stacklevel=2)
+            self._reserved = [self._worst_pages(r) if r is not None else 0
+                              for r in self.slots]
+            self._free_host = self.num_pages - 1 - sum(self._reserved)
+            self.stats["resyncs"] += 1
+        return ok
+
     def _worst_pages(self, req: Request) -> int:
         """Worst-case page demand of one request: every position it can
         ever write KV at is < min(P + max_new, max_len)."""
@@ -375,36 +494,50 @@ class ServingEngine:
     # admission
     # ------------------------------------------------------------------
     def _admit_one_paged(self, s: int, req: Request) -> bool:
-        """Stream ``req``'s prompt through the compiled chunk executable
+        """Stream ``req``'s prefix through the compiled chunk executable
         (one page per chunk) and claim slot ``s``.  The caller has already
-        reserved ``_worst_pages(req)`` in the host mirror.  Returns False
-        when the request finished on its very first token (pages released,
-        slot stays free)."""
-        P, PS = len(req.prompt), self.page_size
-        tok0_d = None
+        reserved ``_worst_pages(req)`` in the host mirror.
+
+        The prefix is prompt + already-delivered output: a fresh request
+        prefills its prompt and samples token 0; a preempted request being
+        recomputed prefills everything it had (its delivered tokens are
+        NEVER re-sampled — they stay in ``output`` verbatim) and samples
+        its next token index from its own RNG stream, continuing the
+        sequence exactly where eviction cut it.  Returns False when the
+        request finished on this first token (pages released, slot stays
+        free)."""
+        n = len(req.output)                 # tokens already delivered
+        prefix = list(req.prompt) + list(req.output)
+        P, PS = len(prefix), self.page_size
+        if req.preempted:
+            self.stats["recomputed_tokens"] += P
+        tok_d = None
         for start in range(0, P, PS):
-            n = min(PS, P - start)
-            chunk = req.prompt[start:start + n] + [0] * (PS - n)
+            m = min(PS, P - start)
+            chunk = prefix[start:start + m] + [0] * (PS - m)
             tokens = jnp.asarray(chunk, jnp.int32)[None]
-            (tok0_d, self.caches, self._pager, self._bt) = self._jit_chunk(
+            (tok_d, self.caches, self._pager, self._bt) = self._jit_chunk(
                 self.params, self.lora, self.caches, self._pager, self._bt,
                 tokens, jnp.int32(s), jnp.int32(start), jnp.int32(P),
-                jnp.int32(req.uid))
-        tok0 = int(tok0_d)
-        req.output.append(tok0)
-        if (tok0 == req.eos_id) or (req.max_new_tokens <= 1):
+                jnp.int32(req.uid), jnp.int32(n))
+        tok = int(tok_d)
+        req.output.append(tok)
+        if (tok == req.eos_id) or (len(req.output) >= req.max_new_tokens) \
+                or (P >= self.max_len):     # prefix filled the cache
             req.done = True
             self._pager, self._bt = self._jit_release(
                 self._pager, self._bt, jnp.int32(s))
             self._free_host += self._reserved[s]
             self._reserved[s] = 0
             return False
+        dl = -1 if req.deadline_steps is None else int(req.deadline_steps)
         (self._last, self._positions, self._live, self._uids, self._ngen,
-         self._maxnew, self._eos) = self._jit_claim(
+         self._maxnew, self._eos, self._age, self._deadline) = self._jit_claim(
             self._last, self._positions, self._live, self._uids, self._ngen,
-            self._maxnew, self._eos, jnp.int32(s), tok0_d, jnp.int32(P),
-            jnp.int32(req.uid), jnp.int32(req.max_new_tokens),
-            jnp.int32(req.eos_id))
+            self._maxnew, self._eos, self._age, self._deadline, jnp.int32(s),
+            tok_d, jnp.int32(P), jnp.int32(req.uid), jnp.int32(n + 1),
+            jnp.int32(req.max_new_tokens), jnp.int32(req.eos_id),
+            jnp.int32(dl))
         self.slots[s] = req
         return True
 
@@ -453,6 +586,23 @@ class ServingEngine:
         self.slots[s] = req
         return True
 
+    def _request_preempt(self, head: Request) -> None:
+        """Page pressure: pick a live victim of STRICTLY lower priority
+        than the stalled queue head (strictness prevents same-priority
+        livelock) and flag it for in-graph eviction on the next step.
+        Ties: the victim holding the most pages, then the lowest slot."""
+        cand = [s for s, r in enumerate(self.slots)
+                if r is not None and r.priority < head.priority
+                and not self._evict_req[s]]
+        if not cand:
+            return
+        victim = min(cand, key=lambda s: (self.slots[s].priority,
+                                          -self._reserved[s], s))
+        self._evict_req[victim] = True
+        # the victim must requeue BEHIND the head it yielded to, or the
+        # two would evict each other forever
+        self._evict_behind[victim] = True
+
     def _admit(self) -> None:
         for s in range(self.max_slots):
             while self.slots[s] is None and self.queue:
@@ -462,7 +612,11 @@ class ServingEngine:
                         worst = self._worst_pages(head)
                         if worst > self._free_host:
                             # FIFO backpressure: hold the whole queue until
-                            # enough pages free (no reordering, no drops)
+                            # enough pages free (no reordering, no drops);
+                            # with preempt=True, additionally evict a
+                            # lower-priority slot so they free sooner
+                            if self.preempt:
+                                self._request_preempt(head)
                             return
                         self._free_host -= worst
                         self._reserved[s] = worst
@@ -480,14 +634,50 @@ class ServingEngine:
         if not live:
             return 0
         if self.paged:
-            (nxt, done, self.caches, self._pager, self._bt, self._last,
-             self._positions, self._live, self._ngen) = self._jit_step_paged(
+            evict_np = self._evict_req.copy()
+            behind_np = self._evict_behind.copy()
+            (nxt, done, victim, bad, self.caches, self._pager, self._bt,
+             self._last, self._positions, self._live, self._ngen,
+             self._age) = self._jit_step_paged(
                 self.params, self.lora, self.caches, self._pager, self._bt,
                 self._last, self._positions, self._live, self._uids,
-                self._ngen, self._maxnew, self._eos)
+                self._ngen, self._maxnew, self._eos, self._age,
+                self._deadline, jnp.asarray(evict_np),
+                jnp.asarray(self._nan_poke))
+            self._evict_req[:] = False
+            self._evict_behind[:] = False
+            self._nan_poke[:] = False
             nxt_h, done_h = np.asarray(nxt), np.asarray(done)
+            victim_h, bad_h = np.asarray(victim), np.asarray(bad)
+            front: List[Request] = []
             for s in live:
                 req = self.slots[s]
+                if victim_h[s]:
+                    # preempted: pages freed in-graph this step; requeue
+                    # for chunked-prefill recompute of its prefix (its
+                    # delivered tokens are preserved, not re-sampled)
+                    req.preempted += 1
+                    self.slots[s] = None
+                    self._free_host += self._reserved[s]
+                    self._reserved[s] = 0
+                    self.stats["preemptions"] += 1
+                    if not evict_np[s]:
+                        self.stats["deadline_preemptions"] += 1
+                    if behind_np[s] and self.queue:
+                        self.queue.insert(1, req)   # behind the head it
+                    else:                           # yielded its pages to
+                        front.append(req)
+                    continue
+                if bad_h[s]:
+                    # quarantined: non-finite logits — fail the request
+                    # with a typed error instead of emitting garbage
+                    req.error = "non-finite logits"
+                    req.done = True
+                    self.slots[s] = None
+                    self._free_host += self._reserved[s]
+                    self._reserved[s] = 0
+                    self.stats["quarantined"] += 1
+                    continue
                 req.output.append(int(nxt_h[s]))
                 if done_h[s]:
                     req.done = True
@@ -496,6 +686,8 @@ class ServingEngine:
                     # return the full reservation to the host mirror
                     self._free_host += self._reserved[s]
                     self._reserved[s] = 0
+            for req in reversed(front):     # oldest work back to the front
+                self.queue.appendleft(req)
         elif self.fused:
             (nxt, done, self.caches, self._last, self._positions, self._live,
              self._ngen) = self._jit_step(
@@ -537,5 +729,8 @@ class ServingEngine:
     def run(self, max_steps: int = 10_000) -> None:
         for _ in range(max_steps):
             if not self.queue and all(s is None for s in self.slots):
+                # drained: audit the reservation mirror (all pages home)
+                if self.paged:
+                    self.check_consistency()
                 return
             self.step()

@@ -1,0 +1,132 @@
+"""checkpoint/io.py: msgpack pytree round-trips for the states the repo
+actually checkpoints — heterogeneous slot-masked adapter state (mixed
+ranks, int step counters, optimizer moments) and mid-flight paged-KV
+engine state — plus the episode format (device tree + JSON meta with
+arbitrary-precision RNG cursors in ONE atomic file)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import models as M
+from repro.checkpoint import (restore_episode, restore_pytree, save_episode,
+                              save_pytree)
+from repro.configs import TrainConfig, get_arch
+from repro.core import SflLLM
+from repro.optim import adamw
+from repro.serving import Request, ServingEngine
+
+
+def _zeros_like(tree):
+    return jax.tree.map(lambda v: jnp.zeros_like(v), tree)
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb))
+
+
+def test_pytree_roundtrip_mixed_dtypes(tmp_path):
+    tree = {"f32": jnp.linspace(0, 1, 7, dtype=jnp.float32),
+            "bf16": jnp.asarray([1.5, -2.25], jnp.bfloat16),
+            "i32": jnp.arange(5, dtype=jnp.int32),
+            "bool": jnp.asarray([True, False]),
+            "nested": {"scalar": jnp.float32(3.125)}}
+    path = str(tmp_path / "t.ckpt")
+    save_pytree(path, tree)
+    got = restore_pytree(path, _zeros_like(tree))
+    assert _leaves_equal(tree, got)
+    assert all(x.dtype == y.dtype for x, y in
+               zip(jax.tree.leaves(tree), jax.tree.leaves(got)))
+
+
+def test_restore_missing_leaf_raises(tmp_path):
+    path = str(tmp_path / "t.ckpt")
+    save_pytree(path, {"a": jnp.zeros(3)})
+    with pytest.raises(KeyError, match="missing leaf"):
+        restore_pytree(path, {"a": jnp.zeros(3), "b": jnp.zeros(2)})
+
+
+def test_atomic_write_leaves_no_tmp(tmp_path):
+    path = str(tmp_path / "t.ckpt")
+    save_pytree(path, {"a": jnp.zeros(3)})
+    assert os.listdir(tmp_path) == ["t.ckpt"]
+
+
+def test_hetero_adapter_state_roundtrip(tmp_path):
+    """The real training payload: per-client slot-masked LoRA stacks with
+    MIXED ranks, the server adapter, both optimizer states and the step
+    counter — after one training round (non-trivial moments) — restore
+    bit-for-bit into a freshly-initialized template."""
+    K, B, S, I = 3, 2, 16, 2
+    cfg = get_arch("gpt2-s").reduced(num_layers=2)
+    params = M.init_params(cfg, jax.random.key(0))
+    tc = TrainConfig(num_clients=K, batch_size=B, local_steps=I)
+    sfl = SflLLM(cfg, params, ell_c=1, train_cfg=tc, optimizer=adamw(1e-3),
+                 ranks=[1, 2, 4])
+    state = sfl.init_state(sfl.init_lora(jax.random.key(7)))
+    tokens = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (I, K, B, S)).astype(np.int32)
+    state, _ = sfl.train_round(state, {"tokens": tokens,
+                                       "labels": tokens.copy()}, [1.0] * K)
+    path = str(tmp_path / "sfl.ckpt")
+    save_pytree(path, state)
+    template = sfl.init_state(sfl.init_lora(jax.random.key(11)))
+    got = restore_pytree(path, template)
+    assert _leaves_equal(state, got)
+
+
+def test_paged_engine_state_roundtrip(tmp_path):
+    """Mid-flight paged serving state: KV page pool, free-list pager,
+    block tables and every per-slot counter survive a save/restore."""
+    cfg = get_arch("gpt2-s").reduced(num_layers=2)
+    params = M.init_params(cfg, jax.random.key(0))
+    eng = ServingEngine(cfg, params, rt=M.Runtime(attn_impl="naive"),
+                        max_slots=2, max_len=32, page_size=8, seed=7)
+    for i in range(3):
+        eng.submit(Request(uid=i, prompt=[5 + i, 6, 7, 8, 9],
+                           max_new_tokens=8))
+    for _ in range(3):
+        eng.step()
+    state = {"caches": eng.caches, "pager": eng._pager, "bt": eng._bt,
+             "last": eng._last, "positions": eng._positions,
+             "live": eng._live, "uids": eng._uids, "ngen": eng._ngen,
+             "maxnew": eng._maxnew, "eos": eng._eos, "age": eng._age,
+             "deadline": eng._deadline}
+    assert any(np.asarray(state["live"]))       # actually mid-flight
+    path = str(tmp_path / "eng.ckpt")
+    save_pytree(path, state)
+    got = restore_pytree(path, _zeros_like(state))
+    assert _leaves_equal(state, got)
+
+
+def test_episode_format_roundtrip_with_rng_cursor(tmp_path):
+    """Episode file = device tree + JSON meta in one atomic file; numpy
+    PCG64 cursors carry 128-bit integers that must survive verbatim, and
+    restore_pytree can read the device half of an episode file too."""
+    tree = {"w": jnp.linspace(0, 1, 5), "n": jnp.arange(3)}
+    rng = np.random.default_rng(12345)
+    rng.normal(size=7)                          # advance off the seed state
+    meta = {"round": 3, "rng": rng.bit_generator.state,
+            "history": {"losses": [1.0, 0.5]}}
+    path = str(tmp_path / "ep.ckpt")
+    save_episode(path, tree, meta)
+    got_tree, got_meta = restore_episode(path, _zeros_like(tree))
+    assert _leaves_equal(tree, got_tree)
+    assert got_meta == meta                     # 128-bit state exact
+    # the restored cursor continues the exact draw sequence
+    rng2 = np.random.default_rng(0)
+    rng2.bit_generator.state = got_meta["rng"]
+    assert np.array_equal(rng.normal(size=4), rng2.normal(size=4))
+    # plain restore_pytree accepts an episode file (device half)
+    assert _leaves_equal(tree, restore_pytree(path, _zeros_like(tree)))
+
+
+def test_restore_episode_rejects_plain_checkpoint(tmp_path):
+    path = str(tmp_path / "plain.ckpt")
+    save_pytree(path, {"a": jnp.zeros(2)})
+    with pytest.raises(KeyError, match="episode"):
+        restore_episode(path, {"a": jnp.zeros(2)})

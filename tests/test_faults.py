@@ -1,0 +1,371 @@
+"""Chaos suite: deterministic fault injection against both halves of the
+stack.
+
+Serving: mid-decode slot crashes, residency deadlines, page exhaustion,
+priority preemption under page pressure, and NaN pokes — every admitted
+request must complete or be requeued-and-completed, preempted requests
+must produce the exact token sequence of an un-preempted run, the fused
+step must stay ONE compiled program, and the page-reservation mirror must
+audit clean at drain.
+
+Training: outage bursts (HARQ retransmissions + hard outage), the
+in-graph divergence-rollback sentinel (a poisoned round is bit-identical
+to never having run), armed-but-quiet injectors bit-reproducing the
+fault-free trajectory, and episode kill/resume bit-equality.
+
+Set REPRO_SMOKE=1 (the CI chaos-smoke step does) to shrink shapes."""
+import dataclasses
+import os
+import tempfile
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro import models as M
+from repro.configs import DEFAULT_SYSTEM, get_arch
+from repro.core import (Problem, SflLLM, bcd_minimize_delay_per_client,
+                        expected_transmissions, outage_probability,
+                        residual_outage, sample_clients, tree_all_finite)
+from repro.faults import ServingFaults, TrainingFaults
+from repro.launch.engine import SflRound, Trainer, WirelessDynamics
+from repro.optim import adamw
+from repro.serving import AdmissionError, Request, ServingEngine
+
+SMOKE = bool(os.environ.get("REPRO_SMOKE"))
+K, B, S, I = 3, 2, 16, 2
+
+
+# ---------------------------------------------------------------------------
+# outage math
+# ---------------------------------------------------------------------------
+
+def test_outage_model_limits():
+    assert outage_probability(1e9, 1.0) == pytest.approx(0.0, abs=1e-8)
+    assert outage_probability(1e-9, 1.0) == pytest.approx(1.0)
+    # p=0: exactly one transmission — the retx multiplier is exact identity
+    assert expected_transmissions(0.0, 4) == 1.0
+    # p=1: every one of the m attempts is made and fails
+    assert expected_transmissions(1.0, 4) == pytest.approx(4.0)
+    assert residual_outage(1.0, 4) == 1.0
+    assert residual_outage(0.0, 4) == 0.0
+    # truncated-geometric mean, hand-checked at p=1/2, m=3: 1 + p + p^2
+    assert expected_transmissions(0.5, 3) == pytest.approx(1.75)
+    with pytest.raises(ValueError):
+        expected_transmissions(0.5, 0)
+
+
+def test_tree_all_finite_skips_integer_leaves():
+    ok = {"a": np.ones(3, np.float32), "n": np.arange(3)}
+    assert bool(tree_all_finite(ok))
+    assert not bool(tree_all_finite({"a": np.array([1.0, np.nan])}))
+    assert bool(tree_all_finite({"n": np.arange(3)}))   # ints can't diverge
+
+
+# ---------------------------------------------------------------------------
+# serving chaos
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def serve_setup():
+    cfg = get_arch("gpt2-s").reduced(num_layers=2)
+    params = M.init_params(cfg, jax.random.key(0))
+    return cfg, params, M.Runtime(attn_impl="naive")
+
+
+def _reqs(n=6, seed=4, **kw):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(5, 500, int(rng.integers(3, 20))
+                                        ).tolist(),
+                    max_new_tokens=int(rng.integers(2, 12)), **kw)
+            for i in range(n)]
+
+
+def _engine(setup, **kw):
+    cfg, params, rt = setup
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("seed", 7)
+    return ServingEngine(cfg, params, rt=rt, **kw)
+
+
+def test_crash_preempt_recovers_bit_identical(serve_setup):
+    """A slot crashed mid-decode requeues, recomputes its prefix, and
+    finishes with EXACTLY the tokens of a fault-free run — delivered
+    tokens survive the crash, the rest resume the request's RNG stream.
+    The fused step and chunk prefill each stay ONE compiled program."""
+    base = _reqs()
+    eng = _engine(serve_setup)
+    for r in base:
+        eng.submit(r)
+    eng.run()
+    assert all(r.done for r in base)
+
+    chaos = _reqs()
+    eng2 = _engine(serve_setup)
+    f = ServingFaults(eng2)
+    for r in chaos:
+        eng2.submit(r)
+    eng2.step()
+    eng2.step()
+    f.crash_slot(0)
+    eng2.run()
+    assert all(r.done for r in chaos)
+    assert sum(r.preempted for r in chaos) == 1
+    assert eng2.stats["preemptions"] == 1
+    assert eng2.stats["recomputed_tokens"] > 0
+    assert [r.output for r in chaos] == [r.output for r in base]
+    assert eng2._jit_step_paged._cache_size() == 1
+    assert eng2._jit_chunk._cache_size() == 1
+    assert eng2.check_consistency(resync=False)
+    assert eng2.pages_in_use() == 0
+
+
+def test_deadline_preemption_bounds_residency(serve_setup):
+    """deadline_steps caps continuous slot residency: the request is
+    evicted, requeued, recomputed — and still completes its full output,
+    identical to a run without the deadline (greedy sampling)."""
+    free = Request(uid=0, prompt=[5, 6, 7], max_new_tokens=12)
+    capped = Request(uid=0, prompt=[5, 6, 7], max_new_tokens=12,
+                     deadline_steps=3)
+    for r in (free, capped):
+        eng = _engine(serve_setup, max_len=64)
+        eng.submit(r)
+        eng.run()
+        assert r.done
+    assert capped.preempted >= 2
+    assert capped.output == free.output
+
+
+def test_nan_poke_quarantines_only_the_poked_slot(serve_setup):
+    r1 = Request(uid=0, prompt=[5, 6, 7, 8], max_new_tokens=10)
+    r2 = Request(uid=1, prompt=[9, 10, 11], max_new_tokens=10)
+    eng = _engine(serve_setup)
+    f = ServingFaults(eng)
+    eng.submit(r1)
+    eng.submit(r2)
+    eng.step()
+    f.poke_nan(0)
+    eng.run()
+    assert r1.done and r1.error == "non-finite logits"
+    assert r2.done and r2.error is None and len(r2.output) == 10
+    assert eng.stats["quarantined"] == 1
+    assert eng.check_consistency(resync=False)
+
+
+def test_page_exhaustion_backpressure_then_recovery(serve_setup):
+    """Stolen pages stall admission (backpressure, no drops, no allocator
+    underflow); returning them lets every request complete."""
+    reqs = _reqs(4)
+    eng = _engine(serve_setup, max_slots=4, num_pages=17)
+    f = ServingFaults(eng)
+    held = f.exhaust_pages()
+    assert held == 16
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(3):
+        eng.step()
+    assert all(s is None for s in eng.slots)    # nobody admitted
+    assert len(eng.queue) == 4
+    f.release_pages()
+    eng.run()
+    assert all(r.done for r in reqs)
+    assert eng.check_consistency(resync=False)
+
+
+def test_priority_preemption_under_page_pressure(serve_setup):
+    """preempt=True: a stalled higher-priority head evicts a strictly
+    lower-priority page hog; both complete, and the hog's final output is
+    bit-identical to an unpressured run of the same request."""
+    solo = Request(uid=3, prompt=list(range(5, 13)), max_new_tokens=24)
+    eng0 = _engine(serve_setup, max_slots=2)
+    eng0.submit(solo)
+    eng0.run()
+
+    hog = Request(uid=3, prompt=list(range(5, 13)), max_new_tokens=24,
+                  priority=0)
+    vip = Request(uid=4, prompt=list(range(20, 26)), max_new_tokens=6,
+                  priority=5)
+    eng = _engine(serve_setup, max_slots=2, num_pages=5, preempt=True)
+    eng.submit(hog)
+    eng.step()
+    eng.step()
+    eng.submit(vip)
+    eng.run()
+    assert hog.done and vip.done
+    assert hog.preempted >= 1
+    assert eng.stats["preemptions"] >= 1
+    assert hog.output == solo.output
+    assert eng.check_consistency(resync=False)
+
+
+def test_admission_errors_are_typed(serve_setup):
+    eng = _engine(serve_setup)
+    with pytest.raises(AdmissionError) as e:
+        eng.submit(Request(uid=0, prompt=[], max_new_tokens=2))
+    assert e.value.reason == "empty-prompt"
+    with pytest.raises(AdmissionError) as e:
+        eng.submit(Request(uid=1, prompt=[1] * 40, max_new_tokens=2))
+    assert e.value.reason == "prompt-too-long"
+    assert not eng.queue                        # nothing half-admitted
+
+
+def test_consistency_audit_detects_and_repairs_desync(serve_setup):
+    eng = _engine(serve_setup)
+    f = ServingFaults(eng)
+    assert eng.check_consistency(resync=False)
+    f.desync_mirror(2)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        assert not eng.check_consistency()      # flagged ...
+    assert len(w) == 1 and "drift" in str(w[0].message)
+    assert eng.stats["resyncs"] == 1
+    assert eng.check_consistency(resync=False)  # ... and repaired
+    # the repaired engine still serves correctly
+    r = Request(uid=9, prompt=[3, 4, 5], max_new_tokens=4)
+    eng.submit(r)
+    eng.run()
+    assert r.done and len(r.output) == 4
+
+
+# ---------------------------------------------------------------------------
+# training chaos
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def train_setup():
+    sys_cfg = dataclasses.replace(
+        DEFAULT_SYSTEM, num_clients=K, total_bandwidth_hz=50e6,
+        f_server_hz=0.4e9, f_client_hz_range=(0.2e9, 5.0e9))
+    envs = tuple(sample_clients(sys_cfg, 3))
+    prob = Problem(cfg=get_arch("gpt2-s").reduced(
+                       num_layers=2 if SMOKE else 4),
+                   sys_cfg=sys_cfg, envs=envs, seq_len=S, batch=B,
+                   local_steps=I, rank_candidates=(1, 2, 4))
+    alloc, _ = bcd_minimize_delay_per_client(prob)
+    params = M.init_params(prob.cfg, jax.random.key(0))
+    return prob, alloc, params
+
+
+def _trainer(train_setup, episode_path="", episode_every=0, **wd_kw):
+    prob, alloc, params = train_setup
+    sfl = SflLLM.from_allocation(prob, alloc, params, optimizer=adamw(1e-3),
+                                 dynamic=True)
+    wd_kw.setdefault("fade_std_db", 2.0)
+    wd_kw.setdefault("rng", 0)
+    wd = WirelessDynamics(prob, alloc, sfl, **wd_kw)
+    tr = Trainer(SflRound(sfl, [1.0] * K), local_steps=I, dynamics=wd,
+                 episode_path=episode_path, episode_every=episode_every)
+    st = sfl.init_state(sfl.init_lora(jax.random.key(7)))
+    return sfl, wd, tr, st
+
+
+def _const_data(prob):
+    tokens = np.random.default_rng(0).integers(
+        0, prob.cfg.vocab_size, (K, B, S)).astype(np.int32)
+    batch = {"tokens": tokens, "labels": tokens.copy()}
+    return iter(lambda: batch, None)
+
+
+def _leaves_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def test_outage_episode_retx_and_single_trace(train_setup):
+    """Outage-aware rounds: E[m] >= 1 retransmission multipliers reach the
+    traced delay twin, hard outages surface in the info dict, and the
+    whole episode still runs on ONE compiled trace."""
+    prob, _, _ = train_setup
+    sfl, wd, tr, st = _trainer(train_setup, deadline_s=1e9,
+                               outage_snr_db=0.0, max_harq=3)
+    dyn, info = wd.round_dynamics()
+    retx = np.asarray(dyn.retx_main)
+    assert retx.shape == (K,) and (retx >= 1.0).all() and (retx <= 3.0).all()
+    assert dyn.participation is not None
+    assert "hard_outages" in info
+    _, hist = tr.fit(st, _const_data(prob), global_rounds=2)
+    assert sfl._round_traces == 1
+    assert np.isfinite(hist.losses).all()
+
+
+def test_outage_burst_freezes_round_and_recovers(train_setup):
+    """A forced p=1 burst hard-outages every client: that round's adapters
+    are bit-frozen (nobody aggregated), and clearing the burst resumes
+    training — all on the same trace."""
+    prob, _, _ = train_setup
+    sfl, wd, tr, st = _trainer(train_setup, outage_snr_db=0.0, max_harq=2)
+    tf = TrainingFaults(wd)
+    st1, h1 = tr.fit(st, _const_data(prob), global_rounds=1)
+    before = jax.device_get((st1.lora_client, st1.lora_server))
+    tf.outage_burst(1.0)
+    st2, h2 = tr.fit(st1, _const_data(prob), global_rounds=1)
+    assert h2.participation[-1] == [0] * K
+    assert _leaves_equal(before[0], st2.lora_client)
+    assert _leaves_equal(before[1], st2.lora_server)
+    frozen = jax.device_get(st2.lora_client)
+    tf.clear_outage()
+    st3, h3 = tr.fit(st2, _const_data(prob), global_rounds=1)
+    assert sum(h3.participation[-1]) > 0
+    assert not _leaves_equal(frozen, st3.lora_client)
+    assert sfl._round_traces == 1
+
+
+def test_quiet_injectors_bitwise_and_poison_rolls_back(train_setup):
+    """(a) an episode with injectors attached but never fired reproduces
+    the fault-free trajectory bit for bit; (b) a poisoned round trips the
+    divergence sentinel and rolls back to the last-good state exactly —
+    and the rollback is recorded in the history."""
+    prob, _, _ = train_setup
+    _, _, tr_plain, st_p = _trainer(train_setup, deadline_s=1e9)
+    _, h_plain = tr_plain.fit(st_p, _const_data(prob), global_rounds=2)
+
+    sfl, wd, tr, st = _trainer(train_setup, deadline_s=1e9)
+    tf = TrainingFaults(wd)                 # armed (traced 0), never fired
+    st1, h_armed = tr.fit(st, _const_data(prob), global_rounds=2)
+    assert h_armed.losses == h_plain.losses     # bitwise float equality
+    assert h_armed.rolled_back_rounds == []
+
+    good = jax.device_get(st1)
+    tf.poison_round()
+    st2, h_poison = tr.fit(st1, _const_data(prob), global_rounds=1)
+    assert h_poison.rolled_back_rounds == [0]
+    assert _leaves_equal(good, jax.device_get(st2))     # bit-identical
+    assert sfl._round_traces == 1           # poison never retraced
+
+
+def test_episode_kill_resume_bitwise(train_setup, tmp_path):
+    """Kill a fading+deadline+outage episode after its checkpoint round,
+    resume in a fresh Trainer: losses, participation and final state are
+    bit-equal to the uninterrupted run (RNG cursors, allocation and data
+    stream all restored)."""
+    prob, _, _ = train_setup
+    kw = dict(fade_std_db=6.0, fade_rho=0.5, deadline_factor=1.2,
+              outage_snr_db=-10.0)
+
+    def data():
+        rng = np.random.default_rng(0)
+        while True:
+            t = rng.integers(0, prob.cfg.vocab_size,
+                             (K, B, S)).astype(np.int32)
+            yield {"tokens": t, "labels": t.copy()}
+
+    p_ref = str(tmp_path / "ref.ckpt")
+    p_kill = str(tmp_path / "kill.ckpt")
+    _, _, tr, st = _trainer(train_setup, episode_path=p_ref,
+                            episode_every=2, **kw)
+    st_ref, h_ref = tr.fit(st, data(), global_rounds=4)
+
+    _, _, tr1, st1 = _trainer(train_setup, episode_path=p_kill,
+                              episode_every=2, **kw)
+    tr1.fit(st1, data(), global_rounds=2)       # "killed" after round 2
+    _, _, tr2, st2 = _trainer(train_setup, episode_path=p_kill,
+                              episode_every=2, **kw)   # fresh cursors
+    st_res, h_res = tr2.fit(st2, data(), global_rounds=4, resume=True)
+
+    assert h_res.losses == h_ref.losses         # bitwise
+    assert h_res.participation == h_ref.participation
+    assert _leaves_equal(jax.device_get(st_ref), jax.device_get(st_res))
