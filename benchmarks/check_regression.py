@@ -101,6 +101,27 @@ GATES = [
         "faults/steps_chaos",
         "faults/steps_clean",
     ),
+    (
+        # defended final eval loss vs the clean run's, both deterministic
+        # milli-loss rows from the same fixed episode: the ratio is
+        # noise-free and catches any erosion of the robust aggregation +
+        # quarantine defense (baseline ~1.0 — the defense fully tracks
+        # the clean trajectory)
+        "BENCH_byzantine.json",
+        "byzantine_defended_loss",
+        "byzantine/loss_defended_milli",
+        "byzantine/loss_clean_milli",
+    ),
+    (
+        # attacker-rounds participated / attacker-rounds total under the
+        # fixed attack schedule (deterministic counts): catches a
+        # detection regression that lets attackers stay in the average
+        # longer before quarantine engages
+        "BENCH_byzantine.json",
+        "byzantine_attacker_exposure",
+        "byzantine/attacker_exposure",
+        "byzantine/attacker_rounds_total",
+    ),
 ]
 
 
@@ -112,6 +133,7 @@ SUITE_FOR_FILE = {
     "BENCH_resource.json": "resource",
     "BENCH_dynamic.json": "dynamic",
     "BENCH_faults.json": "faults",
+    "BENCH_byzantine.json": "byzantine",
 }
 
 

@@ -12,6 +12,7 @@
   resource bench_resource    BCD wall time + homogeneous-vs-hetero delay
   dynamic bench_dynamic      dynamic-round overhead + adaptive re-allocation
   faults  bench_faults       failure-recovery cost: preemption recompute + rollback
+  byzantine bench_byzantine  attacker damage vs robust-aggregation defense
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only table4,fig5 ...]
 """
@@ -23,9 +24,10 @@ import sys
 import time
 import traceback
 
-from . import (bench_complexity, bench_convergence, bench_dynamic,
-               bench_faults, bench_kernels, bench_latency, bench_ppl,
-               bench_resource, bench_roofline, bench_serving, bench_traffic)
+from . import (bench_byzantine, bench_complexity, bench_convergence,
+               bench_dynamic, bench_faults, bench_kernels, bench_latency,
+               bench_ppl, bench_resource, bench_roofline, bench_serving,
+               bench_traffic)
 
 SUITES = {
     "table3": bench_complexity.main,
@@ -39,6 +41,7 @@ SUITES = {
     "resource": bench_resource.main,
     "dynamic": bench_dynamic.main,
     "faults": bench_faults.main,
+    "byzantine": bench_byzantine.main,
 }
 
 # perf-trajectory snapshots: these row prefixes land in JSON files CI
@@ -52,6 +55,7 @@ SNAPSHOTS = {
     "BENCH_resource.json": ("resource/",),
     "BENCH_dynamic.json": ("dynamic/",),
     "BENCH_faults.json": ("faults/",),
+    "BENCH_byzantine.json": ("byzantine/",),
 }
 
 

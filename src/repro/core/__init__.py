@@ -1,8 +1,11 @@
 """The paper's primary contribution: SflLLM — split federated LoRA
 fine-tuning (Algorithm 1) + joint resource allocation (Algorithms 2-3)."""
-from .aggregation import (broadcast_het, broadcast_stacked, fedavg,
+from .aggregation import (RobustAggConfig, broadcast_het, broadcast_stacked,
+                          clip_updates, coordinate_median, fedavg,
                           fedavg_het, fedavg_partial, fedavg_stacked,
-                          tree_all_finite)
+                          robust_aggregate, tree_all_finite, trimmed_mean)
+from .defense import (ByzantineOps, DefenseConfig, ReputationTracker,
+                      corrupt_updates)
 from .channel import (ClientEnv, FadingProcess, expected_transmissions,
                       fade_clients, outage_probability, residual_outage,
                       sample_clients)
@@ -28,7 +31,10 @@ from .workload import layer_workloads, lm_head_flops
 
 __all__ = [
     "fedavg", "fedavg_het", "fedavg_partial", "fedavg_stacked",
-    "broadcast_het", "broadcast_stacked", "tree_all_finite", "ClientEnv",
+    "broadcast_het", "broadcast_stacked", "tree_all_finite",
+    "RobustAggConfig", "robust_aggregate", "clip_updates", "trimmed_mean",
+    "coordinate_median", "ByzantineOps", "DefenseConfig",
+    "ReputationTracker", "corrupt_updates", "ClientEnv",
     "FadingProcess", "expected_transmissions", "outage_probability",
     "residual_outage", "fade_clients", "sample_clients",
     "ConvergenceModel", "DEFAULT_E",

@@ -1,0 +1,241 @@
+"""Trust-boundary defense of the federated aggregation step.
+
+Two halves, matching the two sides of the boundary:
+
+* **Attack model** (:class:`ByzantineOps`, :func:`corrupt_updates`) —
+  traced per-client corruption of the uploaded adapter updates, applied
+  INSIDE the compiled round between the local-step scan and
+  aggregation: sign flip, scale blow-up, additive Gaussian noise and
+  stale-update replay.  Every operand is traced data (the corruption
+  pattern changes round to round with no retrace) and the benign
+  setting is a bit-exact no-op — each client's corrupted reconstruction
+  is selected by ``jnp.where`` on its own armed flag, so an unarmed
+  client's upload is the unmodified array, bit for bit.
+  ``repro.faults.TrainingFaults`` drives these operands.
+
+* **Reputation / quarantine** (:class:`DefenseConfig`,
+  :class:`ReputationTracker`) — a host-side EWMA over the in-graph
+  anomaly scores (``core.aggregation.anomaly_scores``): clients flagged
+  repeatedly (update norm an outlier vs the round median, or cosine
+  distance to the robust aggregate past a threshold) are quarantined
+  for Q rounds by zeroing their participation mask — which composes
+  *multiplicatively* with deadline-straggler dropout and hard-outage
+  masks and is already traced data, so quarantining never recompiles.
+  The tracker state is JSON-serializable and rides the episode
+  checkpoint cursor, so ``fit(resume=True)`` is bit-reproducible under
+  an active quarantine.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# attack model: traced per-client corruption of the uploaded updates
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclass
+class ByzantineOps:
+    """Traced per-client corruption operands for one round.
+
+    sign       (K,) f32 0/1 — 1 flips the sign of the client's update;
+    scale      (K,) f32 — multiplies the update (1.0 = benign);
+    noise_std  (K,) f32 — std of additive Gaussian noise (0.0 = benign);
+    replay     (K,) f32 0/1 — 1 replaces the upload with the client's
+               stale pre-round adapter (zero update — the client
+               "replays" the weights it was broadcast);
+    key        (2,) u32 PRNG key for the noise draws (traced data; the
+               host folds the round index in, so noise varies per round
+               on one trace).
+
+    The benign configuration (sign=0, scale=1, noise_std=0, replay=0)
+    is a **bit-exact no-op**: per client, ``jnp.where`` on that
+    client's armed flag selects the original upload array unchanged.
+    """
+
+    sign: jax.Array
+    scale: jax.Array
+    noise_std: jax.Array
+    replay: jax.Array
+    key: jax.Array
+
+    @classmethod
+    def benign(cls, num_clients: int, seed: int = 0) -> "ByzantineOps":
+        K = num_clients
+        return cls(sign=jnp.zeros(K, jnp.float32),
+                   scale=jnp.ones(K, jnp.float32),
+                   noise_std=jnp.zeros(K, jnp.float32),
+                   replay=jnp.zeros(K, jnp.float32),
+                   key=jax.random.PRNGKey(seed))
+
+
+def corrupt_updates(stacked: Any, ref: Any, ops: ByzantineOps) -> Any:
+    """Apply the per-client corruption operands to the round's uploaded
+    adapters, in-graph.  ``stacked``/``ref`` are the post-scan and
+    pre-round K-stacked client adapter trees; corruption acts on the
+    update ``d_k = stacked_k - ref_k`` and reconstructs
+    ``ref_k + corrupt(d_k)`` — but ONLY for armed clients: a benign
+    client's leaf passes through the ``jnp.where`` untouched, so the
+    disarmed injector is bit-exact (no re-rounding through ``ref + d``).
+    """
+    armed_k = ((ops.sign > 0) | (ops.scale != 1.0)
+               | (ops.noise_std > 0) | (ops.replay > 0))        # (K,)
+    leaves_s = jax.tree.leaves(stacked)
+    leaves_r = jax.tree.leaves(ref)
+    treedef = jax.tree.structure(stacked)
+    out = []
+    for i, (s, r) in enumerate(zip(leaves_s, leaves_r)):
+        col = (-1,) + (1,) * (s.ndim - 1)
+        d = s.astype(jnp.float32) - r.astype(jnp.float32)
+        d = jnp.where(ops.sign.reshape(col) > 0, -d, d)
+        d = d * ops.scale.reshape(col)
+        noise = jax.random.normal(jax.random.fold_in(ops.key, i), d.shape)
+        d = jnp.where(ops.noise_std.reshape(col) > 0,
+                      d + ops.noise_std.reshape(col) * noise, d)
+        d = jnp.where(ops.replay.reshape(col) > 0, 0.0, d)
+        corrupted = (r.astype(jnp.float32) + d).astype(s.dtype)
+        out.append(jnp.where(armed_k.reshape(col), corrupted, s))
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# defense: host-side EWMA reputation + quarantine
+# ---------------------------------------------------------------------------
+
+@dataclass
+class DefenseConfig:
+    """Robust-aggregation + quarantine policy for a training episode.
+
+    Aggregator knobs (become the traced :class:`RobustAggConfig` of
+    every round — ``core.aggregation.robust_aggregate``):
+      clip              per-client L2 update cap (inf = off);
+      trim              coordinate-wise trimmed-mean count (0 = off);
+      median            use the coordinate median instead of the mean.
+
+    Reputation / quarantine knobs (host-side, this module):
+      norm_mult         flag a client whose update norm exceeds
+                        ``norm_mult`` x the round's median norm;
+      cos_threshold     flag a client whose cosine distance to its
+                        peers' leave-one-out aggregate exceeds this
+                        (1.0 = orthogonal — where benign clients with
+                        fully disjoint data already sit; a sign-flip
+                        against correlated peers scores ~2, so the
+                        default 1.5 splits the difference);
+      ewma              reputation smoothing r <- ewma*r + (1-ewma)*flag
+                        (only participants update);
+      rep_threshold     reputation above this quarantines the client;
+      quarantine_rounds Q — rounds a quarantined client sits out (its
+                        participation mask is zeroed); on release its
+                        reputation resets to 0 (clean slate).
+    """
+
+    clip: float = float("inf")
+    trim: int = 0
+    median: bool = False
+    norm_mult: float = 4.0
+    cos_threshold: float = 1.5
+    ewma: float = 0.5
+    rep_threshold: float = 0.6
+    quarantine_rounds: int = 4
+
+    def robust_config(self):
+        from .aggregation import RobustAggConfig
+        return RobustAggConfig.make(clip=self.clip, trim=self.trim,
+                                    median=self.median)
+
+
+class ReputationTracker:
+    """Deterministic host-side EWMA reputation + quarantine ledger.
+
+    Per round: :meth:`mask` supplies the (K,) 0/1 quarantine mask that
+    multiplies into the round's participation BEFORE it runs;
+    :meth:`observe` consumes the round's in-graph anomaly scores
+    afterwards, updating reputations (participants only) and ticking
+    quarantine counters.  Pure numpy — no RNG, no device state — so
+    :meth:`state` / :meth:`load_state` round-trip it through the JSON
+    episode cursor bit-exactly.
+    """
+
+    def __init__(self, num_clients: int, cfg: DefenseConfig):
+        self.cfg = cfg
+        self.reputation = np.zeros(num_clients, np.float64)
+        self.remaining = np.zeros(num_clients, np.int64)   # quarantine ticks
+        self.total_quarantines = 0
+
+    # -- round r, before running it ------------------------------------
+    def mask(self) -> np.ndarray:
+        """(K,) 0/1 participation multiplier: 0 while quarantined."""
+        return (self.remaining == 0).astype(np.float64)
+
+    # -- round r, after its scores come back ---------------------------
+    def observe(self, update_norm: Sequence[float],
+                cos_dist: Sequence[float],
+                participation: Sequence[float]) -> np.ndarray:
+        """Update reputations from one round's anomaly scores; returns
+        the (K,) bool flags raised this round.  Non-participants (late
+        stragglers, outages, the quarantined) are skipped entirely —
+        their zero update must not launder their reputation.  A
+        non-finite score is itself an anomaly (a NaN upload) and flags.
+        """
+        cfg = self.cfg
+        norm = np.asarray(update_norm, np.float64)
+        cosd = np.asarray(cos_dist, np.float64)
+        active = np.asarray(participation, np.float64) > 0
+        flags = np.zeros(norm.shape[0], bool)
+        if active.any():
+            med = float(np.median(norm[active]))
+            bad_norm = norm > max(cfg.norm_mult * med, 1e-12)
+            bad_cos = cosd > cfg.cos_threshold
+            bad_nan = ~np.isfinite(norm) | ~np.isfinite(cosd)
+            flags = active & (bad_norm | bad_cos | bad_nan)
+        self.reputation[active] = (cfg.ewma * self.reputation[active]
+                                   + (1.0 - cfg.ewma) * flags[active])
+        # tick existing quarantines; release resets reputation
+        ticking = self.remaining > 0
+        self.remaining[ticking] -= 1
+        released = ticking & (self.remaining == 0)
+        self.reputation[released] = 0.0
+        # new quarantines
+        newq = (self.remaining == 0) & ~released \
+            & (self.reputation > cfg.rep_threshold)
+        self.remaining[newq] = cfg.quarantine_rounds
+        self.total_quarantines += int(newq.sum())
+        return flags
+
+    # -- episode checkpoint round-trip ---------------------------------
+    def state(self) -> Dict[str, Any]:
+        """JSON-able snapshot; :meth:`load_state` restores it exactly
+        (floats survive JSON verbatim via repr round-tripping)."""
+        return {"reputation": self.reputation.tolist(),
+                "remaining": self.remaining.tolist(),
+                "total_quarantines": int(self.total_quarantines)}
+
+    def load_state(self, s: Dict[str, Any]) -> None:
+        self.reputation = np.asarray(s["reputation"], np.float64)
+        self.remaining = np.asarray(s["remaining"], np.int64)
+        self.total_quarantines = int(s["total_quarantines"])
+
+
+def byzantine_ops_arrays(host_ops: Dict[str, Any], round_idx: int
+                         ) -> ByzantineOps:
+    """Host dict -> traced :class:`ByzantineOps` for one round, with the
+    round index folded into the noise key so every round draws fresh
+    noise on one trace.  ``host_ops`` keys: sign / scale / noise_std /
+    replay ((K,) numpy arrays) + seed (int)."""
+    return ByzantineOps(
+        sign=jnp.asarray(host_ops["sign"], jnp.float32),
+        scale=jnp.asarray(host_ops["scale"], jnp.float32),
+        noise_std=jnp.asarray(host_ops["noise_std"], jnp.float32),
+        replay=jnp.asarray(host_ops["replay"], jnp.float32),
+        key=jax.random.fold_in(jax.random.PRNGKey(int(host_ops["seed"])),
+                               int(round_idx)))
+
+
+__all__ = ["ByzantineOps", "DefenseConfig", "ReputationTracker",
+           "byzantine_ops_arrays", "corrupt_updates"]

@@ -68,7 +68,9 @@ from ..models.layers import apply_norm, embed, unembed
 from ..models.model import IGNORE_ID
 from ..models.stack import Runtime, default_train_runtime
 from ..optim import Optimizer, apply_updates
-from .aggregation import broadcast_het, fedavg_partial, tree_all_finite
+from .aggregation import (broadcast_het, fedavg_partial, robust_aggregate,
+                          tree_all_finite)
+from .defense import corrupt_updates
 from .latency import client_round_seconds, workload_tables
 from .lora import client_slot_masks
 from .split import layers_to_reps
@@ -161,6 +163,21 @@ class RoundDynamics:
                        values leaf-for-leaf (``jnp.where`` — bit-exact), so
                        an unpoisoned round of a chaos episode reproduces
                        the fault-free trajectory.
+      byzantine        :class:`core.defense.ByzantineOps` — traced per-client
+                       corruption of the uploaded adapter updates (sign
+                       flip / scale / noise / stale replay), applied inside
+                       the round between the scan and aggregation.  The
+                       benign operand set is a bit-exact no-op per client.
+
+    Robust aggregation (``core.aggregation``):
+      robust           :class:`RobustAggConfig` of traced scalars selecting
+                       the Byzantine-tolerant aggregator (norm clip /
+                       trimmed mean / median) for this round.  When present
+                       the round also emits in-graph anomaly scores
+                       (``metrics["anomaly_scores"]``: per-client update
+                       norm + cosine distance to the robust aggregate).
+                       The disarmed configuration (clip=inf, trim=0,
+                       median=0) is bit-identical to ``fedavg_partial``.
     """
 
     participation: Optional[jax.Array] = None
@@ -177,6 +194,8 @@ class RoundDynamics:
     retx_main: Optional[jax.Array] = None
     retx_fed: Optional[jax.Array] = None
     poison: Optional[jax.Array] = None
+    robust: Optional[Any] = None
+    byzantine: Optional[Any] = None
 
 
 class SflLLM:
@@ -599,17 +618,32 @@ class SflLLM:
         Heterogeneous fleets aggregate slot-wise over each slot's owners
         and re-truncate on broadcast (fedavg_het/broadcast_het; exact
         fedavg_stacked when every client is full-rank/full-depth)."""
-        return self._aggregate_impl(state, weights, None, self._client_masks)
+        state, _ = self._aggregate_impl(state, weights, None,
+                                        self._client_masks)
+        return state
 
     def _aggregate_impl(self, state: SflState, weights: jax.Array, part,
-                        masks) -> SflState:
+                        masks, robust=None, ref=None):
         """Eq. 7 under (optional) partial participation: the global adapter
         is the survivors' weighted average (``fedavg_partial``); a dropped
         client missed the whole round — broadcast included — so it keeps
         its stale adapter bit-exactly and rejoins from it next round.
         If EVERY client dropped, the weight mass is zero and every client
-        keeps its state (no aggregation happened)."""
-        global_c = fedavg_partial(state.lora_client, weights, part, masks)
+        keeps its state (no aggregation happened).
+
+        ``robust`` (a traced :class:`RobustAggConfig`) swaps the plain
+        average for the Byzantine-tolerant aggregator and emits per-client
+        anomaly scores against ``ref`` (the pre-round stacked adapters);
+        the disarmed configuration selects the plain aggregate bit-exactly
+        (``core.aggregation.robust_aggregate``).  Returns
+        ``(state, scores-or-None)``."""
+        if robust is not None:
+            global_c, scores = robust_aggregate(
+                state.lora_client, ref, weights, part, masks, robust)
+        else:
+            global_c = fedavg_partial(state.lora_client, weights, part,
+                                      masks)
+            scores = None
         lc_k = broadcast_het(global_c, self.tc.num_clients, masks)
         if part is not None:
             pcol = lambda v: part.reshape((-1,) + (1,) * (v.ndim - 1))
@@ -618,7 +652,8 @@ class SflLLM:
                 lc_k, state.lora_client)
         return SflState(lora_client=lc_k, lora_server=state.lora_server,
                         opt_client=state.opt_client,
-                        opt_server=state.opt_server, step=state.step)
+                        opt_server=state.opt_server,
+                        step=state.step), scores
 
     def aggregate(self, state: SflState, sample_counts) -> SflState:
         """FedAvg client adapters + broadcast (eq. 7)."""
@@ -638,7 +673,8 @@ class SflLLM:
         return self._aggregate(state, weights), metrics
 
     def _train_round_part(self, state: SflState, round_batches, weights,
-                          part, cfg_dyn, poison=None):
+                          part, cfg_dyn, poison=None, robust=None,
+                          byz=None):
         """The one compiled global round every caller runs: scan + in-graph
         FedAvg with the (K,) participation mask — and optionally a whole
         re-allocated per-client configuration — as traced inputs.  Static
@@ -655,16 +691,34 @@ class SflLLM:
         round is bit-identical to the last-good state (the all-dropped
         identity, reached through a different trigger).  A finite round
         commits through ``where(True, new, old)``, which is bit-exact, so
-        the sentinel never perturbs a healthy trajectory."""
+        the sentinel never perturbs a healthy trajectory.
+
+        Byzantine round structure (both optional, fixed per episode):
+        ``byz`` (:class:`core.defense.ByzantineOps`) corrupts the uploaded
+        adapter updates between the scan and aggregation — traced
+        per-client operands, benign values a bit-exact no-op; ``robust``
+        (:class:`RobustAggConfig`) swaps FedAvg for the in-graph
+        Byzantine-tolerant aggregator and adds per-client anomaly scores
+        to the metrics (update norm + cosine distance to the robust
+        aggregate), measured against the pre-round broadcast adapters."""
         self._round_traces += 1       # trace-time only: retrace telemetry
         masks = (cfg_dyn["slot_masks"]
                  if cfg_dyn is not None
                  and cfg_dyn.get("slot_masks") is not None
                  else self._client_masks)
+        ref = state.lora_client       # pre-round (post-broadcast) adapters
         new, metrics = jax.lax.scan(
             lambda st, b: self._step_impl(st, b, cfg_dyn, part),
             state, round_batches)
-        new = self._aggregate_impl(new, weights, part, masks)
+        if byz is not None:
+            # corrupted uploads: the radio payload between client and
+            # federated server — optimizer moments stay the client's own
+            new = SflState(
+                lora_client=corrupt_updates(new.lora_client, ref, byz),
+                lora_server=new.lora_server, opt_client=new.opt_client,
+                opt_server=new.opt_server, step=new.step)
+        new, scores = self._aggregate_impl(new, weights, part, masks,
+                                           robust, ref)
         if poison is not None:
             # deterministic fault injection: poison > 0 NaNs the aggregated
             # server adapter; poison == 0 keeps the clean values bit-exactly
@@ -678,8 +732,10 @@ class SflLLM:
         finite = tree_all_finite(new)
         state = jax.tree.map(lambda n, o: jnp.where(finite, n, o),
                              new, state)
-        return state, dict(metrics, participation=part,
-                           rolled_back=~finite)
+        metrics = dict(metrics, participation=part, rolled_back=~finite)
+        if scores is not None:
+            metrics["anomaly_scores"] = scores
+        return state, metrics
 
     def _dropout_mask(self, rates_main, rates_fed, f_hz, kappa, ell, rank,
                       deadline_s, retx_main, retx_fed,
@@ -761,7 +817,7 @@ class SflLLM:
                 (part, cfg_dyn),
                 round_dynamics_shardings((part, cfg_dyn), self.mesh))
         return self._jit_round_part(state, batches, weights, part, cfg_dyn,
-                                    dyn.poison)
+                                    dyn.poison, dyn.robust, dyn.byzantine)
 
     def allocation_dynamics(self, ell_k, rank_k) -> Dict[str, Any]:
         """A per-client allocation decision as RoundDynamics kwargs (``ell``

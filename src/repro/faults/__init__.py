@@ -1,10 +1,13 @@
 """Failure-hardening toolkit: deterministic fault injection for the
 serving engine (page exhaustion, slot crashes, NaN pokes) and the
-wireless training loop (outage bursts, divergence poison).  The recovery
-machinery itself lives with the engines — ``serving.engine`` (preemptive
-eviction, requeue recompute, NaN quarantine, reservation audit) and
-``core.sfl`` / ``launch.engine`` (HARQ retransmissions, divergence
-rollback, episode kill/resume); this package only *drives* it."""
+wireless training loop (outage bursts, divergence poison, Byzantine
+update corruption — sign flip / scale blow-up / Gaussian noise / stale
+replay).  The recovery machinery itself lives with the engines —
+``serving.engine`` (preemptive eviction, requeue recompute, NaN
+quarantine, reservation audit) and ``core.sfl`` / ``core.defense`` /
+``launch.engine`` (HARQ retransmissions, divergence rollback, robust
+aggregation + reputation quarantine, episode kill/resume); this package
+only *drives* it."""
 from .inject import ServingFaults, TrainingFaults
 
 __all__ = ["ServingFaults", "TrainingFaults"]

@@ -69,7 +69,15 @@ class TrainingFaults:
     """Fault injection for a :class:`repro.launch.engine.WirelessDynamics`
     episode.  Attaching the injector arms the poison channel (a constant
     traced 0/1 scalar) BEFORE the first round, so the episode's traced
-    structure is fixed up front and firing a poison later cannot retrace."""
+    structure is fixed up front and firing a poison later cannot retrace.
+
+    Byzantine injectors (:meth:`arm_byzantine` + ``sign_flip`` /
+    ``scale_blowup`` / ``gaussian_noise`` / ``replay_stale``) corrupt the
+    per-client adapter updates INSIDE the compiled round
+    (``core.defense.corrupt_updates``) through traced per-client operands
+    — arm before round 1, flip attackers on and off freely after: values
+    are data, never structure.  Benign operands (sign=0, scale=1, std=0,
+    replay=0) are a bit-exact no-op per client."""
 
     def __init__(self, dynamics):
         self.dynamics = dynamics
@@ -92,3 +100,54 @@ class TrainingFaults:
         divergence sentinel must roll that round back to the last good
         state bit-for-bit.  One-shot: auto-disarms after the round."""
         self.dynamics.poison_next = True
+
+    # -- byzantine corruption of uploaded updates -------------------------
+    def arm_byzantine(self, seed: int = 0) -> None:
+        """Arm the per-client corruption channel with benign operands —
+        call BEFORE the first round so the episode's traced structure is
+        fixed; an armed-but-benign episode is bit-identical to an unarmed
+        one (every client's upload passes its ``jnp.where`` untouched)."""
+        import numpy as np
+        if self.dynamics.byzantine_ops is None:
+            K = len(self.dynamics.prob.envs)
+            self.dynamics.byzantine_ops = {
+                "sign": np.zeros(K, np.float32),
+                "scale": np.ones(K, np.float32),
+                "noise_std": np.zeros(K, np.float32),
+                "replay": np.zeros(K, np.float32),
+                "seed": int(seed),
+            }
+
+    def _byz(self) -> dict:
+        if self.dynamics.byzantine_ops is None:
+            raise RuntimeError("call arm_byzantine() before the first round"
+                               " — corruption operands must be in the trace"
+                               " from round 1")
+        return self.dynamics.byzantine_ops
+
+    def sign_flip(self, clients) -> None:
+        """Flip the sign of these clients' updates every following round
+        (gradient-ascent attackers) until cleared."""
+        self._byz()["sign"][list(clients)] = 1.0
+
+    def scale_blowup(self, clients, factor: float = 100.0) -> None:
+        """Scale these clients' updates by ``factor`` (norm-clip fodder)."""
+        self._byz()["scale"][list(clients)] = float(factor)
+
+    def gaussian_noise(self, clients, std: float = 1.0) -> None:
+        """Add N(0, std^2) noise to these clients' updates (fresh draws
+        per round from the armed seed + round index — deterministic)."""
+        self._byz()["noise_std"][list(clients)] = float(std)
+
+    def replay_stale(self, clients) -> None:
+        """These clients replay their stale pre-round adapter (zero
+        update) instead of their trained one."""
+        self._byz()["replay"][list(clients)] = 1.0
+
+    def clear_byzantine(self) -> None:
+        """Back to benign operands (stays armed: same traced structure)."""
+        ops = self._byz()
+        ops["sign"][:] = 0.0
+        ops["scale"][:] = 1.0
+        ops["noise_std"][:] = 0.0
+        ops["replay"][:] = 0.0

@@ -206,14 +206,33 @@ class WirelessDynamics:
       max_harq         HARQ attempt cap m >= 1;
       outage_rng       seed/Generator for the hard-outage Bernoulli draws.
 
+    Byzantine robustness (``defense``: a ``core.defense.DefenseConfig``):
+    every round then runs the in-graph robust aggregator
+    (``core.aggregation.robust_aggregate`` — norm clip / trimmed mean /
+    median as traced scalars) and emits per-client anomaly scores; a
+    host-side ``ReputationTracker`` EWMAs the scores and quarantines
+    repeatedly-flagged clients for Q rounds by zeroing their
+    participation — composing MULTIPLICATIVELY with deadline-straggler
+    dropout and hard-outage masks.  The mask is already traced data, so
+    quarantining (and releasing) never recompiles; with the aggregator
+    knobs disarmed (clip=inf, trim=0, median off) the rounds are
+    bit-identical to a defense-free episode.
+
     Fault-injection hooks (``faults.inject.TrainingFaults`` drives these;
-    both are traced DATA, so flipping them mid-episode never retraces):
+    all are traced DATA, so flipping them mid-episode never retraces):
       outage_override  None, or per-round outage probability override
                        (scalar or (K,)) replacing the channel-derived p;
       poison_next      None (no sentinel input in the trace), or bool —
                        True NaNs the next round's aggregated server adapter
                        in-graph, deterministically exercising divergence
                        rollback; auto-resets to False after firing.
+      byzantine_ops    None, or a host dict of per-client corruption
+                       operands (sign / scale / noise_std / replay + seed)
+                       entering every round as a traced
+                       ``core.defense.ByzantineOps`` — armed before round
+                       1 by ``TrainingFaults.arm_byzantine`` so the traced
+                       structure is fixed up front; benign values are a
+                       bit-exact no-op.
     """
 
     def __init__(self, prob, alloc, sfl, *, fade_std_db: float = 4.0,
@@ -222,7 +241,7 @@ class WirelessDynamics:
                  drift_threshold: Optional[float] = None,
                  max_sweeps: int = 2, rng=0,
                  outage_snr_db: Optional[float] = None, max_harq: int = 4,
-                 outage_rng=0):
+                 outage_rng=0, defense=None):
         from ..core.channel import FadingProcess
         from ..core.latency import workload_tables
         from ..core.resource import as_hetero, total_delay
@@ -244,6 +263,13 @@ class WirelessDynamics:
                            if isinstance(outage_rng, int) else outage_rng)
         self.outage_override = None     # faults.inject: per-round p override
         self.poison_next: Optional[bool] = None  # faults.inject: NaN poke
+        self.byzantine_ops = None       # faults.inject: corruption operands
+        self._round_idx = 0             # byzantine noise-key cursor
+        self.defense = defense
+        self.tracker = None
+        if defense is not None:
+            from ..core.defense import ReputationTracker
+            self.tracker = ReputationTracker(len(prob.envs), defense)
         if drift_threshold is not None:
             # fail fast: a drift-triggered re-allocation may pick ANY
             # (ell, rank) in prob's search space — a trainer whose capacity
@@ -350,15 +376,25 @@ class WirelessDynamics:
             survival = (~hard).astype(np.float32)
             info["hard_outages"] = hard.astype(int).tolist()
 
+        # -- quarantine: the reputation tracker's mask composes with every
+        # other dropout source (product of 0/1 masks); it rides the SAME
+        # traced explicit-participation input outages use, so an episode
+        # with defense on still runs one compiled round
+        explicit = survival
+        if self.tracker is not None:
+            qmask = self.tracker.mask()
+            info["quarantined"] = (1 - qmask).astype(int).tolist()
+            explicit = qmask if explicit is None else explicit * qmask
+
         t_k = self._client_seconds(envs_r, retx_m, retx_f)
         if self.deadline_s is not None:
             # f32 compare, matching the in-graph mask bit for bit
             part = (t_k <= np.float32(self.deadline_s)).astype(float)
         else:
             part = np.ones(len(envs_r))
-        if survival is not None:
-            part = part * survival          # compose: straggler AND outage
-        info["participation"] = part.astype(int).tolist()
+        if explicit is not None:
+            part = part * explicit     # compose: straggler AND outage AND
+        info["participation"] = part.astype(int).tolist()   # quarantine
         info["round_seconds"] = self._round_seconds(envs_r, rates_m, rates_f,
                                                     part)
 
@@ -369,6 +405,17 @@ class WirelessDynamics:
         if self.poison_next is not None:
             poison = jnp.float32(1.0 if self.poison_next else 0.0)
             self.poison_next = False
+
+        # robust aggregation + byzantine corruption: constant *structure*
+        # per episode (defense / arm_byzantine fixed before round 1), with
+        # every value a traced array — no retrace when knobs change
+        robust = (None if self.defense is None
+                  else self.defense.robust_config())
+        byz = None
+        if self.byzantine_ops is not None:
+            from ..core.defense import byzantine_ops_arrays
+            byz = byzantine_ops_arrays(self.byzantine_ops, self._round_idx)
+        self._round_idx += 1
 
         dyn = RoundDynamics(
             rates_main=jnp.asarray(rates_m, jnp.float32),
@@ -381,11 +428,25 @@ class WirelessDynamics:
                        else jnp.asarray(retx_m, jnp.float32)),
             retx_fed=(None if retx_f is None
                       else jnp.asarray(retx_f, jnp.float32)),
-            participation=(None if survival is None
-                           else jnp.asarray(survival, jnp.float32)),
+            participation=(None if explicit is None
+                           else jnp.asarray(explicit, jnp.float32)),
             poison=poison,
+            robust=robust,
+            byzantine=byz,
             **self._cfg_arrays)
         return dyn, info
+
+    # -- anomaly-score feedback (Trainer.fit calls this after each round) --
+    def observe_scores(self, scores: Dict[str, Any], participation) -> None:
+        """Feed one round's in-graph anomaly scores to the reputation
+        tracker (no-op without a defense).  ``participation`` is the
+        round's realized (K,) mask — non-participants never update their
+        reputation, so a quarantined client's frozen (zero) update cannot
+        launder its standing."""
+        if self.tracker is None:
+            return
+        self.tracker.observe(scores["update_norm"], scores["cos_dist"],
+                             participation)
 
     def _round_seconds(self, envs, rates_m, rates_f, part) -> float:
         """Modeled wall clock of this round: survivors' eq. 16-17 terms (the
@@ -418,6 +479,9 @@ class WirelessDynamics:
             "ref_delay": float(self.ref_delay),
             "deadline_s": (None if self.deadline_s is None
                            else float(self.deadline_s)),
+            "round_idx": int(self._round_idx),
+            "defense": (None if self.tracker is None
+                        else self.tracker.state()),
             "alloc": {
                 "assign_main": np.asarray(a.assign_main).tolist(),
                 "assign_fed": np.asarray(a.assign_fed).tolist(),
@@ -437,6 +501,9 @@ class WirelessDynamics:
         self.ref_delay = float(c["ref_delay"])
         self.deadline_s = (None if c["deadline_s"] is None
                            else float(c["deadline_s"]))
+        self._round_idx = int(c.get("round_idx", 0))
+        if self.tracker is not None and c.get("defense") is not None:
+            self.tracker.load_state(c["defense"])
         a = c["alloc"]
         self.alloc = HeteroAllocation(
             assign_main=np.asarray(a["assign_main"], int),
@@ -466,6 +533,11 @@ class TrainHistory:
     realloc_rounds: List[int] = field(default_factory=list)
     modeled_delays: List[float] = field(default_factory=list)  # total T per rnd
     rolled_back_rounds: List[int] = field(default_factory=list)  # divergence
+    # per-round in-graph anomaly scores ({"update_norm": [...K], "cos_dist":
+    # [...K]}) and 0/1 quarantine flags — populated when the episode runs a
+    # robust-aggregation defense (JSON-able: they ride episode checkpoints)
+    anomaly_scores: List[Dict[str, List[float]]] = field(default_factory=list)
+    quarantined: List[List[int]] = field(default_factory=list)
 
 
 class Trainer:
@@ -553,6 +625,20 @@ class Trainer:
                   if isinstance(metrics, dict) else None)
             if rb is not None and bool(jax.device_get(rb)):
                 history.rolled_back_rounds.append(e)
+            scores = (metrics.get("anomaly_scores")
+                      if isinstance(metrics, dict) else None)
+            if scores is not None:
+                s_host = {k: np.asarray(jax.device_get(v),
+                                        np.float64).tolist()
+                          for k, v in scores.items()}
+                history.anomaly_scores.append(s_host)
+                if info is not None:
+                    # close the loop: this round's scores update client
+                    # reputations, which shape the NEXT round's mask
+                    self.dynamics.observe_scores(s_host,
+                                                 info["participation"])
+            if info is not None and "quarantined" in info:
+                history.quarantined.append(info["quarantined"])
             if info is not None:
                 history.modeled_seconds += info["round_seconds"]
                 history.participation.append(info["participation"])

@@ -1,0 +1,370 @@
+"""Byzantine-robust aggregation: the federated trust boundary.
+
+Unit level: the robust aggregators (norm clip, trimmed mean, coordinate
+median) must be bit-identical to the plain weighted FedAvg when
+disarmed — including under partial participation and hetero slot
+masks — and must actually reject outliers when armed.  The corruption
+channel (``core.defense.corrupt_updates``) must be a per-client
+bit-exact no-op at benign operands.
+
+Episode level: defenses arm, re-tune and disarm mid-episode on ONE
+compiled round trace; anomaly scores separate sign-flippers (~2) from
+benign peers; the reputation tracker quarantines repeat offenders by
+zeroing their participation mask and releases them Q rounds later —
+all driven through ``WirelessDynamics(defense=...)`` +
+``repro.faults.TrainingFaults``.
+
+Set REPRO_SMOKE=1 (the CI chaos-smoke step does) to shrink shapes."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import models as M
+from repro.configs import DEFAULT_SYSTEM, get_arch
+from repro.core import (DefenseConfig, Problem, ReputationTracker,
+                        RobustAggConfig, SflLLM,
+                        bcd_minimize_delay_per_client, clip_updates,
+                        coordinate_median, corrupt_updates, fedavg_het,
+                        fedavg_partial, robust_aggregate, sample_clients,
+                        trimmed_mean)
+from repro.core.aggregation import update_norms
+from repro.core.defense import ByzantineOps
+from repro.core.sfl import RoundDynamics
+from repro.faults import TrainingFaults
+from repro.launch.engine import SflRound, Trainer, WirelessDynamics
+from repro.optim import adamw
+
+SMOKE = bool(os.environ.get("REPRO_SMOKE"))
+K, B, S, I = 3, 2, 16, 2
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb))
+
+
+def _fleet(seed=0, k=5):
+    rng = np.random.default_rng(seed)
+    stacked = {"a": jnp.asarray(rng.normal(size=(k, 3, 4)), jnp.float32),
+               "b": jnp.asarray(rng.normal(size=(k, 2)), jnp.float32)}
+    ref = {"a": jnp.asarray(rng.normal(size=(k, 3, 4)), jnp.float32),
+           "b": jnp.asarray(rng.normal(size=(k, 2)), jnp.float32)}
+    w = jnp.asarray(rng.uniform(1.0, 3.0, k), jnp.float32)
+    part = jnp.asarray(rng.integers(0, 2, k).clip(max=1), jnp.float32
+                       ).at[0].set(1.0)
+    masks = {"a": jnp.asarray(rng.integers(0, 2, (k, 3, 4)), jnp.float32),
+             "b": jnp.ones((k, 2), jnp.float32)}
+    return stacked, ref, w, part, masks
+
+
+# ---------------------------------------------------------------------------
+# disarmed path: bit-identical to the plain weighted FedAvg
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_part", [False, True])
+@pytest.mark.parametrize("use_masks", [False, True])
+def test_disarmed_bitwise_equals_fedavg_partial(use_part, use_masks):
+    """clip=inf / trim=0 / median=0 selects the UNCHANGED fedavg_partial
+    graph leaf-for-leaf — uniform and hetero fleets, full and partial
+    participation."""
+    stacked, ref, w, part, masks = _fleet(1)
+    p = part if use_part else None
+    m = masks if use_masks else None
+    plain = fedavg_partial(stacked, w, p, m)
+    agg, scores = robust_aggregate(stacked, ref, w, p, m,
+                                   RobustAggConfig.off())
+    assert _leaves_equal(plain, agg)
+    assert scores["update_norm"].shape == (5,)
+    assert scores["cos_dist"].shape == (5,)
+
+
+def test_trim_zero_is_weighted_fedavg_het():
+    """trimmed_mean's selection mask multiplies the weight mass by exactly
+    1.0 at trim=0 — bit-identical to the slot-wise weighted average."""
+    stacked, _, w, part, masks = _fleet(2)
+    tm = trimmed_mean(stacked, w, part, masks, jnp.int32(0))
+    het = fedavg_het(stacked, w * part, masks)
+    assert _leaves_equal(tm, het)
+
+
+def test_clip_inf_is_bitwise_noop_and_finite_caps():
+    stacked, ref, _, _, _ = _fleet(3)
+    c, norms = clip_updates(stacked, ref, jnp.float32(jnp.inf))
+    assert _leaves_equal(c, stacked)            # never re-rounds ref + d
+    cap = 0.25 * float(norms.min())
+    c2, pre = clip_updates(stacked, ref, jnp.float32(cap))
+    assert np.array_equal(np.asarray(pre), np.asarray(norms))   # pre-clip
+    assert float(update_norms(c2, ref).max()) <= cap * (1 + 1e-5)
+
+
+# ---------------------------------------------------------------------------
+# armed path: outliers actually rejected
+# ---------------------------------------------------------------------------
+
+def test_trimmed_mean_and_median_reject_outlier():
+    stacked, _, w, _, _ = _fleet(4)
+    hot = jax.tree.map(lambda v: v.at[0].set(1e6), stacked)
+    ones = jnp.ones_like(w)
+    tm = trimmed_mean(hot, ones, None, None, jnp.int32(1))
+    med = coordinate_median(hot, ones, None, None)
+    assert float(jnp.abs(tm["a"]).max()) < 10.0
+    assert float(jnp.abs(med["a"]).max()) < 10.0
+    # plain mean is dragged to ~2e5 by the same outlier
+    assert float(jnp.abs(fedavg_partial(hot, ones, None, None)["a"]).max()) > 1e4
+
+
+def test_trim_clamps_to_keep_one_survivor():
+    """trim larger than the owner count must clamp per-coordinate, never
+    produce an empty average (nv=1 slots keep their sole owner)."""
+    stacked, _, w, _, masks = _fleet(5)
+    solo = jax.tree.map(lambda m: m.at[1:].set(0.0), masks)   # client 0 only
+    tm = trimmed_mean(stacked, w, None, solo, jnp.int32(3))
+    het = fedavg_het(stacked, w, solo)
+    assert _leaves_equal(tm, het)               # nothing left to trim
+
+
+def test_median_of_identical_fleet_is_the_value():
+    stacked, _, w, _, _ = _fleet(6)
+    same = jax.tree.map(lambda v: jnp.broadcast_to(v[:1], v.shape).copy(),
+                        stacked)
+    med = coordinate_median(same, w, None, None)
+    assert np.allclose(np.asarray(med["a"]), np.asarray(same["a"][0]),
+                       atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# corruption channel
+# ---------------------------------------------------------------------------
+
+def test_benign_corruption_is_bitwise_noop():
+    stacked, ref, _, _, _ = _fleet(7)
+    out = corrupt_updates(stacked, ref, ByzantineOps.benign(5))
+    assert _leaves_equal(out, stacked)
+
+
+def test_corruption_modes_touch_only_armed_clients():
+    stacked, ref, _, _, _ = _fleet(8)
+    k = 5
+    ops = ByzantineOps(sign=jnp.zeros(k).at[0].set(1.0),
+                       scale=jnp.ones(k).at[1].set(50.0),
+                       noise_std=jnp.zeros(k).at[2].set(1.0),
+                       replay=jnp.zeros(k).at[3].set(1.0),
+                       key=jax.random.PRNGKey(0))
+    out = corrupt_updates(stacked, ref, ops)
+    d_in = jax.tree.map(lambda s, r: s - r, stacked, ref)
+    d_out = jax.tree.map(lambda s, r: s - r, out, ref)
+    assert np.allclose(np.asarray(d_out["a"][0]), -np.asarray(d_in["a"][0]),
+                       atol=1e-5)                               # sign flip
+    assert np.allclose(np.asarray(d_out["a"][1]),
+                       50.0 * np.asarray(d_in["a"][1]), rtol=1e-4)
+    assert not np.allclose(np.asarray(d_out["a"][2]),
+                           np.asarray(d_in["a"][2]), atol=1e-3)  # noisy
+    assert np.allclose(np.asarray(d_out["a"][3]), 0.0, atol=1e-5)  # replay
+    # client 4 disarmed: bit-exact passthrough
+    assert np.array_equal(np.asarray(out["a"][4]),
+                          np.asarray(stacked["a"][4]))
+    assert np.array_equal(np.asarray(out["b"][4]),
+                          np.asarray(stacked["b"][4]))
+
+
+def test_anomaly_scores_separate_attackers():
+    """Sign-flip vs correlated peers ~2 cosine distance, scale blow-up a
+    ~factor x norm, benign clients near 0 — the leave-one-out peer
+    aggregate keeps the attacker's own value out of its score."""
+    rng = np.random.default_rng(9)
+    k = 5
+    ref = {"a": jnp.asarray(rng.normal(size=(k, 16)), jnp.float32)}
+    d = jnp.asarray(rng.normal(size=(1, 16)), jnp.float32)
+    stacked = {"a": ref["a"] + jnp.broadcast_to(d, (k, 16))
+               + 0.01 * jnp.asarray(rng.normal(size=(k, 16)), jnp.float32)}
+    ops = ByzantineOps(sign=jnp.zeros(k).at[0].set(1.0),
+                       scale=jnp.ones(k).at[1].set(30.0),
+                       noise_std=jnp.zeros(k), replay=jnp.zeros(k),
+                       key=jax.random.PRNGKey(1))
+    bad = corrupt_updates(stacked, ref, ops)
+    _, scores = robust_aggregate(bad, ref, jnp.ones(k), None, None,
+                                 RobustAggConfig.make(trim=1))
+    cos = np.asarray(scores["cos_dist"])
+    norm = np.asarray(scores["update_norm"])
+    assert cos[0] > 1.8                         # anti-correlated
+    assert (cos[2:] < 0.2).all()                # benign band
+    assert norm[1] > 10.0 * np.median(norm)     # blow-up dominates
+
+
+# ---------------------------------------------------------------------------
+# reputation tracker (pure host state)
+# ---------------------------------------------------------------------------
+
+def test_reputation_tracker_quarantine_cycle():
+    cfg = DefenseConfig(ewma=0.5, rep_threshold=0.6, quarantine_rounds=2,
+                        cos_threshold=1.5)
+    t = ReputationTracker(3, cfg)
+    part = [1.0, 1.0, 1.0]
+    # two flagged rounds push client 0 over: rep 0.5 then 0.75 > 0.6
+    assert t.observe([1, 1, 1], [1.9, 0.1, 0.1], part).tolist() \
+        == [True, False, False]
+    assert t.mask().tolist() == [1.0, 1.0, 1.0]
+    t.observe([1, 1, 1], [1.9, 0.1, 0.1], part)
+    assert t.mask().tolist() == [0.0, 1.0, 1.0]
+    assert t.total_quarantines == 1
+    # quarantined client is skipped (zero update cannot launder rep) and
+    # released after Q clean observes with a reset reputation
+    t.observe([0, 1, 1], [0.0, 0.1, 0.1], [0.0, 1.0, 1.0])
+    assert t.mask().tolist() == [0.0, 1.0, 1.0]
+    t.observe([0, 1, 1], [0.0, 0.1, 0.1], [0.0, 1.0, 1.0])
+    assert t.mask().tolist() == [1.0, 1.0, 1.0]
+    assert t.reputation[0] == 0.0
+    # a NaN score is itself an anomaly
+    assert t.observe([np.nan, 1, 1], [0.1, 0.1, 0.1], part).tolist() \
+        == [True, False, False]
+
+
+def test_reputation_tracker_state_roundtrip():
+    import json
+    cfg = DefenseConfig()
+    t = ReputationTracker(4, cfg)
+    t.observe([9, 1, 1, 1], [0.2, 0.1, 0.1, 1.9], [1, 1, 1, 1])
+    s = json.loads(json.dumps(t.state()))       # through real JSON
+    t2 = ReputationTracker(4, cfg)
+    t2.load_state(s)
+    assert np.array_equal(t.reputation, t2.reputation)
+    assert np.array_equal(t.remaining, t2.remaining)
+    assert t2.total_quarantines == t.total_quarantines
+
+
+# ---------------------------------------------------------------------------
+# episode level: one trace, mid-episode toggling, quarantine end-to-end
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def train_setup():
+    sys_cfg = dataclasses.replace(
+        DEFAULT_SYSTEM, num_clients=K, total_bandwidth_hz=50e6,
+        f_server_hz=0.4e9, f_client_hz_range=(0.2e9, 5.0e9))
+    envs = tuple(sample_clients(sys_cfg, 3))
+    prob = Problem(cfg=get_arch("gpt2-s").reduced(
+                       num_layers=2 if SMOKE else 4),
+                   sys_cfg=sys_cfg, envs=envs, seq_len=S, batch=B,
+                   local_steps=I, rank_candidates=(1, 2, 4))
+    alloc, _ = bcd_minimize_delay_per_client(prob)
+    params = M.init_params(prob.cfg, jax.random.key(0))
+    return prob, alloc, params
+
+
+def _trainer(train_setup, defense=None, **wd_kw):
+    prob, alloc, params = train_setup
+    sfl = SflLLM.from_allocation(prob, alloc, params, optimizer=adamw(1e-3),
+                                 dynamic=True)
+    wd_kw.setdefault("fade_std_db", 2.0)
+    wd_kw.setdefault("rng", 0)
+    wd_kw.setdefault("deadline_s", 1e9)
+    wd = WirelessDynamics(prob, alloc, sfl, defense=defense, **wd_kw)
+    tr = Trainer(SflRound(sfl, [1.0] * K), local_steps=I, dynamics=wd)
+    st = sfl.init_state(sfl.init_lora(jax.random.key(7)))
+    return sfl, wd, tr, st
+
+
+def _shared_data(prob):
+    """Every client sees the SAME batch: benign updates correlate, so the
+    cosine score physically separates a sign-flipper (~2) from its peers."""
+    row = np.random.default_rng(0).integers(
+        0, prob.cfg.vocab_size, (1, B, S)).astype(np.int32)
+    tokens = np.broadcast_to(row, (K, B, S)).copy()
+    batch = {"tokens": tokens, "labels": tokens.copy()}
+    return iter(lambda: batch, None)
+
+
+def test_armed_benign_episode_bit_equals_plain(train_setup):
+    """A fleet with the corruption channel armed (benign operands) and no
+    defense reproduces the undefended trajectory bit for bit."""
+    _, _, tr0, st0 = _trainer(train_setup)
+    st0, h0 = tr0.fit(st0, _shared_data(train_setup[0]), global_rounds=2)
+    sfl, wd, tr1, st1 = _trainer(train_setup)
+    TrainingFaults(wd).arm_byzantine(seed=0)
+    st1, h1 = tr1.fit(st1, _shared_data(train_setup[0]), global_rounds=2)
+    assert h1.losses == h0.losses
+    assert _leaves_equal(jax.device_get(st0), jax.device_get(st1))
+    assert sfl._round_traces == 1
+
+
+def test_defense_toggles_mid_episode_one_trace(train_setup):
+    """clip/trim/median re-tuned every round through the SAME compiled
+    round: RobustAggConfig fields are traced scalars."""
+    prob, alloc, params = train_setup
+    sfl = SflLLM.from_allocation(prob, alloc, params, optimizer=adamw(1e-3),
+                                 dynamic=True)
+    st = sfl.init_state(sfl.init_lora(jax.random.key(7)))
+    tokens = np.random.default_rng(0).integers(
+        0, prob.cfg.vocab_size, (I, K, B, S)).astype(np.int32)
+    batch = {"tokens": tokens, "labels": tokens.copy()}
+    cfg_arrays = sfl.allocation_dynamics(alloc.ell_k, alloc.rank_k)
+    cfgs = [RobustAggConfig.off(), RobustAggConfig.make(trim=1),
+            RobustAggConfig.make(clip=0.05, median=True)]
+    byz = ByzantineOps.benign(K)
+    for robust in cfgs:
+        dyn = RoundDynamics(robust=robust, byzantine=byz, **cfg_arrays)
+        st, metrics = sfl.train_round(st, batch, [1.0] * K, dynamics=dyn)
+        assert "anomaly_scores" in metrics
+    assert sfl._round_traces == 1
+
+
+def test_sign_flip_quarantine_end_to_end(train_setup):
+    """f=1 sign-flipper: flagged by cosine distance, quarantined after the
+    EWMA crosses threshold, sits out Q rounds (participation zeroed),
+    released with a clean slate — one compiled round throughout, and the
+    whole cycle lands in TrainHistory."""
+    defense = DefenseConfig(trim=1, quarantine_rounds=3, ewma=0.5,
+                            rep_threshold=0.6, cos_threshold=1.5)
+    sfl, wd, tr, st = _trainer(train_setup, defense=defense)
+    tf = TrainingFaults(wd)
+    tf.arm_byzantine(seed=0)
+    tf.sign_flip([0])
+    st, h = tr.fit(st, _shared_data(train_setup[0]), global_rounds=6)
+    assert sfl._round_traces == 1
+    q = np.asarray(h.quarantined)               # (rounds, K)
+    assert q.shape == (6, K)
+    assert wd.tracker.total_quarantines >= 1
+    assert q[:, 0].sum() >= 3                   # attacker sat out Q rounds
+    assert q[:, 1:].sum() == 0                  # benign never flagged
+    # quarantine zeroes the attacker's participation those rounds
+    p = np.asarray(h.participation)
+    assert (p[q[:, 0] == 1, 0] == 0).all()
+    # scores surfaced every round, with the attacker's flagged rounds ~2
+    assert len(h.anomaly_scores) == 6
+    active = [r["cos_dist"][0] for r, qq in zip(h.anomaly_scores, q)
+              if qq[0] == 0]
+    assert max(active) > 1.8
+
+
+def test_defended_loss_tracks_clean_under_attack(train_setup):
+    """Trimmed mean + quarantine under a sign-flipper stays close to the
+    clean run; plain FedAvg under the same attacker falls behind (the
+    full-strength version of this is benchmarks/bench_byzantine.py)."""
+    rounds = 6
+    _, _, tr_c, st_c = _trainer(train_setup)
+    _, h_clean = tr_c.fit(st_c, _shared_data(train_setup[0]),
+                          global_rounds=rounds)
+    defense = DefenseConfig(trim=1, quarantine_rounds=3, cos_threshold=1.5)
+    _, wd_d, tr_d, st_d = _trainer(train_setup, defense=defense)
+    tfd = TrainingFaults(wd_d)
+    tfd.arm_byzantine(seed=0)
+    tfd.sign_flip([0])
+    _, h_def = tr_d.fit(st_d, _shared_data(train_setup[0]),
+                        global_rounds=rounds)
+    _, wd_p, tr_p, st_p = _trainer(train_setup)
+    tfp = TrainingFaults(wd_p)
+    tfp.arm_byzantine(seed=0)
+    tfp.sign_flip([0])
+    _, h_plain = tr_p.fit(st_p, _shared_data(train_setup[0]),
+                          global_rounds=rounds)
+    clean = h_clean.round_losses[-1]
+    drop_clean = h_clean.round_losses[0] - clean
+    drop_def = h_def.round_losses[0] - h_def.round_losses[-1]
+    drop_plain = h_plain.round_losses[0] - h_plain.round_losses[-1]
+    assert drop_def > 0.5 * drop_clean          # defense tracks clean
+    assert drop_def > drop_plain                # and beats plain FedAvg

@@ -130,3 +130,73 @@ def test_restore_episode_rejects_plain_checkpoint(tmp_path):
     save_pytree(path, {"a": jnp.zeros(2)})
     with pytest.raises(KeyError, match="episode"):
         restore_episode(path, {"a": jnp.zeros(2)})
+
+
+def test_episode_resume_under_active_quarantine(tmp_path):
+    """Kill/resume mid-quarantine: the reputation/remaining ledger and the
+    round index (Byzantine noise keys) ride the episode cursor, and
+    TrainHistory.anomaly_scores / .quarantined ride the history meta —
+    the resumed run must be bit-identical to the uninterrupted one,
+    including WHEN the attacker is released.  Fault-injection hooks are
+    transient by convention, so the harness re-arms the same attacker
+    after restore (exactly what a restarted chaos run does)."""
+    import dataclasses as dc
+
+    from repro.configs import DEFAULT_SYSTEM
+    from repro.core import (DefenseConfig, Problem,
+                            bcd_minimize_delay_per_client, sample_clients)
+    from repro.faults import TrainingFaults
+    from repro.launch.engine import SflRound, Trainer, WirelessDynamics
+    from repro.optim import adamw
+
+    K, B, S, I = 3, 2, 16, 2
+    sys_cfg = dc.replace(DEFAULT_SYSTEM, num_clients=K,
+                         total_bandwidth_hz=50e6, f_server_hz=0.4e9,
+                         f_client_hz_range=(0.2e9, 5.0e9))
+    envs = tuple(sample_clients(sys_cfg, 3))
+    prob = Problem(cfg=get_arch("gpt2-s").reduced(num_layers=2),
+                   sys_cfg=sys_cfg, envs=envs, seq_len=S, batch=B,
+                   local_steps=I, rank_candidates=(1, 2, 4))
+    alloc, _ = bcd_minimize_delay_per_client(prob)
+    params = M.init_params(prob.cfg, jax.random.key(0))
+    defense = DefenseConfig(trim=1, quarantine_rounds=3, ewma=0.5,
+                            rep_threshold=0.6, cos_threshold=1.5)
+
+    def trainer(path):
+        sfl = SflLLM.from_allocation(prob, alloc, params,
+                                     optimizer=adamw(1e-3), dynamic=True)
+        wd = WirelessDynamics(prob, alloc, sfl, fade_std_db=2.0, rng=0,
+                              deadline_s=1e9, defense=defense)
+        tf = TrainingFaults(wd)
+        tf.arm_byzantine(seed=0)
+        tf.sign_flip([0])
+        tf.gaussian_noise([0], std=0.05)        # exercises the noise key
+        tr = Trainer(SflRound(sfl, [1.0] * K), local_steps=I, dynamics=wd,
+                     episode_path=path, episode_every=3)
+        st = sfl.init_state(sfl.init_lora(jax.random.key(7)))
+        return wd, tr, st
+
+    row = np.random.default_rng(0).integers(
+        0, prob.cfg.vocab_size, (1, B, S)).astype(np.int32)
+    tokens = np.broadcast_to(row, (K, B, S)).copy()
+    batch = {"tokens": tokens, "labels": tokens.copy()}
+    data = lambda: iter(lambda: batch, None)
+
+    p_ref = str(tmp_path / "ref.ckpt")
+    p_kill = str(tmp_path / "kill.ckpt")
+    wd_ref, tr_ref, st = trainer(p_ref)
+    st_ref, h_ref = tr_ref.fit(st, data(), global_rounds=6)
+    # the scenario really does checkpoint mid-quarantine at round 3
+    assert np.asarray(h_ref.quarantined)[:3, 0].sum() >= 1
+
+    _, tr1, st1 = trainer(p_kill)
+    tr1.fit(st1, data(), global_rounds=3)       # "killed" after round 3
+    wd2, tr2, st2 = trainer(p_kill)             # fresh host state, re-armed
+    st_res, h_res = tr2.fit(st2, data(), global_rounds=6, resume=True)
+
+    assert h_res.losses == h_ref.losses         # bitwise
+    assert h_res.anomaly_scores == h_ref.anomaly_scores
+    assert h_res.quarantined == h_ref.quarantined
+    assert h_res.participation == h_ref.participation
+    assert wd2.tracker.state() == wd_ref.tracker.state()
+    assert _leaves_equal(jax.device_get(st_ref), jax.device_get(st_res))

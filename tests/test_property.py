@@ -1,4 +1,5 @@
 """Hypothesis property tests on system invariants."""
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -111,3 +112,70 @@ def test_attention_mask_properties(seed):
             if w:
                 expect = expect and (qp[i] - kp[j]) < w
             assert m[i, j] == expect
+
+
+@COMMON
+@given(k=st.integers(2, 6), seed=st.integers(0, 1000),
+       hetero=st.booleans(), partial=st.booleans())
+def test_robust_aggregators_reduce_to_fedavg_when_benign(k, seed, hetero,
+                                                         partial):
+    """Disarmed robust aggregation IS the weighted FedAvg, bit for bit:
+    trimmed mean at trim=0 equals the slot-wise weighted average on any
+    hetero slot-mask fleet, and robust_aggregate with the off config
+    equals fedavg_partial — the benign path can never perturb a benign
+    trajectory."""
+    from repro.core.aggregation import (RobustAggConfig, fedavg_het,
+                                        fedavg_partial, robust_aggregate,
+                                        trimmed_mean)
+
+    rng = np.random.default_rng(seed)
+    stacked = {"x": jnp.asarray(rng.normal(size=(k, 4, 3)), jnp.float32),
+               "y": jnp.asarray(rng.normal(size=(k, 2)), jnp.float32)}
+    ref = {"x": jnp.asarray(rng.normal(size=(k, 4, 3)), jnp.float32),
+           "y": jnp.asarray(rng.normal(size=(k, 2)), jnp.float32)}
+    w = jnp.asarray(rng.uniform(0.5, 4.0, k), jnp.float32)
+    masks = None
+    if hetero:
+        masks = {"x": jnp.asarray(rng.integers(0, 2, (k, 4, 3)),
+                                  jnp.float32),
+                 "y": jnp.asarray(rng.integers(0, 2, (k, 2)), jnp.float32)}
+    part = None
+    if partial:
+        part = jnp.asarray(rng.integers(0, 2, k), jnp.float32).at[0].set(1.0)
+
+    eff_w = w if part is None else w * part
+    tm = trimmed_mean(stacked, w, part, masks, jnp.int32(0))
+    # masks=None sends fedavg_het down the tensordot fast path, whose
+    # rounding differs from the slot-wise num/den formula trimmed_mean
+    # reduces to — all-ones masks select the same formula bit for bit
+    cmp_masks = (masks if masks is not None
+                 else jax.tree.map(jnp.ones_like, stacked))
+    het = fedavg_het(stacked, eff_w, cmp_masks)
+    assert all(np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(jax.tree.leaves(tm), jax.tree.leaves(het)))
+
+    agg, _ = robust_aggregate(stacked, ref, w, part, masks,
+                              RobustAggConfig.off())
+    plain = fedavg_partial(stacked, w, part, masks)
+    assert all(np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(jax.tree.leaves(agg),
+                               jax.tree.leaves(plain)))
+
+
+@COMMON
+@given(k=st.integers(3, 7), seed=st.integers(0, 1000))
+def test_median_in_convex_hull_and_fixed_point(k, seed):
+    """Coordinate median of any fleet stays inside the per-coordinate
+    hull of the valid entries; an identical fleet is a fixed point."""
+    from repro.core.aggregation import coordinate_median
+
+    rng = np.random.default_rng(seed)
+    stacked = {"x": jnp.asarray(rng.normal(size=(k, 5)), jnp.float32)}
+    w = jnp.ones(k, jnp.float32)
+    med = np.asarray(coordinate_median(stacked, w, None, None)["x"])
+    vals = np.asarray(stacked["x"])
+    assert (med <= vals.max(0) + 1e-6).all()
+    assert (med >= vals.min(0) - 1e-6).all()
+    same = {"x": jnp.broadcast_to(stacked["x"][:1], (k, 5)).copy()}
+    med2 = np.asarray(coordinate_median(same, w, None, None)["x"])
+    np.testing.assert_allclose(med2, np.asarray(same["x"][0]), atol=1e-6)
