@@ -122,6 +122,25 @@ GATES = [
         "byzantine/attacker_exposure",
         "byzantine/attacker_rounds_total",
     ),
+    (
+        # per-row adapter gather vs the single-adapter fused matmul on the
+        # same problem shape: the multi-tenant dispatch tax must stay a
+        # bounded overhead, not erode toward per-tenant unbatched cost
+        "BENCH_multitenant.json",
+        "multitenant_gather_overhead",
+        "multitenant/lora_gather_cpu",
+        "multitenant/lora_single_cpu",
+    ),
+    (
+        # engine steps to drain the mixed-tenant workload in ONE batched
+        # engine vs per-tenant sequential engines at equal HBM — both
+        # deterministic step counts, so the ratio is noise-free; it
+        # catches any erosion of the mixed-batch throughput win
+        "BENCH_multitenant.json",
+        "multitenant_mixed_throughput",
+        "multitenant/steps_mixed",
+        "multitenant/steps_sequential",
+    ),
 ]
 
 
@@ -134,6 +153,7 @@ SUITE_FOR_FILE = {
     "BENCH_dynamic.json": "dynamic",
     "BENCH_faults.json": "faults",
     "BENCH_byzantine.json": "byzantine",
+    "BENCH_multitenant.json": "multitenant",
 }
 
 

@@ -13,6 +13,7 @@
   dynamic bench_dynamic      dynamic-round overhead + adaptive re-allocation
   faults  bench_faults       failure-recovery cost: preemption recompute + rollback
   byzantine bench_byzantine  attacker damage vs robust-aggregation defense
+  multitenant bench_multitenant  batched-gather LoRA + mixed-tenant vs sequential
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only table4,fig5 ...]
 """
@@ -26,8 +27,8 @@ import traceback
 
 from . import (bench_byzantine, bench_complexity, bench_convergence,
                bench_dynamic, bench_faults, bench_kernels, bench_latency,
-               bench_ppl, bench_resource, bench_roofline, bench_serving,
-               bench_traffic)
+               bench_multitenant, bench_ppl, bench_resource, bench_roofline,
+               bench_serving, bench_traffic)
 
 SUITES = {
     "table3": bench_complexity.main,
@@ -42,6 +43,7 @@ SUITES = {
     "dynamic": bench_dynamic.main,
     "faults": bench_faults.main,
     "byzantine": bench_byzantine.main,
+    "multitenant": bench_multitenant.main,
 }
 
 # perf-trajectory snapshots: these row prefixes land in JSON files CI
@@ -56,6 +58,7 @@ SNAPSHOTS = {
     "BENCH_dynamic.json": ("dynamic/",),
     "BENCH_faults.json": ("faults/",),
     "BENCH_byzantine.json": ("byzantine/",),
+    "BENCH_multitenant.json": ("multitenant/",),
 }
 
 

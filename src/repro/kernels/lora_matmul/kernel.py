@@ -83,6 +83,86 @@ def lora_matmul_kernel(x, w, a, b, *, scale: float, bm: int = 256,
 
 
 # ---------------------------------------------------------------------------
+# batched-gather forward (multi-tenant serving)
+# ---------------------------------------------------------------------------
+
+def _gather_kernel(idx_ref, x_ref, w_ref, a_ref, b_ref, y_ref, acc_ref,
+                   z_ref, *, scale: float, k_steps: int):
+    del idx_ref          # consumed by the BlockSpec index maps, not the body
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    xb = x_ref[...]                                       # (1, bk)
+    acc_ref[...] += jnp.dot(xb, w_ref[...],
+                            preferred_element_type=jnp.float32)
+    # this row's OWN adapter tile: the prefetched index map already DMA'd
+    # A[idx[m]] — the body is identical to the single-adapter kernel
+    z_ref[...] += jnp.dot(xb, a_ref[0].T,
+                          preferred_element_type=jnp.float32)
+
+    @pl.when(k == k_steps - 1)
+    def _finish():
+        y = acc_ref[...] + scale * jnp.dot(
+            z_ref[...], b_ref[0].T, preferred_element_type=jnp.float32)
+        y_ref[...] = y.astype(y_ref.dtype)
+
+
+def lora_matmul_gather_kernel(x, w, a_pool, b_pool, idx, *, scale: float,
+                              bn: int = 256, bk: int = 512,
+                              interpret: bool = False):
+    """Punica/S-LoRA-style batched-gather LoRA matmul.
+
+    x: (M, K) — one row per serving slot; w: (K, N); a_pool: (A, r, K) and
+    b_pool: (A, N, r) — ALL resident tenant adapters stacked on a leading
+    pool axis; idx: (M,) int32 adapter index per row.
+
+    ``idx`` rides in as a scalar-prefetch operand
+    (``pltpu.PrefetchScalarGridSpec``) so the A/B BlockSpec index maps can
+    compute each row's physical DMA source — ``(idx[m], 0, k)`` /
+    ``(idx[m], j, 0)`` — before the body runs: the gather IS the index
+    map, exactly the block-table trick in ``flash_attention/paged_decode``.
+    A mixed-tenant batch therefore decodes in ONE kernel call with no
+    host-side regrouping and no materialized per-row adapter copy.
+
+    Grid (M, N/bn, K/bk): one grid row per slot (decode batches are
+    slot-count sized, so bm == 1 costs nothing and lets neighbouring rows
+    wear different adapters).  N and K must divide by the block shape
+    (ops.py pads).
+    """
+    M, K = x.shape
+    N = w.shape[1]
+    r = a_pool.shape[1]
+    bn, bk = min(bn, N), min(bk, K)
+    grid = (M, N // bn, K // bk)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bk), lambda m, j, k, idx: (m, k)),         # x
+            pl.BlockSpec((bk, bn), lambda m, j, k, idx: (k, j)),        # w
+            pl.BlockSpec((1, r, bk),
+                         lambda m, j, k, idx: (idx[m], 0, k)),          # A
+            pl.BlockSpec((1, bn, r),
+                         lambda m, j, k, idx: (idx[m], j, 0)),          # B
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda m, j, k, idx: (m, j)),
+        scratch_shapes=[pltpu.VMEM((1, bn), jnp.float32),
+                        pltpu.VMEM((1, r), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_gather_kernel, scale=scale, k_steps=grid[2]),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), x, w, a_pool, b_pool)
+
+
+# ---------------------------------------------------------------------------
 # backward: dX
 # ---------------------------------------------------------------------------
 

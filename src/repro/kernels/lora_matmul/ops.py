@@ -25,10 +25,10 @@ import jax
 import jax.numpy as jnp
 
 from ..backend import auto_interpret
-from .kernel import (lora_matmul_dx_kernel, lora_matmul_kernel,
-                     lora_rank_reduce_kernel)
-from .ref import lora_matmul_ref
-from .tune import best_blocks
+from .kernel import (lora_matmul_dx_kernel, lora_matmul_gather_kernel,
+                     lora_matmul_kernel, lora_rank_reduce_kernel)
+from .ref import lora_matmul_gathered_ref, lora_matmul_ref
+from .tune import best_blocks, best_gather_blocks
 
 
 class _FusedCfg(NamedTuple):
@@ -150,3 +150,60 @@ def lora_matmul(x, w, a, b, *, scale: float = 1.0,
     cfg = _FusedCfg(float(scale), int(bm or 256), int(bn or 256),
                     int(bk or 512), bool(interpret), bool(use_kernel))
     return _fused_lora_matmul(cfg, x2, w, a, b).reshape(*lead, N)
+
+
+def lora_matmul_gathered(x, w, a_pool, b_pool, adapter_idx, *,
+                         scale: float = 1.0, bn: Optional[int] = None,
+                         bk: Optional[int] = None,
+                         interpret: Optional[bool] = None,
+                         use_kernel: Optional[bool] = None):
+    """Batched-gather LoRA matmul: row m of x wears adapter
+    ``adapter_idx[m]`` out of the stacked pool.
+
+    x: (..., K); w: (K, N); a_pool: (A, r, K); b_pool: (A, N, r);
+    adapter_idx: int32, either matching x's leading dims exactly or a
+    (B,) vector broadcast over the remaining leading dims (one adapter
+    per batch row — the serving-slot case).
+
+    Forward-only (the serving decode path never differentiates);
+    ``interpret``/``use_kernel`` follow the ``lora_matmul`` dispatch
+    convention — native Pallas on TPU, the jnp gather oracle elsewhere,
+    an explicit ``interpret`` flag forcing the kernel for parity tests —
+    and (bn, bk) default to the memoized gather autotuner.
+    """
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    N = w.shape[1]
+    x2 = x.reshape(-1, K)
+    M = x2.shape[0]
+    ai = jnp.asarray(adapter_idx, jnp.int32)
+    if ai.shape != lead:
+        ai = ai.reshape(ai.shape + (1,) * (len(lead) - ai.ndim))
+    idx = jnp.broadcast_to(ai, lead).reshape(-1)
+    explicit_interpret = interpret is not None
+    if interpret is None:
+        interpret = auto_interpret()
+    if use_kernel is None:
+        use_kernel = explicit_interpret or not interpret
+    if not use_kernel:
+        y = lora_matmul_gathered_ref(x2, w, a_pool, b_pool, idx,
+                                     float(scale))
+        return y.reshape(*lead, N)
+    if bn is None or bk is None:
+        tn, tk = best_gather_blocks(M, K, N, a_pool.shape[1],
+                                    a_pool.shape[0], x.dtype, idx.dtype)
+        bn, bk = bn or tn, bk or tk
+    bn, bk = min(int(bn), N), min(int(bk), K)
+    pn, pk = (-N) % bn, (-K) % bk
+    w, a_pool, b_pool = (t.astype(x2.dtype) for t in (w, a_pool, b_pool))
+    if pk:
+        x2 = _pad2(x2, 0, pk)
+        w = _pad2(w, pk, 0)
+        a_pool = jnp.pad(a_pool, ((0, 0), (0, 0), (0, pk)))
+    if pn:
+        w = _pad2(w, 0, pn)
+        b_pool = jnp.pad(b_pool, ((0, 0), (0, pn), (0, 0)))
+    y = lora_matmul_gather_kernel(x2, w, a_pool, b_pool, idx,
+                                  scale=float(scale), bn=bn, bk=bk,
+                                  interpret=bool(interpret))
+    return y[:, :N].reshape(*lead, N)

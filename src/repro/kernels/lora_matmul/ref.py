@@ -14,3 +14,18 @@ def lora_matmul_ref(x, w, a, b, scale: float):
     z = xf @ a.astype(jnp.float32).T
     y = y + scale * (z @ b.astype(jnp.float32).T)
     return y.astype(x.dtype)
+
+
+def lora_matmul_gathered_ref(x, w, a_pool, b_pool, idx, scale: float):
+    """y[m] = x[m] @ w + scale * (x[m] @ a_pool[idx[m]]^T) @ b_pool[idx[m]]^T.
+
+    x: (M, K); w: (K, N); a_pool: (A, r, K); b_pool: (A, N, r); idx: (M,)
+    int32 adapter index per row.  f32 accumulation — the jnp gather oracle
+    for ``lora_matmul_gather_kernel``."""
+    xf = x.astype(jnp.float32)
+    y = xf @ w.astype(jnp.float32)
+    a_sel = jnp.take(a_pool, idx, axis=0).astype(jnp.float32)   # (M, r, K)
+    b_sel = jnp.take(b_pool, idx, axis=0).astype(jnp.float32)   # (M, N, r)
+    z = jnp.einsum("mk,mrk->mr", xf, a_sel)
+    y = y + scale * jnp.einsum("mr,mnr->mn", z, b_sel)
+    return y.astype(x.dtype)

@@ -19,18 +19,30 @@ import jax
 import jax.numpy as jnp
 
 Blocks = Tuple[int, int, int]
+GatherBlocks = Tuple[int, int]
 
 _CACHE: Dict[Tuple[int, int, int, int, str, str], Blocks] = {}
+# the gathered (multi-tenant) variant memoizes SEPARATELY, and its key
+# additionally covers the adapter-pool size and the index dtype: a
+# single-adapter sweep and a multi-tenant sweep over the same (M, K, N, r)
+# must never collide — the gather kernel's tiling trade-offs (bm == 1,
+# per-row A/B DMA) are different from the dense kernel's
+_GATHER_CACHE: Dict[Tuple[int, int, int, int, int, str, str, str],
+                    GatherBlocks] = {}
 
 _CANDIDATES: Tuple[Blocks, ...] = (
     (128, 128, 128), (128, 128, 256), (128, 256, 256), (256, 128, 256),
     (256, 256, 256), (256, 256, 512), (512, 256, 256), (128, 256, 512),
+)
+_GATHER_CANDIDATES: Tuple[GatherBlocks, ...] = (
+    (128, 128), (128, 256), (256, 256), (256, 512), (512, 256), (128, 512),
 )
 _VMEM_BUDGET = 12 * 1024 * 1024        # leave headroom under ~16 MB/core
 
 
 def clear_cache() -> None:
     _CACHE.clear()
+    _GATHER_CACHE.clear()
 
 
 def _vmem_bytes(bm: int, bn: int, bk: int, r: int, itemsize: int) -> int:
@@ -105,4 +117,87 @@ def best_blocks(M: int, K: int, N: int, r: int, dtype=jnp.float32,
     else:
         best = min(cands, key=lambda c: _heuristic_key(M, K, N, c))
     _CACHE[key] = best
+    return best
+
+
+# ---------------------------------------------------------------------------
+# gathered (multi-tenant) variant
+# ---------------------------------------------------------------------------
+
+def _gather_vmem_bytes(bn: int, bk: int, r: int, itemsize: int) -> int:
+    """Per-step VMEM of the gather kernel: bm == 1 row tiles, the row's
+    gathered A/B tiles, and the (1, bn)/(1, r) f32 scratch."""
+    tiles = itemsize * (bk + bk * bn + r * bk + bn * r)
+    scratch = 4 * (bn + r)
+    out = itemsize * bn
+    return 2 * tiles + scratch + out
+
+
+def _gather_heuristic_key(K: int, N: int, c: GatherBlocks):
+    """Padded-FLOP waste over (K, N), then fewer K steps (fewer scratch
+    round trips per output tile), then wider output tiles."""
+    bn, bk = c
+    padded = _pad_up(K, bk) * _pad_up(N, bn)
+    return (padded, _pad_up(K, bk) // bk, -bn)
+
+
+def _time_gather_candidates(M: int, K: int, N: int, r: int, pool: int,
+                            dtype, idx_dtype,
+                            cands: List[GatherBlocks]) -> GatherBlocks:
+    """Time the real gather kernel per candidate (TPU path)."""
+    from .kernel import lora_matmul_gather_kernel
+
+    best, best_t = cands[0], float("inf")
+    for bn, bk in cands:
+        Kp, Np = _pad_up(K, bk), _pad_up(N, bn)
+        x = jnp.zeros((M, Kp), dtype)
+        w = jnp.zeros((Kp, Np), dtype)
+        a = jnp.zeros((pool, r, Kp), dtype)
+        b = jnp.zeros((pool, Np, r), dtype)
+        idx = jnp.zeros((M,), idx_dtype)
+        try:
+            fn = jax.jit(lambda x, w, a, b, idx, bn=bn, bk=bk:
+                         lora_matmul_gather_kernel(x, w, a, b, idx, scale=1.0,
+                                                   bn=bn, bk=bk,
+                                                   interpret=False))
+            fn(x, w, a, b, idx).block_until_ready()     # compile
+            t = float("inf")
+            for _ in range(3):
+                t0 = time.perf_counter()
+                fn(x, w, a, b, idx).block_until_ready()
+                t = min(t, time.perf_counter() - t0)
+        except Exception:                               # noqa: BLE001
+            continue            # tile shape the backend rejects — skip it
+        if t < best_t:
+            best, best_t = (bn, bk), t
+    return best
+
+
+def best_gather_blocks(M: int, K: int, N: int, r: int, pool: int,
+                       dtype=jnp.float32, idx_dtype=jnp.int32,
+                       backend: str | None = None) -> GatherBlocks:
+    """Memoized (bn, bk) for one batched-gather LoRA problem shape."""
+    backend = backend or jax.default_backend()
+    key = (int(M), int(K), int(N), int(r), int(pool),
+           jnp.dtype(dtype).name, jnp.dtype(idx_dtype).name, backend)
+    hit = _GATHER_CACHE.get(key)
+    if hit is not None:
+        return hit
+    itemsize = jnp.dtype(dtype).itemsize
+    cands: List[GatherBlocks] = []
+    for bn, bk in _GATHER_CANDIDATES:
+        c = (min(bn, N), min(bk, K))
+        if _gather_vmem_bytes(*c, r=max(int(r), 1),
+                              itemsize=itemsize) > _VMEM_BUDGET:
+            continue
+        if c not in cands:
+            cands.append(c)
+    if not cands:
+        cands = [(min(128, N), min(128, K))]
+    if backend == "tpu":
+        best = _time_gather_candidates(M, K, N, r, pool, dtype, idx_dtype,
+                                       cands)
+    else:
+        best = min(cands, key=lambda c: _gather_heuristic_key(K, N, c))
+    _GATHER_CACHE[key] = best
     return best

@@ -42,6 +42,20 @@ def main() -> None:
                     help="under page pressure, evict the lowest-priority "
                          "resident instead of queueing new work "
                          "(paged engine only)")
+    ap.add_argument("--adapters", type=int, default=0,
+                    help="serve N distinct tenant adapters from ONE engine "
+                         "(multi-tenant; paged engine only; 0 = single "
+                         "shared adapter)")
+    ap.add_argument("--adapter-pool", type=int, default=0,
+                    help="device-resident adapter slots (0 = auto: enough "
+                         "for the batch, capped at 8 so cold tenants "
+                         "exercise LRU paging)")
+    ap.add_argument("--tenant-trace", choices=["roundrobin", "zipf"],
+                    default="roundrobin",
+                    help="how requests map to tenants: uniform round-robin "
+                         "or a Zipf-skewed popularity mix")
+    ap.add_argument("--tenant-quota", type=int, default=0,
+                    help="max live slots per tenant (0 = unlimited)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -51,7 +65,7 @@ def main() -> None:
     from ..configs import get_arch
     from ..models import init_lora_stack, init_params
     from ..models.generate import SampleConfig
-    from ..serving import Request, ServingEngine
+    from ..serving import AdapterRegistry, Request, ServingEngine
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -59,15 +73,29 @@ def main() -> None:
 
     key = jax.random.key(args.seed)
     params = init_params(cfg, key)
-    lora = init_lora_stack(cfg, jax.random.key(args.seed + 1), args.rank)
-    if args.lora_checkpoint:
-        from ..checkpoint import restore_pytree
-        lora = restore_pytree(args.lora_checkpoint, lora)
+    registry = None
+    if args.adapters:
+        # one trained adapter per tenant (federated fleets emit these);
+        # the pool holds a bounded working set and LRU-pages the rest
+        pool = args.adapter_pool or max(args.slots,
+                                        min(args.adapters, 8))
+        registry = AdapterRegistry(cfg, pool_size=pool, rank=args.rank)
+        for t in range(args.adapters):
+            registry.publish(t, init_lora_stack(
+                cfg, jax.random.key(args.seed + 1 + t), args.rank))
+        lora = None
+    else:
+        lora = init_lora_stack(cfg, jax.random.key(args.seed + 1), args.rank)
+        if args.lora_checkpoint:
+            from ..checkpoint import restore_pytree
+            lora = restore_pytree(args.lora_checkpoint, lora)
 
     sc = (SampleConfig(greedy=True) if args.temperature == 0.0
           else SampleConfig(temperature=args.temperature))
     paged = False if (args.slab or args.naive) else None    # None = auto
-    eng = ServingEngine(cfg, params, lora=lora, max_slots=args.slots,
+    eng = ServingEngine(cfg, params, lora=lora, adapters=registry,
+                        tenant_quota=args.tenant_quota,
+                        max_slots=args.slots,
                         max_len=args.max_len, sc=sc, seed=args.seed,
                         fused=not args.naive, paged=paged,
                         page_size=args.page_size,
@@ -78,12 +106,21 @@ def main() -> None:
                          "(drop --slab/--naive)")
 
     rng = np.random.default_rng(args.seed)
+
+    def tenant_of(i: int) -> int:
+        if not args.adapters:
+            return 0
+        if args.tenant_trace == "zipf":
+            return int(rng.zipf(1.5)) % args.adapters
+        return i % args.adapters
+
     reqs = [Request(uid=i,
                     prompt=rng.integers(5, cfg.vocab_size,
                                         rng.integers(4, args.prompt_len + 1)
                                         ).tolist(),
                     max_new_tokens=args.gen,
-                    deadline_steps=args.deadline_steps or None)
+                    deadline_steps=args.deadline_steps or None,
+                    tenant=tenant_of(i))
             for i in range(args.requests)]
     for r in reqs:
         eng.submit(r)
@@ -107,6 +144,15 @@ def main() -> None:
               f"({eng.stats['deadline_preemptions']} deadline), "
               f"{eng.stats['recomputed_tokens']} tokens recomputed, "
               f"{eng.stats['quarantined']} quarantined")
+    if registry is not None:
+        tt = eng.stats["tenant_tokens"]
+        dist = " ".join(f"t{t}:{tt[t]}" for t in sorted(tt))
+        print(f"multi-tenant: {args.adapters} tenants over "
+              f"{registry.pool_size} pool slots ({args.tenant_trace} trace), "
+              f"{eng.stats['adapter_swaps']} adapter swaps "
+              f"({registry.stats['evictions']} evictions, "
+              f"{registry.stats['hot_swaps']} hot swaps)")
+        print(f"per-tenant tokens: {dist}")
     print("sample token ids:", reqs[0].output[:12])
 
 

@@ -34,7 +34,8 @@ def init_attention(cfg, key, dtype) -> dict:
     }
 
 
-def _proj_qkv(cfg, p, x, lora, lora_scale, dense_impl="einsum"):
+def _proj_qkv(cfg, p, x, lora, lora_scale, dense_impl="einsum",
+              adapter_idx=None):
     """Project and reshape to (B, S, H|KH, D), rope NOT yet applied."""
     B, S, _ = x.shape
     h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -43,11 +44,11 @@ def _proj_qkv(cfg, p, x, lora, lora_scale, dense_impl="einsum"):
         return None if lora is None or name not in lora else lora[name]
 
     q = dense(x, p["wq"]["w"], p["wq"].get("b"), _l("q"), lora_scale,
-              impl=dense_impl)
+              impl=dense_impl, adapter_idx=adapter_idx)
     k = dense(x, p["wk"]["w"], p["wk"].get("b"), _l("k"), lora_scale,
-              impl=dense_impl)
+              impl=dense_impl, adapter_idx=adapter_idx)
     v = dense(x, p["wv"]["w"], p["wv"].get("b"), _l("v"), lora_scale,
-              impl=dense_impl)
+              impl=dense_impl, adapter_idx=adapter_idx)
     return (q.reshape(B, S, h, hd), k.reshape(B, S, kh, hd), v.reshape(B, S, kh, hd))
 
 
@@ -355,7 +356,7 @@ def init_paged_attn_cache(cfg, num_pages: int, page_size: int, dtype) -> dict:
 
 def paged_decode_attention(cfg, p, x, cache, block_table, cur_index, *,
                            lora=None, lora_scale=1.0, impl="naive",
-                           dense_impl: str = "einsum"):
+                           dense_impl: str = "einsum", adapter_idx=None):
     """One-token decode over the paged pool: x (B, 1, d); cache {"k","v"}
     (KH, NP, PS, D); block_table (B, MP) page ids; cur_index (B,) absolute
     positions (each serving slot at its own).
@@ -366,11 +367,15 @@ def paged_decode_attention(cfg, p, x, cache, block_table, cur_index, *,
     ``kernels.flash_attention.paged_decode`` — the scalar-prefetch Pallas
     gather kernel on TPU, the jnp gather oracle elsewhere; any other impl
     forces the oracle (whole-gather einsum GSPMD can shard).
+
+    ``adapter_idx`` (B,) makes every LoRA-adapted projection multi-tenant:
+    lora leaves become (A, ...) pools and slot b wears adapter
+    ``adapter_idx[b]`` (see ``layers.dense``).
     """
     B = x.shape[0]
     PS = cache["k"].shape[2]
     MP = block_table.shape[1]
-    q, k, v = _proj_qkv(cfg, p, x, lora, lora_scale, dense_impl)
+    q, k, v = _proj_qkv(cfg, p, x, lora, lora_scale, dense_impl, adapter_idx)
     pos_vec = jnp.broadcast_to(jnp.asarray(cur_index, jnp.int32), (B,))
     pos = pos_vec[:, None]
     if cfg.pos_emb == "rope":
@@ -390,7 +395,7 @@ def paged_decode_attention(cfg, p, x, cache, block_table, cur_index, *,
                      use_kernel=None if impl == "flash" else False)
     y = dense(o.reshape(B, 1, -1), p["wo"]["w"], p["wo"].get("b"),
               None if lora is None or "o" not in lora else lora["o"], lora_scale,
-              impl=dense_impl)
+              impl=dense_impl, adapter_idx=adapter_idx)
     return y, {"k": kc, "v": vc}
 
 
@@ -471,7 +476,7 @@ def decode_masked_attention(q, k, v, q_pos, k_pos, window: int = 0):
 
 def decode_attention(cfg, p, x, cache, cur_index, *, lora=None,
                      lora_scale=1.0, impl="naive",
-                     dense_impl: str = "einsum"):
+                     dense_impl: str = "einsum", adapter_idx=None):
     """One-token decode: x (B, 1, d); cur_index absolute position, scalar
     int32 OR a per-sequence (B,) vector (continuous-batching slots each at
     their own position).
@@ -485,7 +490,7 @@ def decode_attention(cfg, p, x, cache, cur_index, *, lora=None,
     """
     B = x.shape[0]
     L = cache["k"].shape[1]
-    q, k, v = _proj_qkv(cfg, p, x, lora, lora_scale, dense_impl)
+    q, k, v = _proj_qkv(cfg, p, x, lora, lora_scale, dense_impl, adapter_idx)
     pos_vec = jnp.broadcast_to(jnp.asarray(cur_index, jnp.int32), (B,))
     pos = pos_vec[:, None]
     if cfg.pos_emb == "rope":
@@ -503,5 +508,5 @@ def decode_attention(cfg, p, x, cache, cur_index, *, lora=None,
         o = decode_masked_attention(q, kc, vc, pos_vec, pc, cfg.attn_window)
     y = dense(o.reshape(B, 1, -1), p["wo"]["w"], p["wo"].get("b"),
               None if lora is None or "o" not in lora else lora["o"], lora_scale,
-              impl=dense_impl)
+              impl=dense_impl, adapter_idx=adapter_idx)
     return y, {"k": kc, "v": vc, "pos": pc}

@@ -38,7 +38,8 @@ def _fused_dense_active() -> bool:
 
 def dense(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
           lora: Optional[dict] = None, lora_scale: float = 1.0,
-          impl: str = "einsum") -> jax.Array:
+          impl: str = "einsum",
+          adapter_idx: Optional[jax.Array] = None) -> jax.Array:
     """y = x @ w (+ b) (+ lora_scale * (x @ a^T) @ b_lora^T).
 
     ``lora`` is ``{"a": (r, in), "b": (out, r)}`` or None.  ``impl``
@@ -47,11 +48,40 @@ def dense(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
     ``kernels.lora_matmul`` — one pass over x per projection (custom VJP,
     autotuned tiles) on the backends in ``FUSED_DENSE_BACKENDS``, the
     einsum path elsewhere.
+
+    MULTI-TENANT: with ``adapter_idx`` (a (B,) int32 vector, one entry per
+    leading batch row of x) the lora leaves are POOLED —
+    ``{"a": (A, r, in), "b": (A, out, r)}`` — and row b of the batch wears
+    adapter ``adapter_idx[b]``: "fused" routes through the batched-gather
+    ``kernels.lora_matmul.lora_matmul_gathered`` (the per-row gather IS
+    the kernel index map), "einsum" takes the equivalent gathered einsum.
+    A pool of STATIC size 1 constant-folds back to the single-adapter
+    path — bit-identical to passing the unstacked adapter, so the
+    single-tenant engine is unchanged by construction.
     """
+    if adapter_idx is not None and lora is not None:
+        if lora["a"].shape[0] == 1:
+            # static size-1 pool: unstack and fall through to the exact
+            # single-adapter computation (constant index by construction)
+            lora = {"a": lora["a"][0], "b": lora["b"][0]}
+            adapter_idx = None
+    if adapter_idx is not None and lora is not None:
+        if (impl == "fused" and _fused_dense_active()
+                and not isinstance(lora_scale, jax.Array)):
+            from ..kernels.lora_matmul import lora_matmul_gathered
+            y = lora_matmul_gathered(x, w, lora["a"], lora["b"], adapter_idx,
+                                     scale=float(lora_scale))
+        else:
+            y = jnp.einsum("...i,io->...o", x, _cast_like(x, w))
+            a_sel = jnp.take(_cast_like(x, lora["a"]), adapter_idx, axis=0)
+            b_sel = jnp.take(_cast_like(x, lora["b"]), adapter_idx, axis=0)
+            z = jnp.einsum("b...i,bri->b...r", x, a_sel)
+            delta = jnp.einsum("b...r,bor->b...o", z, b_sel)
+            y = y + (lora_scale * delta).astype(y.dtype)
     # the fused kernel bakes the scale in as a compile-time constant; a
     # traced scale (per-client alpha/r_k under the hetero-fleet vmap) must
     # take the einsum composition, which multiplies it in-graph
-    if (impl == "fused" and lora is not None and _fused_dense_active()
+    elif (impl == "fused" and lora is not None and _fused_dense_active()
             and not isinstance(lora_scale, jax.Array)):
         from ..kernels.lora_matmul import lora_matmul
         y = lora_matmul(x, w, lora["a"], lora["b"], scale=float(lora_scale))
@@ -147,36 +177,40 @@ def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def swiglu_mlp(cfg, x: jax.Array, p: dict, lora: Optional[dict] = None,
-               lora_scale: float = 1.0, dense_impl: str = "einsum") -> jax.Array:
+               lora_scale: float = 1.0, dense_impl: str = "einsum",
+               adapter_idx: Optional[jax.Array] = None) -> jax.Array:
     def _l(name):
         return None if lora is None or name not in lora else lora[name]
 
     g = dense(x, p["w_gate"]["w"], lora=_l("gate"), lora_scale=lora_scale,
-              impl=dense_impl)
+              impl=dense_impl, adapter_idx=adapter_idx)
     u = dense(x, p["w_up"]["w"], lora=_l("up"), lora_scale=lora_scale,
-              impl=dense_impl)
+              impl=dense_impl, adapter_idx=adapter_idx)
     h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
     return dense(h, p["w_down"]["w"], lora=_l("down"), lora_scale=lora_scale,
-                 impl=dense_impl)
+                 impl=dense_impl, adapter_idx=adapter_idx)
 
 
 def gelu_mlp(cfg, x: jax.Array, p: dict, lora: Optional[dict] = None,
-             lora_scale: float = 1.0, dense_impl: str = "einsum") -> jax.Array:
+             lora_scale: float = 1.0, dense_impl: str = "einsum",
+             adapter_idx: Optional[jax.Array] = None) -> jax.Array:
     def _l(name):
         return None if lora is None or name not in lora else lora[name]
 
     h = dense(x, p["w_up"]["w"], p["w_up"].get("b"), lora=_l("up"),
-              lora_scale=lora_scale, impl=dense_impl)
+              lora_scale=lora_scale, impl=dense_impl, adapter_idx=adapter_idx)
     h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(x.dtype)
     return dense(h, p["w_down"]["w"], p["w_down"].get("b"), lora=_l("down"),
-                 lora_scale=lora_scale, impl=dense_impl)
+                 lora_scale=lora_scale, impl=dense_impl,
+                 adapter_idx=adapter_idx)
 
 
 def apply_mlp(cfg, x: jax.Array, p: dict, lora: Optional[dict] = None,
-              lora_scale: float = 1.0, dense_impl: str = "einsum") -> jax.Array:
+              lora_scale: float = 1.0, dense_impl: str = "einsum",
+              adapter_idx: Optional[jax.Array] = None) -> jax.Array:
     if cfg.mlp_kind == "swiglu":
-        return swiglu_mlp(cfg, x, p, lora, lora_scale, dense_impl)
-    return gelu_mlp(cfg, x, p, lora, lora_scale, dense_impl)
+        return swiglu_mlp(cfg, x, p, lora, lora_scale, dense_impl, adapter_idx)
+    return gelu_mlp(cfg, x, p, lora, lora_scale, dense_impl, adapter_idx)
 
 
 def init_mlp(cfg, key, dtype) -> dict:

@@ -191,10 +191,14 @@ def prefill(cfg: ArchConfig, params: dict, tokens: jax.Array, *,
 
 
 def decode_step(cfg: ArchConfig, params: dict, token: jax.Array, caches,
-                cur_index, *, lora=None, rt: Runtime = Runtime()):
+                cur_index, *, lora=None, rt: Runtime = Runtime(),
+                adapter_idx=None):
     """One decode step.  token: (B, 1) int32; cur_index: scalar int32, or
     a per-sequence (B,) vector when each sequence sits at its own absolute
     position (continuous-batching slots).
+
+    ``adapter_idx`` (B,): multi-tenant decode — lora leaves are (R, A, ...)
+    pools and slot b wears adapter ``adapter_idx[b]``.
 
     Returns (logits (B, V), new caches)."""
     B = token.shape[0]
@@ -205,7 +209,8 @@ def decode_step(cfg: ArchConfig, params: dict, token: jax.Array, caches,
     x, caches, _ = stack_mod.apply_stack(cfg, params["layers"], x,
                                          positions=positions, lora=lora, rt=rt,
                                          mode="decode", caches=caches,
-                                         cur_index=cur_index)
+                                         cur_index=cur_index,
+                                         adapter_idx=adapter_idx)
     x = apply_norm(cfg, x, params["final_norm"])
     logits = unembed(cfg, params["embed"], x)[:, 0]
     return logits, caches
@@ -213,10 +218,14 @@ def decode_step(cfg: ArchConfig, params: dict, token: jax.Array, caches,
 
 def paged_decode_step(cfg: ArchConfig, params: dict, token: jax.Array, caches,
                       block_tables, cur_index, *, lora=None,
-                      rt: Runtime = Runtime()):
+                      rt: Runtime = Runtime(), adapter_idx=None):
     """One decode step over the paged KV pool.  token: (B, 1) int32;
     block_tables: (B, MP) int32 page ids; cur_index: (B,) absolute
     positions (serving slots each at their own).
+
+    ``adapter_idx`` (B,): multi-tenant decode — lora leaves are (R, A, ...)
+    pools and slot b wears adapter ``adapter_idx[b]`` (the batched-gather
+    LoRA kernel under ``rt.dense_impl == "fused"``).
 
     Returns (logits (B, V), new caches) — the caches are the page pools
     from ``init_paged_cache``, updated in place (donation-friendly)."""
@@ -227,7 +236,8 @@ def paged_decode_step(cfg: ArchConfig, params: dict, token: jax.Array, caches,
                                          positions=positions, lora=lora, rt=rt,
                                          mode="decode", caches=caches,
                                          cur_index=cur_index,
-                                         block_tables=block_tables)
+                                         block_tables=block_tables,
+                                         adapter_idx=adapter_idx)
     x = apply_norm(cfg, x, params["final_norm"])
     logits = unembed(cfg, params["embed"], x)[:, 0]
     return logits, caches

@@ -94,12 +94,14 @@ def _mixer_lora(lora):
 
 def apply_block(cfg, pat, p: dict, x, *, positions, lora, lora_scale, rt: Runtime,
                 mode: str, cache=None, cur_index=None, cache_len: int = 0,
-                block_tables=None):
+                block_tables=None, adapter_idx=None):
     """mode: "train" | "prefill" | "decode" | "chunk".  Returns
     (x, cache_out, aux).  ``block_tables`` switches decode onto the paged
     KV pool ((B, MP) page ids; cache is then the (KH, NP, PS, D) pool);
     mode "chunk" is one paged-prefill chunk (block_tables (MP,), cur_index
-    the chunk's absolute start)."""
+    the chunk's absolute start).  ``adapter_idx`` (decode only) makes the
+    LoRA leaves (A, ...) pools with per-slot adapter selection
+    (multi-tenant serving; see ``layers.dense``)."""
     aux = jnp.zeros((), jnp.float32)
     h = apply_norm(cfg, x, p["norm1"])
     cache_out = cache
@@ -108,7 +110,8 @@ def apply_block(cfg, pat, p: dict, x, *, positions, lora, lora_scale, rt: Runtim
             m, cache_out = attn_mod.paged_decode_attention(
                 cfg, p["mixer"], h, cache, block_tables, cur_index,
                 lora=_mixer_lora(lora), lora_scale=lora_scale,
-                impl=rt.decode_attn_impl, dense_impl=rt.dense_impl)
+                impl=rt.decode_attn_impl, dense_impl=rt.dense_impl,
+                adapter_idx=adapter_idx)
         elif mode == "chunk":
             m, cache_out = attn_mod.paged_chunk_attention(
                 cfg, p["mixer"], h, cache, block_tables, cur_index,
@@ -118,7 +121,8 @@ def apply_block(cfg, pat, p: dict, x, *, positions, lora, lora_scale, rt: Runtim
             m, cache_out = attn_mod.decode_attention(
                 cfg, p["mixer"], h, cache, cur_index,
                 lora=_mixer_lora(lora), lora_scale=lora_scale,
-                impl=rt.decode_attn_impl, dense_impl=rt.dense_impl)
+                impl=rt.decode_attn_impl, dense_impl=rt.dense_impl,
+                adapter_idx=adapter_idx)
         elif mode == "prefill":
             m, cache_out = attn_mod.self_attention(
                 cfg, p["mixer"], h, positions, lora=_mixer_lora(lora),
@@ -164,7 +168,8 @@ def apply_block(cfg, pat, p: dict, x, *, positions, lora, lora_scale, rt: Runtim
         else:
             mo = apply_mlp(cfg, h, p["mlp"],
                            None if lora is None else lora.get("mlp"),
-                           lora_scale, dense_impl=rt.dense_impl)
+                           lora_scale, dense_impl=rt.dense_impl,
+                           adapter_idx=adapter_idx)
         x = x + mo
     return x, cache_out, aux
 
@@ -222,7 +227,7 @@ def apply_stack(cfg, stack_params, x, *, positions, lora=None, rt: Runtime,
                 cache_len: int = 0,
                 rep_slice: Optional[Tuple[int, int]] = None,
                 rep_gate: Optional[Tuple[Any, Any]] = None,
-                lora_scale=None, block_tables=None):
+                lora_scale=None, block_tables=None, adapter_idx=None):
     """Run (a slice of) the layer stack.
 
     ``rep_slice=(a, b)`` runs pattern repeats [a, b) — the SFL split point
@@ -243,6 +248,11 @@ def apply_stack(cfg, stack_params, x, *, positions, lora=None, rt: Runtime,
     ``lora_scale`` overrides the default ``cfg.lora_alpha/cfg.lora_rank``
     adapter scaling — per-client ranks r_k scale by alpha/r_k (a traced
     scalar under the client vmap).
+
+    ``adapter_idx`` (decode modes): per-slot adapter indices selecting out
+    of POOLED lora leaves ``(R, A, ...)`` — the pool axis rides at
+    position 1 so the depth scan still slices the leading repeat axis and
+    each scanned block sees an ``(A, ...)`` pool (multi-tenant serving).
     """
     P = len(cfg.pattern)
     lora_stack = lora if lora is not None else tuple([None] * P)
@@ -280,7 +290,7 @@ def apply_stack(cfg, stack_params, x, *, positions, lora=None, rt: Runtime,
                 lora_scale=scale, rt=rt, mode=mode,
                 cache=None if c_slices is None else c_slices[pi],
                 cur_index=cur_index, cache_len=cache_len,
-                block_tables=block_tables)
+                block_tables=block_tables, adapter_idx=adapter_idx)
             c_outs.append(c_out)
             aux = aux + a
         x = _constrain(x)       # keep scan-carried activations batch-sharded

@@ -1,0 +1,178 @@
+"""Tenant adapter registry: a device-resident LoRA pool managed like the
+KV page pool in ``paging.py``.
+
+Federated training emits one LoRA adapter per fleet/tenant; serving them
+all from one engine means the engine's lora pytree becomes a POOL — every
+leaf grows an adapter axis at position 1 (``(R, A, ...)``; the leading
+repeat axis stays leading so the depth scan in ``stack.apply_stack`` is
+untouched) and each serving slot carries an index into it
+(``engine._aslot``), consumed per-row by the batched-gather LoRA kernel.
+
+The registry owns that pool the way ``paging.py`` owns the page pool:
+
+* host-side slot mirror — ``slot_tenant`` / ``tenant_slot`` bookkeeping
+  is plain Python, only the weights live on device;
+* LRU paging — every published adapter keeps a host (numpy) copy; when
+  all ``pool_size`` device slots are busy, ``acquire`` evicts the
+  least-recently-used slot whose tenant is not pinned (pinned = tenants
+  of live engine slots, which a running decode batch is actively
+  gathering from) and loads the cold tenant from host memory;
+* hot swap — ``publish`` of a new version of a RESIDENT tenant updates
+  the device slot in place through the one jitted donated loader
+  (``_jit_load``: a ``dynamic_update_index_in_dim`` per leaf with a
+  TRACED slot index — one compile serves every slot and every
+  publish, so swapping a retrained adapter under a live engine never
+  recompiles the fused step and never breaks its one-call property);
+* versioning — ``version(tenant)`` counts publishes, letting callers
+  assert which adapter generation served a token.
+
+The pool is intentionally NOT donated by the engine's step (the step
+closes over it as a plain argument), so registry loads between steps and
+decode reads within steps never alias.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import model as model_mod
+
+
+class AdapterRegistry:
+    """Manages ``pool_size`` device-resident adapter slots for any number
+    of tenants, with host paging and LRU eviction.
+
+    ``rank``/``dtype`` fix the pool's leaf shapes (every tenant shares
+    them — the uniform-fleet serving shape; hetero ranks zero-pad at
+    publish)."""
+
+    def __init__(self, cfg, pool_size: int, rank: Optional[int] = None,
+                 dtype=jnp.float32):
+        if pool_size < 1:
+            raise ValueError("pool_size must be >= 1")
+        self.cfg = cfg
+        self.pool_size = pool_size
+        self.rank = rank or cfg.lora_rank
+        template = model_mod.abstract_lora(cfg, self.rank, dtype)
+        if not jax.tree.leaves(template):
+            raise ValueError(
+                "cfg.lora_targets produced an empty adapter pytree — "
+                "nothing to serve per tenant")
+        # device pool: adapter axis at position 1, repeat axis stays leading
+        self.pool = jax.tree.map(
+            lambda l: jnp.zeros((l.shape[0], pool_size) + l.shape[1:],
+                                l.dtype), template)
+        self._template = template
+
+        # host-side mirrors (the free-slot/LRU state; weights as numpy)
+        self._slot_tenant: List[Optional[int]] = [None] * pool_size
+        self._tenant_slot: Dict[int, int] = {}
+        self._host: Dict[int, list] = {}          # tenant -> host leaves
+        self._version: Dict[int, int] = {}
+        self._clock = 0
+        self._last_used = [0] * pool_size
+        self.stats = {"swaps": 0, "hot_swaps": 0, "evictions": 0}
+
+        # one jitted donated loader: traced slot index -> one compile for
+        # every load/hot-swap into any slot
+        def _load(pool, adapter, slot):
+            return jax.tree.map(
+                lambda p, a: jax.lax.dynamic_update_index_in_dim(
+                    p, a.astype(p.dtype), slot, 1), pool, adapter)
+
+        self._jit_load = jax.jit(_load, donate_argnums=(0,))
+
+    # ------------------------------------------------------------------
+    def _check_tree(self, adapter) -> None:
+        want = jax.tree.structure(self._template)
+        got = jax.tree.structure(adapter)
+        if want != got:
+            raise ValueError(
+                f"adapter pytree mismatch: expected {want}, got {got}")
+        for t, l in zip(jax.tree.leaves(self._template),
+                        jax.tree.leaves(adapter)):
+            if tuple(l.shape) != tuple(t.shape):
+                raise ValueError(
+                    f"adapter leaf shape {tuple(l.shape)} != pool slot "
+                    f"shape {tuple(t.shape)} (rank mismatch?)")
+
+    def publish(self, tenant: int, adapter) -> int:
+        """Install (a new version of) ``tenant``'s adapter: the host copy
+        is always updated; a RESIDENT tenant is hot-swapped in place on
+        device through the jitted donated loader (no recompile — the slot
+        index is traced).  Returns the new version number."""
+        self._check_tree(adapter)
+        self._host[tenant] = [np.asarray(l) for l in jax.tree.leaves(adapter)]
+        self._version[tenant] = self._version.get(tenant, 0) + 1
+        s = self._tenant_slot.get(tenant)
+        if s is not None:
+            # load from the host copy just stored, not the caller's tree:
+            # numpy and jax.Array leaves trace as distinct jit entries, and
+            # feeding every load path numpy keeps the loader at ONE compile
+            self.pool = self._jit_load(self.pool, self._host_adapter(tenant),
+                                       jnp.int32(s))
+            self.stats["hot_swaps"] += 1
+        return self._version[tenant]
+
+    # ``register`` reads better at first install; same operation
+    register = publish
+
+    def version(self, tenant: int) -> int:
+        return self._version.get(tenant, 0)
+
+    def resident(self, tenant: int) -> bool:
+        return tenant in self._tenant_slot
+
+    def slot_of(self, tenant: int) -> Optional[int]:
+        return self._tenant_slot.get(tenant)
+
+    def tenants(self):
+        return sorted(self._host)
+
+    # ------------------------------------------------------------------
+    def _host_adapter(self, tenant: int):
+        leaves = self._host[tenant]
+        return jax.tree.unflatten(jax.tree.structure(self._template), leaves)
+
+    def acquire(self, tenant: int, pinned=frozenset()) -> int:
+        """Return the device slot holding ``tenant``'s adapter, paging it
+        in from host memory if cold.  ``pinned`` tenants (live engine
+        slots mid-decode) are never evicted; raises ``RuntimeError`` when
+        every slot is pinned — the engine sizes ``pool_size >=
+        max_slots`` so that can only happen to misusing callers."""
+        if tenant not in self._host:
+            raise KeyError(f"tenant {tenant} was never published")
+        self._clock += 1
+        s = self._tenant_slot.get(tenant)
+        if s is not None:
+            self._last_used[s] = self._clock
+            return s
+        free = [i for i, t in enumerate(self._slot_tenant) if t is None]
+        if free:
+            s = free[0]
+        else:
+            victims = [i for i, t in enumerate(self._slot_tenant)
+                       if t not in pinned]
+            if not victims:
+                raise RuntimeError(
+                    f"adapter pool exhausted: all {self.pool_size} slots "
+                    f"pinned by live requests")
+            s = min(victims, key=lambda i: self._last_used[i])
+            evicted = self._slot_tenant[s]
+            del self._tenant_slot[evicted]
+            self.stats["evictions"] += 1
+        self._slot_tenant[s] = tenant
+        self._tenant_slot[tenant] = s
+        self._last_used[s] = self._clock
+        self.pool = self._jit_load(self.pool, self._host_adapter(tenant),
+                                   jnp.int32(s))
+        self.stats["swaps"] += 1
+        return s
+
+    def load_compiles(self) -> int:
+        """Distinct compiled loader programs (must stay 1: the slot index
+        is traced, so every load/hot-swap shares one executable)."""
+        return self._jit_load._cache_size()

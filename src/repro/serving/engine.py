@@ -85,6 +85,36 @@ All fault masks default to all-false, which the step consumes as
 bit-exact no-ops: a fault-free run reproduces the pre-fault engine token
 for token, and the one-call property still holds
 (``_jit_step_paged._cache_size() == 1``).
+
+MULTI-TENANT ADAPTERS (paged engine only): pass ``adapters=`` (an
+``AdapterRegistry``) instead of ``lora=`` and every request carries a
+``tenant`` id — one engine, one base model, one KV pool serve any number
+of tenant adapters:
+
+* the engine's lora argument becomes the registry's device POOL (leaves
+  ``(R, A, ...)``) plus a per-slot adapter index ``_aslot``; the fused
+  step gathers each slot's A/B tiles per row (the batched-gather LoRA
+  kernel — ``kernels.lora_matmul.lora_matmul_gathered``), so a
+  mixed-tenant batch decodes in the SAME single donated call
+  (``_jit_step_paged._cache_size() == 1`` still holds);
+* admission pins the tenants of live slots and ``acquire``s the new
+  request's adapter — LRU-paging a cold tenant in from host memory —
+  then threads the slot index through the one compiled chunk executable
+  (the chunk slices the pool with a traced index: still one program);
+* sampling keys gain the tenant fold —
+  ``fold_in(fold_in(fold_in(key, tenant), uid), token_idx)`` — so a
+  tenant's outputs are independent of co-residency, arrival order, and
+  adapter slot assignment;
+* ``tenant_quota`` caps live slots per tenant (0 = unlimited): the
+  scheduler admits the first FIFO entry whose tenant is under quota, so
+  one chatty tenant cannot monopolize the batch;
+* ``stats["tenant_tokens"]`` counts delivered tokens per tenant and
+  ``stats["adapter_swaps"]`` mirrors the registry's pool loads;
+* a registry with ``pool_size == 1`` and constant index is bit-identical
+  to the single-adapter engine (the pool constant-folds in
+  ``layers.dense``), and a non-multi-tenant engine's traced step is
+  unchanged by construction (the adapter operands are absent, not
+  zeros).
 """
 from __future__ import annotations
 
@@ -121,6 +151,7 @@ class Request:
     eos_id: int = -1
     priority: int = 0              # preemption: lower loses its slot first
     deadline_steps: Optional[int] = None   # max decode steps per residency
+    tenant: int = 0                # adapter owner (multi-tenant serving)
     # filled by the engine
     output: List[int] = field(default_factory=list)
     done: bool = False
@@ -159,7 +190,8 @@ class ServingEngine:
                  sc: SampleConfig = SampleConfig(greedy=True), seed: int = 0,
                  fused: bool = True, prefill_buckets: bool = True,
                  paged: Optional[bool] = None, page_size: int = 16,
-                 num_pages: Optional[int] = None, preempt: bool = False):
+                 num_pages: Optional[int] = None, preempt: bool = False,
+                 adapters=None, tenant_quota: int = 0):
         if getattr(cfg, "frontend", None):
             raise NotImplementedError(
                 "ServingEngine serves text-only requests; frontend archs "
@@ -186,6 +218,26 @@ class ServingEngine:
             raise NotImplementedError(
                 "paged KV requires an attention-only, non-windowed pattern")
         self.paged = paged
+        # multi-tenant adapter serving: the registry's device pool replaces
+        # the single lora argument; requires the paged engine (the chunk
+        # prefill and the fused gather step carry the adapter operands)
+        self.adapters = adapters
+        self.tenant_quota = tenant_quota
+        if adapters is not None:
+            if lora is not None:
+                raise ValueError("pass either lora= or adapters=, not both")
+            if not self.paged:
+                raise NotImplementedError(
+                    "multi-tenant adapters require the paged engine "
+                    "(fused, attention-only, max_len % page_size == 0)")
+            if adapters.pool_size < max_slots:
+                # with pool >= slots an admission can always pin the <=
+                # max_slots-1 live tenants and still find a victim slot
+                raise ValueError(
+                    f"adapter pool_size={adapters.pool_size} must be >= "
+                    f"max_slots={max_slots}")
+        elif tenant_quota:
+            raise ValueError("tenant_quota needs adapters=")
         self.key = jax.random.key(seed)
 
         self.queue: collections.deque[Request] = collections.deque()
@@ -214,7 +266,11 @@ class ServingEngine:
         self._nan_poke = np.zeros(B, bool)      # faults.inject: NaN logits
         self.stats = {"preemptions": 0, "deadline_preemptions": 0,
                       "quarantined": 0, "recomputed_tokens": 0,
-                      "resyncs": 0}
+                      "resyncs": 0, "tenant_tokens": {}, "adapter_swaps": 0}
+        # multi-tenant per-slot state: adapter pool slot + tenant id
+        # (inert placeholders when adapters is None — never passed to jit)
+        self._aslot = jnp.zeros((B,), jnp.int32)
+        self._tenant = jnp.zeros((B,), jnp.int32)
 
         if self.paged:
             if max_len % page_size:
@@ -251,9 +307,17 @@ class ServingEngine:
         max_len, B = self.max_len, self.max_slots
         base_key = self.key
 
-        def _slot_keys(uids, ngen):
-            return jax.vmap(lambda u, n: jax.random.fold_in(
-                jax.random.fold_in(base_key, u), n))(uids, ngen)
+        def _slot_keys(uids, ngen, tenants=None):
+            # multi-tenant: fold the tenant id in FIRST, so a tenant's
+            # stream is independent of co-residency, arrival order and
+            # adapter slot; single-tenant keys are byte-identical to the
+            # pre-adapter engine (no fold at all, not a fold of zero)
+            def one(u, n, t=None):
+                k = base_key if t is None else jax.random.fold_in(base_key, t)
+                return jax.random.fold_in(jax.random.fold_in(k, u), n)
+            if tenants is None:
+                return jax.vmap(one)(uids, ngen)
+            return jax.vmap(one)(uids, ngen, tenants)
 
         # -- fused decode step: decode + sample + bookkeeping, one call --
         def _step(params, lora, caches, last, positions, live, uids, ngen,
@@ -276,9 +340,14 @@ class ServingEngine:
             # -- fused PAGED decode step: preempt + page alloc + decode +
             #    NaN sentinel + sample + bookkeeping + page free, ONE
             #    donated call --------------------------------------------
+            # ``aslot``/``tenants`` are the multi-tenant operands: absent
+            # (None) for a single-adapter engine — the traced program is
+            # then literally the pre-adapter one — and (B,) int32 vectors
+            # when serving an AdapterRegistry pool, in which case ``lora``
+            # is the pool and the decode gathers each row's adapter
             def _step_paged(params, lora, caches, pager, bt, last, positions,
                             live, uids, ngen, maxnew, eos, age, deadline,
-                            evict, nan_poke):
+                            evict, nan_poke, aslot=None, tenants=None):
                 bidx = jnp.arange(B)
                 # preemption first: a slot the host marked for eviction or
                 # whose residency deadline fired gives its pages back to
@@ -302,7 +371,7 @@ class ServingEngine:
                 bt = bt.at[bidx, page_idx].set(jnp.where(need, newp, cur))
                 logits, caches = model_mod.paged_decode_step(
                     cfg, params, last[:, None], caches, bt, positions,
-                    lora=lora, rt=rt)
+                    lora=lora, rt=rt, adapter_idx=aslot)
                 # NaN/inf sentinel: a slot whose logits go non-finite
                 # (model blow-up, or an injected poke) is quarantined —
                 # its pages free below and the host records the error —
@@ -312,7 +381,8 @@ class ServingEngine:
                 bad = ok & ~finite
                 ok = ok & finite
                 safe = jnp.where(finite[:, None], logits, 0.0)
-                nxt = sample_logits_per_key(safe, _slot_keys(uids, ngen), sc)
+                nxt = sample_logits_per_key(
+                    safe, _slot_keys(uids, ngen, tenants), sc)
                 nxt = jnp.where(ok, nxt, 0)
                 ngen1 = ngen + ok.astype(jnp.int32)
                 done = ok & ((nxt == eos) | (ngen1 >= maxnew) |
@@ -334,22 +404,36 @@ class ServingEngine:
             #    recomputed, so the requeued request resumes its OWN RNG
             #    stream and continues token-identically -------------------
             def _chunk(params, lora, caches, pager, bt, tokens, slot, start,
-                       true_len, uid, tok_idx):
+                       true_len, uid, tok_idx, aslot=None, tenant=None):
                 pager, newp, _ = paging.alloc_pages(
                     pager, jnp.ones((1,), bool))
                 bt = bt.at[slot, start // PS].set(newp[0])
                 row = jax.lax.dynamic_index_in_dim(bt, slot, 0,
                                                    keepdims=False)
                 li = jnp.clip(true_len - 1 - start, 0, PS - 1)
+                if aslot is not None:
+                    # multi-tenant: ``lora`` is the registry pool; slice
+                    # this request's adapter out with a TRACED index so the
+                    # one-chunk-executable property survives any tenant mix
+                    lora = jax.tree.map(
+                        lambda v: jax.lax.dynamic_index_in_dim(
+                            v, aslot, 1, keepdims=False), lora)
                 logits, caches = model_mod.paged_prefill_chunk(
                     cfg, params, tokens, caches, row, start, li,
                     lora=lora, rt=rt)
-                k = jax.random.fold_in(jax.random.fold_in(base_key, uid),
-                                       tok_idx)
+                k = (base_key if tenant is None
+                     else jax.random.fold_in(base_key, tenant))
+                k = jax.random.fold_in(jax.random.fold_in(k, uid), tok_idx)
                 tok0 = sample_logits(logits, k, sc)[0]
                 return tok0, caches, pager, bt
 
             self._jit_chunk = jax.jit(_chunk, donate_argnums=(2, 3, 4))
+
+            # -- record a claimed slot's adapter slot + tenant id --------
+            def _claim_mt(aslot_arr, tenant_arr, slot, a, t):
+                return aslot_arr.at[slot].set(a), tenant_arr.at[slot].set(t)
+
+            self._jit_claim_mt = jax.jit(_claim_mt, donate_argnums=(0, 1))
 
             # -- claim a slot after its prompt streamed through ----------
             def _claim(last, positions, live, uids, ngen, maxnew, eos, age,
@@ -490,6 +574,18 @@ class ServingEngine:
         toks = min(len(req.prompt) + req.max_new_tokens, self.max_len)
         return -(-toks // self.page_size)
 
+    def _lora_arg(self):
+        """What the compiled calls receive as ``lora``: the registry's
+        (possibly just-reloaded) device pool under multi-tenant serving,
+        else the single adapter."""
+        return self.adapters.pool if self.adapters is not None else self.lora
+
+    def _note_token(self, req: Request) -> None:
+        """Per-tenant delivered-token accounting (multi-tenant only)."""
+        if self.adapters is not None:
+            tt = self.stats["tenant_tokens"]
+            tt[req.tenant] = tt.get(req.tenant, 0) + 1
+
     # ------------------------------------------------------------------
     # admission
     # ------------------------------------------------------------------
@@ -511,17 +607,28 @@ class ServingEngine:
         P, PS = len(prefix), self.page_size
         if req.preempted:
             self.stats["recomputed_tokens"] += P
+        mt = ()
+        if self.adapters is not None:
+            # pin the tenants a live decode batch is actively gathering
+            # from; slot ``s`` is still free here, so at most max_slots-1
+            # tenants are pinned and (pool_size >= max_slots) a victim
+            # always exists for a cold tenant
+            pinned = {r.tenant for r in self.slots if r is not None}
+            aslot_i = self.adapters.acquire(req.tenant, pinned=pinned)
+            self.stats["adapter_swaps"] = self.adapters.stats["swaps"]
+            mt = (jnp.int32(aslot_i), jnp.int32(req.tenant))
         tok_d = None
         for start in range(0, P, PS):
             m = min(PS, P - start)
             chunk = prefix[start:start + m] + [0] * (PS - m)
             tokens = jnp.asarray(chunk, jnp.int32)[None]
             (tok_d, self.caches, self._pager, self._bt) = self._jit_chunk(
-                self.params, self.lora, self.caches, self._pager, self._bt,
-                tokens, jnp.int32(s), jnp.int32(start), jnp.int32(P),
-                jnp.int32(req.uid), jnp.int32(n))
+                self.params, self._lora_arg(), self.caches, self._pager,
+                self._bt, tokens, jnp.int32(s), jnp.int32(start),
+                jnp.int32(P), jnp.int32(req.uid), jnp.int32(n), *mt)
         tok = int(tok_d)
         req.output.append(tok)
+        self._note_token(req)
         if (tok == req.eos_id) or (len(req.output) >= req.max_new_tokens) \
                 or (P >= self.max_len):     # prefix filled the cache
             req.done = True
@@ -538,6 +645,9 @@ class ServingEngine:
             tok_d, jnp.int32(P), jnp.int32(req.uid), jnp.int32(n + 1),
             jnp.int32(req.max_new_tokens), jnp.int32(req.eos_id),
             jnp.int32(dl))
+        if mt:
+            self._aslot, self._tenant = self._jit_claim_mt(
+                self._aslot, self._tenant, jnp.int32(s), *mt)
         self.slots[s] = req
         return True
 
@@ -603,9 +713,33 @@ class ServingEngine:
         # two would evict each other forever
         self._evict_behind[victim] = True
 
+    def _admissible_index(self) -> int:
+        """Index of the first queued request whose tenant is under
+        ``tenant_quota`` live slots (-1 if none): one chatty tenant's
+        backlog cannot monopolize the batch, but FIFO order is preserved
+        within what the quota allows."""
+        if self.adapters is None or not self.tenant_quota:
+            return 0 if self.queue else -1
+        livec = collections.Counter(
+            r.tenant for r in self.slots if r is not None)
+        for i, req in enumerate(self.queue):
+            if livec[req.tenant] < self.tenant_quota:
+                return i
+        return -1
+
     def _admit(self) -> None:
         for s in range(self.max_slots):
             while self.slots[s] is None and self.queue:
+                qi = self._admissible_index()
+                if qi < 0:
+                    return          # every queued tenant is at quota
+                if qi:
+                    # promote the first under-quota request to the head so
+                    # the FIFO backpressure below holds for IT, not for a
+                    # quota-blocked entry in front of it
+                    req = self.queue[qi]
+                    del self.queue[qi]
+                    self.queue.appendleft(req)
                 if self.paged:
                     head = self.queue[0]
                     if len(head.prompt) < self.max_len:
@@ -636,14 +770,16 @@ class ServingEngine:
         if self.paged:
             evict_np = self._evict_req.copy()
             behind_np = self._evict_behind.copy()
+            mt = ((self._aslot, self._tenant)
+                  if self.adapters is not None else ())
             (nxt, done, victim, bad, self.caches, self._pager, self._bt,
              self._last, self._positions, self._live, self._ngen,
              self._age) = self._jit_step_paged(
-                self.params, self.lora, self.caches, self._pager, self._bt,
-                self._last, self._positions, self._live, self._uids,
-                self._ngen, self._maxnew, self._eos, self._age,
+                self.params, self._lora_arg(), self.caches, self._pager,
+                self._bt, self._last, self._positions, self._live,
+                self._uids, self._ngen, self._maxnew, self._eos, self._age,
                 self._deadline, jnp.asarray(evict_np),
-                jnp.asarray(self._nan_poke))
+                jnp.asarray(self._nan_poke), *mt)
             self._evict_req[:] = False
             self._evict_behind[:] = False
             self._nan_poke[:] = False
@@ -679,6 +815,7 @@ class ServingEngine:
                     self.stats["quarantined"] += 1
                     continue
                 req.output.append(int(nxt_h[s]))
+                self._note_token(req)
                 if done_h[s]:
                     req.done = True
                     self.slots[s] = None

@@ -1,0 +1,392 @@
+"""Multi-tenant adapter serving: the batched-gather LoRA kernel must match
+its jnp oracle (interpret mode) and the per-tenant unbatched calls; the
+AdapterRegistry must LRU-page cold tenants and hot-swap resident ones
+through ONE compiled loader; the engine must serve a mixed-tenant batch
+token-identically to per-tenant single-adapter engines in ONE compiled
+step; a size-1 pool must be BIT-identical to the single-adapter path; and
+per-tenant RNG streams must not depend on co-residency or arrival order."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro import models as M
+from repro.kernels.lora_matmul import (best_gather_blocks,
+                                       lora_matmul,
+                                       lora_matmul_gather_kernel,
+                                       lora_matmul_gathered,
+                                       lora_matmul_gathered_ref)
+from repro.models.generate import SampleConfig
+from repro.serving import AdapterRegistry, Request, ServingEngine
+
+
+def _pool_inputs(M_, K, N, r, A, dtype=jnp.float32, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 5)
+    x = jax.random.normal(ks[0], (M_, K), jnp.float32).astype(dtype)
+    w = (jax.random.normal(ks[1], (K, N)) * K ** -0.5).astype(dtype)
+    a = (jax.random.normal(ks[2], (A, r, K)) * K ** -0.5).astype(dtype)
+    b = jax.random.normal(ks[3], (A, N, r)).astype(dtype)
+    idx = jax.random.randint(ks[4], (M_,), 0, A, jnp.int32)
+    return x, w, a, b, idx
+
+
+# ---------------------------------------------------------------------------
+# kernel parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("M_,K,N,r,A", [(16, 64, 48, 4, 8),
+                                        (8, 128, 64, 8, 3),
+                                        (32, 64, 64, 2, 16)])
+def test_gather_kernel_matches_oracle(M_, K, N, r, A):
+    x, w, a, b, idx = _pool_inputs(M_, K, N, r, A)
+    yk = lora_matmul_gather_kernel(x, w, a, b, idx, scale=1.5,
+                                   bn=16, bk=32, interpret=True)
+    yr = lora_matmul_gathered_ref(x, w, a, b, idx, 1.5)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_gather_kernel_matches_per_tenant_unbatched():
+    """The batched gather over >= 8 distinct adapters equals running the
+    single-adapter fused kernel once per tenant on that tenant's rows."""
+    M_, K, N, r, A = 24, 64, 48, 4, 8
+    x, w, a, b, idx = _pool_inputs(M_, K, N, r, A, seed=3)
+    idx = jnp.arange(M_, dtype=jnp.int32) % A      # every adapter used
+    yk = lora_matmul_gather_kernel(x, w, a, b, idx, scale=0.5,
+                                   bn=16, bk=32, interpret=True)
+    for t in range(A):
+        rows = np.asarray(idx) == t
+        yt = lora_matmul(x[rows], w, a[t], b[t], scale=0.5,
+                         bm=8, bn=16, bk=32, interpret=True,
+                         use_kernel=True)
+        np.testing.assert_allclose(np.asarray(yk)[rows], np.asarray(yt),
+                                   atol=1e-5, rtol=1e-5,
+                                   err_msg=f"tenant {t}")
+
+
+def test_gathered_dispatch_oracle_and_padding():
+    """ops dispatch: oracle path == explicit-interpret kernel path, on
+    ragged shapes the dispatcher must pad, and leading batch dims with a
+    per-row index broadcast correctly."""
+    M_, K, N, r, A = 9, 70, 45, 3, 5
+    x, w, a, b, idx = _pool_inputs(M_, K, N, r, A, seed=7)
+    yo = lora_matmul_gathered(x, w, a, b, idx, scale=1.25, use_kernel=False)
+    yk = lora_matmul_gathered(x, w, a, b, idx, scale=1.25,
+                              bn=16, bk=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(yo), np.asarray(yk),
+                               atol=1e-5, rtol=1e-5)
+    # (B, T, K) input with a (B,) index: every token of row i wears
+    # adapter idx[i]
+    xb = x[:8].reshape(2, 4, K)
+    yb = lora_matmul_gathered(xb, w, a, b, idx[:2], scale=1.25,
+                              use_kernel=False)
+    flat_idx = jnp.repeat(idx[:2], 4)
+    yf = lora_matmul_gathered_ref(xb.reshape(-1, K), w, a, b, flat_idx, 1.25)
+    np.testing.assert_allclose(np.asarray(yb).reshape(-1, N),
+                               np.asarray(yf), atol=1e-5, rtol=1e-5)
+
+
+def test_gather_tuner_memo_separate_from_single():
+    """The gather autotuner memo key includes pool size and index dtype:
+    multi-tenant tuning can never collide with single-adapter tuning."""
+    from repro.kernels.lora_matmul.tune import _CACHE, _GATHER_CACHE, clear_cache
+    clear_cache()
+    bn, bk = best_gather_blocks(64, 128, 128, 4, pool=8)
+    assert 128 % bn == 0 and 128 % bk == 0
+    assert len(_GATHER_CACHE) == 1 and len(_CACHE) == 0
+    (key_,) = _GATHER_CACHE
+    assert 8 in key_                       # pool size is part of the key
+    assert "int32" in key_                 # index dtype is part of the key
+    # different pool size -> different memo entry, not a stale hit
+    best_gather_blocks(64, 128, 128, 4, pool=2)
+    assert len(_GATHER_CACHE) == 2
+    # memoized: same query returns the cached tuple without growing
+    assert best_gather_blocks(64, 128, 128, 4, pool=8) == (bn, bk)
+    assert len(_GATHER_CACHE) == 2
+    clear_cache()
+    assert not _GATHER_CACHE and not _CACHE
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def _cfg():
+    return get_arch("gpt2-s").reduced(num_layers=2)
+
+
+def _adapter(cfg, seed, rank=None):
+    return M.model.init_lora_stack(cfg, jax.random.key(seed), rank)
+
+
+def test_registry_lru_eviction_under_pressure():
+    cfg = _cfg()
+    reg = AdapterRegistry(cfg, pool_size=2)
+    for t in range(3):
+        reg.publish(t, _adapter(cfg, 100 + t))
+    s0, s1 = reg.acquire(0), reg.acquire(1)
+    assert {s0, s1} == {0, 1} and reg.stats["swaps"] == 2
+    reg.acquire(0)                       # touch: 1 becomes the LRU victim
+    s2 = reg.acquire(2)
+    assert s2 == s1                      # evicted the least-recently-used
+    assert not reg.resident(1) and reg.stats["evictions"] == 1
+    # pinned tenants are never evicted: 0 is the LRU now but pinned, so
+    # the victim must be 2
+    reg.acquire(0)
+    reg.acquire(2)                       # order makes 0 the LRU slot
+    reg.acquire(1, pinned={0})
+    assert reg.resident(0) and not reg.resident(2)
+    with pytest.raises(RuntimeError):
+        reg.acquire(2, pinned={0, 1})    # every slot pinned
+    with pytest.raises(KeyError):
+        reg.acquire(99)                  # never published
+
+
+def test_registry_hot_swap_one_compile_and_content():
+    """Loads and hot-swaps into ANY slot share one compiled loader, and
+    the pool slot really holds the latest published version."""
+    cfg = _cfg()
+    reg = AdapterRegistry(cfg, pool_size=3)
+    ads = {t: _adapter(cfg, 200 + t) for t in range(3)}
+    for t, a in ads.items():
+        reg.publish(t, a)
+    for t in range(3):
+        reg.acquire(t)
+    assert reg.load_compiles() == 1      # traced slot index: one program
+    v2 = _adapter(cfg, 999)
+    assert reg.version(1) == 1
+    assert reg.publish(1, v2) == 2       # resident -> hot swap in place
+    assert reg.stats["hot_swaps"] == 1
+    assert reg.load_compiles() == 1      # still one program after the swap
+    s = reg.slot_of(1)
+    got = jax.tree.map(lambda p: p[:, s], reg.pool)
+    for lg, lv in zip(jax.tree.leaves(got), jax.tree.leaves(v2)):
+        np.testing.assert_array_equal(np.asarray(lg), np.asarray(lv))
+    # shape-mismatched publish is rejected before touching the pool
+    with pytest.raises(ValueError):
+        reg.publish(0, _adapter(cfg, 5, rank=cfg.lora_rank * 2))
+
+
+# ---------------------------------------------------------------------------
+# engine end-to-end
+# ---------------------------------------------------------------------------
+
+def _mt_setup(num_tenants, seed=0):
+    cfg = _cfg()
+    params = M.init_params(cfg, jax.random.key(0))
+    ads = [_adapter(cfg, 100 + t) for t in range(num_tenants)]
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(5, cfg.vocab_size, rng.integers(4, 10)).tolist()
+               for _ in range(num_tenants)]
+    return cfg, params, ads, prompts
+
+
+def _run_engine(eng, reqs):
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert all(r.done for r in reqs)
+
+
+def test_mixed_batch_matches_per_tenant_engines():
+    """ONE fused donated step serves a mixed batch over 8 distinct tenant
+    adapters, token-identical to 8 per-tenant single-adapter engines."""
+    NT = 8
+    cfg, params, ads, prompts = _mt_setup(NT)
+    reg = AdapterRegistry(cfg, pool_size=NT)
+    for t, a in enumerate(ads):
+        reg.publish(t, a)
+    eng = ServingEngine(cfg, params, adapters=reg, max_slots=NT, max_len=32,
+                        sc=SampleConfig(greedy=True))
+    lens = [3, 5, 4, 6, 3, 4, 5, 3]
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=n, tenant=i)
+            for i, (p, n) in enumerate(zip(prompts, lens))]
+    _run_engine(eng, reqs)
+    assert eng._jit_step_paged._cache_size() == 1    # still ONE program
+    assert eng._jit_chunk._cache_size() == 1
+    for t in range(NT):
+        e1 = ServingEngine(cfg, params, lora=ads[t], max_slots=2, max_len=32,
+                           sc=SampleConfig(greedy=True))
+        r1 = Request(uid=t, prompt=prompts[t], max_new_tokens=lens[t])
+        _run_engine(e1, [r1])
+        assert r1.output == reqs[t].output, f"tenant {t}"
+    tt = eng.stats["tenant_tokens"]
+    assert tt == {t: lens[t] for t in range(NT)}
+    assert eng.stats["adapter_swaps"] == NT
+
+
+def test_lru_paging_under_engine_pressure():
+    """More tenants than pool slots: the engine LRU-pages adapters in and
+    out across admissions and every tenant still gets its own tokens."""
+    NT = 5
+    cfg, params, ads, prompts = _mt_setup(NT, seed=2)
+    reg = AdapterRegistry(cfg, pool_size=2)
+    for t, a in enumerate(ads):
+        reg.publish(t, a)
+    eng = ServingEngine(cfg, params, adapters=reg, max_slots=2, max_len=32,
+                        sc=SampleConfig(greedy=True))
+    reqs = [Request(uid=i, prompt=prompts[i], max_new_tokens=4, tenant=i)
+            for i in range(NT)]
+    _run_engine(eng, reqs)
+    assert reg.stats["evictions"] > 0
+    assert eng._jit_step_paged._cache_size() == 1
+    for t in range(NT):
+        e1 = ServingEngine(cfg, params, lora=ads[t], max_slots=1, max_len=32,
+                           sc=SampleConfig(greedy=True))
+        r1 = Request(uid=t, prompt=prompts[t], max_new_tokens=4)
+        _run_engine(e1, [r1])
+        assert r1.output == reqs[t].output, f"tenant {t}"
+
+
+def test_size1_pool_bit_identical_to_single_adapter():
+    """pool_size == 1 with a constant index constant-folds to the exact
+    single-adapter computation — the engines emit identical tokens AND the
+    dense layer emits bit-identical activations."""
+    cfg, params, ads, prompts = _mt_setup(1)
+    # layer-level bitwise check
+    from repro.models import layers as L
+    k1, k2 = jax.random.split(jax.random.key(4))
+    x = jax.random.normal(k1, (3, 8, cfg.d_model))
+    w = jax.random.normal(k2, (cfg.d_model, cfg.d_model)) * 0.02
+    single = {"a": jax.random.normal(jax.random.key(5), (4, cfg.d_model)),
+              "b": jax.random.normal(jax.random.key(6), (cfg.d_model, 4))}
+    pool = {"a": single["a"][None], "b": single["b"][None]}
+    y1 = L.dense(x, w, lora=single, lora_scale=2.0)
+    yp = L.dense(x, w, lora=pool, lora_scale=2.0,
+                 adapter_idx=jnp.zeros((3,), jnp.int32))
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(yp))
+    # engine-level token check
+    reg = AdapterRegistry(cfg, pool_size=1)
+    reg.publish(0, ads[0])
+    em = ServingEngine(cfg, params, adapters=reg, max_slots=1, max_len=32,
+                       sc=SampleConfig(greedy=True))
+    rm = Request(uid=0, prompt=prompts[0], max_new_tokens=6, tenant=0)
+    _run_engine(em, [rm])
+    e1 = ServingEngine(cfg, params, lora=ads[0], max_slots=1, max_len=32,
+                       sc=SampleConfig(greedy=True))
+    r1 = Request(uid=0, prompt=prompts[0], max_new_tokens=6)
+    _run_engine(e1, [r1])
+    assert rm.output == r1.output
+
+
+def test_tenant_rng_independent_of_coresidency():
+    """Under temperature sampling a tenant's output depends only on its
+    own (tenant, uid, token-index) stream — not on which other tenants
+    share the batch or the order requests arrived."""
+    NT = 3
+    cfg, params, ads, prompts = _mt_setup(NT, seed=5)
+    sc = SampleConfig(temperature=0.8)
+
+    def serve(order, slots):
+        reg = AdapterRegistry(cfg, pool_size=max(slots, NT))
+        for t, a in enumerate(ads):
+            reg.publish(t, a)
+        eng = ServingEngine(cfg, params, adapters=reg, max_slots=slots,
+                            max_len=32, sc=sc, seed=11)
+        reqs = {t: Request(uid=t, prompt=prompts[t], max_new_tokens=5,
+                           tenant=t) for t in order}
+        for t in order:
+            eng.submit(reqs[t])
+        eng.run()
+        return {t: r.output for t, r in reqs.items()}
+
+    together = serve([0, 1, 2], slots=3)
+    reordered = serve([2, 0, 1], slots=3)
+    serial = serve([1], slots=1) | serve([0], slots=1) | serve([2], slots=1)
+    for t in range(NT):
+        assert together[t] == reordered[t] == serial[t], f"tenant {t}"
+    # distinct tenants with the SAME uid and prompt draw different streams
+    reg = AdapterRegistry(cfg, pool_size=2)
+    reg.publish(0, ads[0])
+    reg.publish(1, ads[0])               # identical weights on purpose
+    eng = ServingEngine(cfg, params, adapters=reg, max_slots=2, max_len=32,
+                        sc=sc, seed=11)
+    ra = Request(uid=7, prompt=prompts[0], max_new_tokens=8, tenant=0)
+    rb = Request(uid=7, prompt=prompts[0], max_new_tokens=8, tenant=1)
+    _run_engine(eng, [ra, rb])
+    assert ra.output != rb.output
+
+
+def test_hot_swap_mid_decode():
+    """Publishing a retrained adapter for a RESIDENT tenant mid-decode
+    neither recompiles the fused step nor perturbs other tenants: the
+    co-resident tenant's tokens match its undisturbed solo run, and the
+    swapped tenant's next request uses the new weights."""
+    cfg, params, ads, prompts = _mt_setup(2, seed=6)
+    v2 = _adapter(cfg, 999)
+    reg = AdapterRegistry(cfg, pool_size=2)
+    reg.publish(0, ads[0])
+    reg.publish(1, ads[1])
+    eng = ServingEngine(cfg, params, adapters=reg, max_slots=2, max_len=32,
+                        sc=SampleConfig(greedy=True))
+    r0 = Request(uid=0, prompt=prompts[0], max_new_tokens=8, tenant=0)
+    r1 = Request(uid=1, prompt=prompts[1], max_new_tokens=8, tenant=1)
+    eng.submit(r0)
+    eng.submit(r1)
+    for _ in range(3):
+        eng.step()
+    reg.publish(1, v2)                   # hot swap under the live engine
+    eng.run()
+    assert r0.done and r1.done
+    assert eng._jit_step_paged._cache_size() == 1    # no recompile
+    assert reg.load_compiles() == 1
+    assert reg.stats["hot_swaps"] == 1
+    # tenant 0 never noticed: byte-identical to serving without the swap
+    es = ServingEngine(cfg, params, lora=ads[0], max_slots=1, max_len=32,
+                       sc=SampleConfig(greedy=True))
+    rs = Request(uid=0, prompt=prompts[0], max_new_tokens=8)
+    _run_engine(es, [rs])
+    assert r0.output == rs.output
+    # tenant 1's NEXT request decodes with the new weights
+    rn = Request(uid=5, prompt=prompts[1], max_new_tokens=6, tenant=1)
+    _run_engine(eng, [rn])
+    ev = ServingEngine(cfg, params, lora=v2, max_slots=1, max_len=32,
+                       sc=SampleConfig(greedy=True))
+    rv = Request(uid=5, prompt=prompts[1], max_new_tokens=6)
+    _run_engine(ev, [rv])
+    assert rn.output == rv.output
+
+
+def test_tenant_quota_caps_live_slots():
+    """tenant_quota=1: a chatty tenant's backlog cannot hold more than one
+    slot, the other tenant is admitted past it (FIFO within quota), and
+    every request still finishes with its own correct tokens."""
+    cfg, params, ads, prompts = _mt_setup(2, seed=8)
+    reg = AdapterRegistry(cfg, pool_size=2)
+    for t, a in enumerate(ads):
+        reg.publish(t, a)
+    eng = ServingEngine(cfg, params, adapters=reg, max_slots=2, max_len=32,
+                        sc=SampleConfig(greedy=True), tenant_quota=1)
+    chatty = [Request(uid=i, prompt=prompts[0], max_new_tokens=6, tenant=0)
+              for i in range(3)]
+    other = Request(uid=10, prompt=prompts[1], max_new_tokens=6, tenant=1)
+    for r in chatty:
+        eng.submit(r)
+    eng.submit(other)                    # queued BEHIND the chatty backlog
+    seen_both = False
+    for _ in range(200):
+        if not eng.queue and all(s is None for s in eng.slots):
+            break
+        eng.step()
+        live = [r.tenant for r in eng.slots if r is not None]
+        assert live.count(0) <= 1 and live.count(1) <= 1
+        seen_both = seen_both or set(live) == {0, 1}
+    assert all(r.done for r in chatty) and other.done
+    assert seen_both                     # quota let tenant 1 jump the line
+    # quota without a registry is a misconfiguration
+    with pytest.raises(ValueError):
+        ServingEngine(cfg, params, tenant_quota=1, max_len=32)
+
+
+def test_engine_rejects_bad_adapter_configs():
+    cfg, params, ads, _ = _mt_setup(1)
+    reg = AdapterRegistry(cfg, pool_size=1)
+    reg.publish(0, ads[0])
+    with pytest.raises(ValueError):      # both lora= and adapters=
+        ServingEngine(cfg, params, lora=ads[0], adapters=reg, max_len=32)
+    with pytest.raises(ValueError):      # pool smaller than the batch
+        ServingEngine(cfg, params, adapters=reg, max_slots=2, max_len=32)
+    with pytest.raises(NotImplementedError):   # needs the paged engine
+        ServingEngine(cfg, params, adapters=reg, max_slots=1, max_len=32,
+                      paged=False)
