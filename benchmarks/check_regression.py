@@ -141,6 +141,26 @@ GATES = [
         "multitenant/steps_mixed",
         "multitenant/steps_sequential",
     ),
+    (
+        # per-client BCD modeled delay with the bits axis enabled vs the
+        # pre-precision search on the same edge scenario — both rows are
+        # deterministic model seconds, so the ratio is noise-free; it
+        # catches any erosion of the delay the quantized boundary buys
+        "BENCH_precision.json",
+        "precision_delay_gain",
+        "precision/delay_bits_opt",
+        "precision/delay_bits16",
+    ),
+    (
+        # final eval loss of the int8-boundary episode vs the f32 run of
+        # the SAME fixed episode (deterministic milli-loss rows): the gate
+        # holds the paper-level claim that the quantized boundary is
+        # convergence-neutral (baseline ~1.0)
+        "BENCH_precision.json",
+        "precision_quant_loss",
+        "precision/loss_quant_milli",
+        "precision/loss_f32_milli",
+    ),
 ]
 
 
@@ -154,6 +174,7 @@ SUITE_FOR_FILE = {
     "BENCH_faults.json": "faults",
     "BENCH_byzantine.json": "byzantine",
     "BENCH_multitenant.json": "multitenant",
+    "BENCH_precision.json": "precision",
 }
 
 

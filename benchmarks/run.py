@@ -14,6 +14,7 @@
   faults  bench_faults       failure-recovery cost: preemption recompute + rollback
   byzantine bench_byzantine  attacker damage vs robust-aggregation defense
   multitenant bench_multitenant  batched-gather LoRA + mixed-tenant vs sequential
+  precision bench_precision  bits-axis delay gain + int8-boundary episode loss
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only table4,fig5 ...]
 """
@@ -27,8 +28,8 @@ import traceback
 
 from . import (bench_byzantine, bench_complexity, bench_convergence,
                bench_dynamic, bench_faults, bench_kernels, bench_latency,
-               bench_multitenant, bench_ppl, bench_resource, bench_roofline,
-               bench_serving, bench_traffic)
+               bench_multitenant, bench_ppl, bench_precision, bench_resource,
+               bench_roofline, bench_serving, bench_traffic)
 
 SUITES = {
     "table3": bench_complexity.main,
@@ -44,6 +45,7 @@ SUITES = {
     "faults": bench_faults.main,
     "byzantine": bench_byzantine.main,
     "multitenant": bench_multitenant.main,
+    "precision": bench_precision.main,
 }
 
 # perf-trajectory snapshots: these row prefixes land in JSON files CI
@@ -59,6 +61,7 @@ SNAPSHOTS = {
     "BENCH_faults.json": ("faults/",),
     "BENCH_byzantine.json": ("byzantine/",),
     "BENCH_multitenant.json": ("multitenant/",),
+    "BENCH_precision.json": ("precision/",),
 }
 
 

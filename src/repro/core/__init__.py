@@ -17,12 +17,14 @@ from .latency import (client_round_seconds, client_round_seconds_host,
                       workload_tables)
 from .lora import (adapter_bytes_per_layer, client_slot_masks, count_params,
                    merge_adapter, split_tree)
+from ..precision import (PrecisionConfig, dequantize_weight, fake_quant,
+                         quantize_kv_int8, quantize_weight_int8)
 from .resource import (Allocation, HeteroAllocation, Problem, as_hetero,
                        baseline, bcd_minimize_delay,
                        bcd_minimize_delay_per_client, best_global_pair,
                        greedy_subchannels, greedy_subchannels_het, objective,
                        objective_grid, objective_het, reallocate_warm,
-                       refine_per_client, solve_power_control,
+                       refine_per_client, search_bits, solve_power_control,
                        solve_power_control_het, solve_power_control_slsqp,
                        total_delay)
 from .sfl import CentralizedLoRA, RoundDynamics, SflLLM, SflState
@@ -47,8 +49,11 @@ __all__ = [
     "baseline", "bcd_minimize_delay", "bcd_minimize_delay_per_client",
     "best_global_pair", "greedy_subchannels", "greedy_subchannels_het",
     "objective", "objective_grid", "objective_het", "reallocate_warm",
-    "refine_per_client", "solve_power_control", "solve_power_control_het",
-    "solve_power_control_slsqp", "total_delay", "CentralizedLoRA",
+    "refine_per_client", "search_bits", "solve_power_control",
+    "solve_power_control_het",
+    "solve_power_control_slsqp", "total_delay", "PrecisionConfig",
+    "fake_quant", "quantize_weight_int8", "dequantize_weight",
+    "quantize_kv_int8", "CentralizedLoRA",
     "RoundDynamics", "SflLLM", "SflState", "mu_vector", "valid_splits",
     "layer_workloads", "lm_head_flops",
 ]

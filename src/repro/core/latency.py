@@ -98,7 +98,8 @@ def workload_tables(cfg: ArchConfig, seq_len: int) -> Dict[str, np.ndarray]:
 
 def client_round_seconds(tables: Dict[str, np.ndarray], ell, rank, f_hz,
                          kappa, rates_main, rates_fed, batch: int,
-                         local_steps: int, retx_main=None, retx_fed=None):
+                         local_steps: int, retx_main=None, retx_fed=None,
+                         act_bits=None):
     """Traced (jnp) client share of one global round, per client:
 
         T_k = I * (T_k^F + E[m] T_k^s + T_k^B) + E[m] T_k^f  (eqs. 8/10/13/15)
@@ -116,7 +117,15 @@ def client_round_seconds(tables: Dict[str, np.ndarray], ell, rank, f_hz,
     skips the multiply entirely (the static graph is untouched); an
     explicit all-ones array multiplies by 1.0, which is bit-exact, so an
     outage-free round of an outage-aware episode reproduces the plain
-    deadline trajectory."""
+    deadline trajectory.
+
+    ``act_bits`` (optional (K,) array or scalar): bits per boundary
+    activation under quantized-boundary training (``repro.precision``) —
+    the upload payload scales by ``act_bits / 16`` relative to the fp16
+    wire format the Gamma_s byte tables assume.  ``None`` skips the
+    multiply entirely; an explicit 16.0 multiplies by 1.0, which is
+    bit-exact, so a full-precision round of a precision-aware episode
+    reproduces the plain trajectory."""
     import jax.numpy as jnp
 
     ell = jnp.asarray(ell, jnp.int32)
@@ -127,6 +136,9 @@ def client_round_seconds(tables: Dict[str, np.ndarray], ell, rank, f_hz,
     dtheta = rank * jnp.asarray(tables["dxi_cum"], jnp.float32)[ell]
     t_fp = batch * kappa * (phi + dphi) / f_hz
     t_up = batch * gamma * 8.0 / jnp.maximum(rates_main, 1e-9)
+    if act_bits is not None:
+        t_up = t_up * (jnp.asarray(act_bits, jnp.float32)
+                       * jnp.float32(1.0 / 16.0))
     if retx_main is not None:
         t_up = t_up * retx_main
     t_bp = 2.0 * t_fp
@@ -139,7 +151,8 @@ def client_round_seconds(tables: Dict[str, np.ndarray], ell, rank, f_hz,
 def client_round_seconds_host(tables: Dict[str, np.ndarray], ell_k, rank_k,
                               f_hz, kappa, rates_main, rates_fed,
                               batch: int, local_steps: int,
-                              retx_main=None, retx_fed=None) -> np.ndarray:
+                              retx_main=None, retx_fed=None,
+                              act_bits=None) -> np.ndarray:
     """Numpy twin of :func:`client_round_seconds` — same tables, same
     formula, and the SAME float32 arithmetic (term order included), so a
     host-side dropout prediction agrees bit for bit with the traced
@@ -156,6 +169,8 @@ def client_round_seconds_host(tables: Dict[str, np.ndarray], ell_k, rank_k,
         / np.asarray(f_hz, f32)
     t_up = f32(batch) * gamma * f32(8.0) / np.maximum(
         np.asarray(rates_main, f32), f32(1e-9))
+    if act_bits is not None:
+        t_up = t_up * (np.asarray(act_bits, f32) * f32(1.0 / 16.0))
     if retx_main is not None:
         t_up = t_up * np.asarray(retx_main, f32)
     t_bp = f32(2.0) * t_fp

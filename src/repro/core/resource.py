@@ -22,16 +22,31 @@ from ..configs.base import ArchConfig
 from ..configs.system import SystemConfig
 from .channel import ClientEnv, min_power_for_rate, rate_for_power, subchannel_bandwidths
 from .convergence import ConvergenceModel, DEFAULT_E
-from .latency import (SplitWorkload, het_local_round_latency, split_workload,
+from .latency import (SplitWorkload, split_workload, t_act_upload,
                       t_client_bp, t_client_fp, t_lora_upload, t_server_bp,
-                      t_server_fp)
+                      t_server_bp_het, t_server_fp, t_server_fp_het)
 from .split import valid_splits
 from .workload import layer_workloads
 
 
+#: Empirical round-count inflation of a quantized split boundary: fewer
+#: bits on the wire is (slightly) noisier SGD, so the search must TRADE
+#: upload time against extra rounds rather than always picking min bits.
+#: 16 maps to exactly 1.0 (multiplying by it is bit-exact — the disarmed
+#: search reproduces the pre-precision objective float for float).
+BITS_ROUND_PENALTY = {16: 1.0, 8: 1.05, 4: 1.25}
+
+
+def bits_round_penalty(bits) -> float:
+    return BITS_ROUND_PENALTY[int(bits)]
+
+
 @dataclass
 class Allocation:
-    """One complete decision (r^s, r^f, p^s, p^f, mu, r) of problem (18)."""
+    """One complete decision (r^s, r^f, p^s, p^f, mu, r) of problem (18),
+    extended with the boundary-activation bit-width ``act_bits`` (the
+    precision axis of the search; 16 = full precision, exactly the paper's
+    problem)."""
 
     assign_main: np.ndarray            # (M,) client index per subchannel
     assign_fed: np.ndarray             # (N,)
@@ -39,6 +54,7 @@ class Allocation:
     power_fed: np.ndarray              # (K,)
     ell_c: int
     rank: int
+    act_bits: int = 16
 
     def bw_main(self, sys_cfg: SystemConfig) -> np.ndarray:
         bws = subchannel_bandwidths(sys_cfg, "main")
@@ -81,6 +97,11 @@ class Problem:
     local_steps: int
     e_model: ConvergenceModel = DEFAULT_E
     rank_candidates: Tuple[int, ...] = (1, 2, 4, 6, 8)
+    # precision axis of the search: candidate boundary-activation
+    # bit-widths.  The default (16,) is exactly the paper's problem — the
+    # bits loops collapse to one full-precision trial and every scale
+    # multiply is by 1.0 (bit-exact).
+    bits_candidates: Tuple[int, ...] = (16,)
     memoize: bool = True
 
     def __post_init__(self):
@@ -135,14 +156,18 @@ def objective(prob: Problem, alloc: Allocation) -> float:
     b, K = prob.batch, len(prob.envs)
     r_main = alloc.rates_main(prob.sys_cfg, prob.envs)
     r_fed = alloc.rates_fed(prob.sys_cfg, prob.envs)
-    bits_act = b * sw.gamma_s * 8.0
+    # quantized boundary: the payload scales by act_bits/16 relative to
+    # the fp16 wire format of the Gamma_s byte tables, and the round count
+    # pays the precision penalty; 16 multiplies by exactly 1.0 twice
+    bits_act = b * sw.gamma_s * 8.0 * (alloc.act_bits / 16.0)
     t1 = max(t_client_fp(sw, e, b) + bits_act / max(r, 1e-9)
              for e, r in zip(prob.envs, r_main))
     t2 = max(t_client_bp(sw, e, b) for e in prob.envs)
     t3 = max(sw.dtheta_c * 8.0 / max(r, 1e-9) for r in r_fed)
     t_local = (t1 + t_server_fp(sw, prob.sys_cfg, K, b)
                + t_server_bp(sw, prob.sys_cfg, K, b) + t2)
-    return prob.e_model(alloc.rank) * (prob.local_steps * t_local + t3)
+    e_rounds = prob.e_model(alloc.rank) * bits_round_penalty(alloc.act_bits)
+    return e_rounds * (prob.local_steps * t_local + t3)
 
 
 # ---------------------------------------------------------------------------
@@ -156,9 +181,12 @@ def _uniform_power(prob: Problem, n_assigned_bw: np.ndarray) -> np.ndarray:
     return np.full(K, min(prob.sys_cfg.p_max_w, prob.sys_cfg.p_th_w / K))
 
 
-def _greedy_subchannels_core(prob: Problem, sws: "List[SplitWorkload]"):
+def _greedy_subchannels_core(prob: Problem, sws: "List[SplitWorkload]",
+                             act_scale=None):
     """Algorithm 2 on per-client workloads; returns (assign_m, assign_f,
-    p_k).  Homogeneous callers pass K copies of one SplitWorkload."""
+    p_k).  Homogeneous callers pass K copies of one SplitWorkload.
+    ``act_scale`` (optional (K,) of act_bits/16) shrinks each straggler's
+    modeled upload payload under a quantized boundary."""
     sys_cfg, envs = prob.sys_cfg, prob.envs
     K = len(envs)
     bws_m = subchannel_bandwidths(sys_cfg, "main")
@@ -183,8 +211,9 @@ def _greedy_subchannels_core(prob: Problem, sws: "List[SplitWorkload]"):
     def t_main(k):
         bw = bws_m[assign_m == k].sum()
         r = rate_for_power(p_k[k], bw, envs[k].gain_main, sys_cfg.noise_psd_w_hz)
+        s = 1.0 if act_scale is None else act_scale[k]
         return (t_client_fp(sws[k], envs[k], b)
-                + b * sws[k].gamma_s * 8.0 / max(r, 1e-9))
+                + b * sws[k].gamma_s * 8.0 * s / max(r, 1e-9))
 
     def t_fed(k):
         bw = bws_f[assign_f == k].sum()
@@ -205,13 +234,16 @@ def _greedy_subchannels_core(prob: Problem, sws: "List[SplitWorkload]"):
     return assign_m, assign_f, p_k
 
 
-def greedy_subchannels(prob: Problem, ell_c: int, rank: int) -> Allocation:
+def greedy_subchannels(prob: Problem, ell_c: int, rank: int,
+                       act_bits: int = 16) -> Allocation:
     sw = prob.sw(ell_c, rank)
+    K = len(prob.envs)
     assign_m, assign_f, p_k = _greedy_subchannels_core(
-        prob, [sw] * len(prob.envs))
+        prob, [sw] * K,
+        act_scale=None if act_bits == 16 else [act_bits / 16.0] * K)
     return Allocation(assign_main=assign_m, assign_fed=assign_f,
                       power_main=p_k.copy(), power_fed=p_k.copy(),
-                      ell_c=ell_c, rank=rank)
+                      ell_c=ell_c, rank=rank, act_bits=int(act_bits))
 
 
 # ---------------------------------------------------------------------------
@@ -277,7 +309,7 @@ def solve_power_control(prob: Problem, alloc: Allocation) -> Allocation:
     noise = sys_cfg.noise_psd_w_hz
 
     compute = np.array([t_client_fp(sw, e, b) for e in envs])
-    bits_act = np.full(K, b * sw.gamma_s * 8.0)
+    bits_act = np.full(K, b * sw.gamma_s * 8.0 * (alloc.act_bits / 16.0))
     _, p_main = _solve_minmax_rate(compute, bits_act, alloc.bw_main(sys_cfg),
                                    np.array([e.gain_main for e in envs]),
                                    noise, sys_cfg.p_max_w, sys_cfg.p_th_w)
@@ -336,7 +368,8 @@ def solve_power_control_slsqp(prob: Problem, alloc: Allocation) -> Allocation:
     compute = np.array([t_client_fp(sw, e, b) for e in envs])
     p_main, _ = solve_side(alloc.bw_main(sys_cfg),
                            np.array([e.gain_main for e in envs]), compute,
-                           np.full(K, b * sw.gamma_s * 8.0))
+                           np.full(K, b * sw.gamma_s * 8.0
+                                   * (alloc.act_bits / 16.0)))
     p_fed, _ = solve_side(alloc.bw_fed(sys_cfg),
                           np.array([e.gain_fed for e in envs]), np.zeros(K),
                           np.full(K, sw.dtheta_c * 8.0))
@@ -347,26 +380,30 @@ def solve_power_control_slsqp(prob: Problem, alloc: Allocation) -> Allocation:
 # P3 / P4: exhaustive searches over the (ell, rank) objective grid
 # ---------------------------------------------------------------------------
 
-def _eval_pair(prob: Problem, alloc: Allocation, ell: int, rank: int
-               ) -> Tuple[Allocation, float]:
-    """Power-control + objective for one (ell, rank) cell, memoized on the
-    current subchannel assignment: the P3/P4 sweeps of consecutive BCD
-    iterations revisit the same cells (the assignment usually stabilises
-    after a couple of iterations), so each cell's convex power solve runs
-    once per episode instead of once per sweep."""
+def _eval_pair(prob: Problem, alloc: Allocation, ell: int, rank: int,
+               bits: Optional[int] = None) -> Tuple[Allocation, float]:
+    """Power-control + objective for one (ell, rank, bits) cell, memoized
+    on the current subchannel assignment: the P3/P4 sweeps of consecutive
+    BCD iterations revisit the same cells (the assignment usually
+    stabilises after a couple of iterations), so each cell's convex power
+    solve runs once per episode instead of once per sweep."""
+    if bits is None:
+        bits = alloc.act_bits
     key = None
     if prob.memoize:
         key = (alloc.assign_main.tobytes(), alloc.assign_fed.tobytes(),
-               int(ell), int(rank))
+               int(ell), int(rank), int(bits))
         hit = prob._pair_cache.get(key)
         if hit is not None:
             prob._stats["pair_hits"] += 1
             p_main, p_fed, t = hit
             return replace(alloc, ell_c=int(ell), rank=int(rank),
+                           act_bits=int(bits),
                            power_main=p_main.copy(),
                            power_fed=p_fed.copy()), t
     cand = solve_power_control(prob, replace(alloc, ell_c=int(ell),
-                                             rank=int(rank)))
+                                             rank=int(rank),
+                                             act_bits=int(bits)))
     t = objective(prob, cand)
     if key is not None:
         prob._stats["pair_misses"] += 1
@@ -377,7 +414,8 @@ def _eval_pair(prob: Problem, alloc: Allocation, ell: int, rank: int
 
 def objective_grid(prob: Problem, alloc: Allocation) -> dict:
     """The full (ell, rank) -> modeled-delay grid under ``alloc``'s
-    subchannel assignment (each cell with its own optimal power)."""
+    subchannel assignment (each cell with its own optimal power and the
+    allocation's current bit-width)."""
     return {(ell, r): _eval_pair(prob, alloc, ell, r)[1]
             for ell in valid_splits(prob.cfg)
             for r in prob.rank_candidates}
@@ -385,10 +423,15 @@ def objective_grid(prob: Problem, alloc: Allocation) -> dict:
 
 def best_global_pair(prob: Problem, alloc: Allocation
                      ) -> Tuple[Allocation, float]:
-    """Exhaustive best single (ell, rank) for the whole fleet."""
-    grid = objective_grid(prob, alloc)
-    (ell, r), t = min(grid.items(), key=lambda kv: kv[1])
-    return _eval_pair(prob, alloc, ell, r)[0], t
+    """Exhaustive best single (ell, rank, bits) for the whole fleet; the
+    bits axis runs over ``prob.bits_candidates`` ((16,) by default, which
+    collapses to exactly the paper's (ell, rank) search)."""
+    cells = {(ell, r, bb): _eval_pair(prob, alloc, ell, r, bb)[1]
+             for ell in valid_splits(prob.cfg)
+             for r in prob.rank_candidates
+             for bb in prob.bits_candidates}
+    (ell, r, bb), t = min(cells.items(), key=lambda kv: kv[1])
+    return _eval_pair(prob, alloc, ell, r, bb)[0], t
 
 
 def search_split(prob: Problem, alloc: Allocation) -> Allocation:
@@ -409,6 +452,17 @@ def search_rank(prob: Problem, alloc: Allocation) -> Allocation:
     return best
 
 
+def search_bits(prob: Problem, alloc: Allocation) -> Allocation:
+    """P5: exhaustive over candidate boundary bit-widths (the precision
+    block of the extended BCD).  A no-op when ``bits_candidates == (16,)``."""
+    best, best_t = alloc, objective(prob, alloc)
+    for bb in prob.bits_candidates:
+        cand, t = _eval_pair(prob, alloc, alloc.ell_c, alloc.rank, bb)
+        if t < best_t:
+            best, best_t = cand, t
+    return best
+
+
 # ---------------------------------------------------------------------------
 # Algorithm 3: BCD
 # ---------------------------------------------------------------------------
@@ -423,14 +477,17 @@ def bcd_minimize_delay(prob: Problem, *, ell0: Optional[int] = None,
     alloc = solve_power_control(prob, alloc)
     hist = [objective(prob, alloc)]
     for it in range(max_iters):
-        alloc = greedy_subchannels(prob, alloc.ell_c, alloc.rank)      # P1
+        alloc = greedy_subchannels(prob, alloc.ell_c, alloc.rank,
+                                   act_bits=alloc.act_bits)            # P1
         alloc = solve_power_control(prob, alloc)                       # P2
         alloc = search_split(prob, alloc)                              # P3
         alloc = search_rank(prob, alloc)                               # P4
+        alloc = search_bits(prob, alloc)                               # P5
         hist.append(objective(prob, alloc))
         if verbose:
             print(f"BCD iter {it}: T = {hist[-1]:.3f}s "
-                  f"(split={alloc.ell_c}, rank={alloc.rank})")
+                  f"(split={alloc.ell_c}, rank={alloc.rank}, "
+                  f"bits={alloc.act_bits})")
         if abs(hist[-2] - hist[-1]) <= eps * max(hist[-2], 1e-12):
             break
     return alloc, hist
@@ -445,11 +502,14 @@ class HeteroAllocation(Allocation):
     """Allocation with per-client split points and LoRA ranks.
 
     ``ell_k``/``rank_k`` are (K,) int arrays; the scalar ``ell_c``/``rank``
-    fields hold max() views for homogeneous consumers.  Feed to
+    fields hold max() views for homogeneous consumers.  ``bits_k`` (None =
+    all 16) carries each client's boundary-activation bit-width; the
+    scalar ``act_bits`` holds the max() view.  Feed to
     ``SflLLM.from_allocation`` to train the mixed fleet it describes."""
 
     ell_k: np.ndarray = None
     rank_k: np.ndarray = None
+    bits_k: np.ndarray = None
 
 
 def _het_sws(prob: Problem, ells, ranks) -> List[SplitWorkload]:
@@ -461,29 +521,46 @@ def objective_het(prob: Problem, alloc: HeteroAllocation) -> float:
     global adapter's convergence under zero-pad slot-wise aggregation:
     every client contributes to the slots it owns, so the fleet behaves
     like its average capacity, E = mean_k E(r_k) (exactly E(r) when ranks
-    are uniform, so the homogeneous objective embeds unchanged)."""
+    are uniform, so the homogeneous objective embeds unchanged).
+
+    Per-client boundary bit-widths ``bits_k`` scale each client's upload
+    payload by bits/16 and inflate its round count by the precision
+    penalty; all-16 (or None) multiplies by exactly 1.0 everywhere."""
     ells, ranks = alloc.ell_k, alloc.rank_k
+    bits = (alloc.bits_k if getattr(alloc, "bits_k", None) is not None
+            else np.full(len(ranks), 16))
     sws = _het_sws(prob, ells, ranks)
     b = prob.batch
     r_main = alloc.rates_main(prob.sys_cfg, prob.envs)
     r_fed = alloc.rates_fed(prob.sys_cfg, prob.envs)
-    t_local = het_local_round_latency(sws, prob.envs, r_main, prob.sys_cfg, b)
+    # (16) with per-client splits/ranks and quantized uploads
+    t1 = max(t_client_fp(sw, e, b) + t_act_upload(sw, r, b) * (int(bb) / 16.0)
+             for sw, e, r, bb in zip(sws, prob.envs, r_main, bits))
+    t2 = max(t_client_bp(sw, e, b) for sw, e in zip(sws, prob.envs))
+    t_local = (t1 + t_server_fp_het(sws, prob.sys_cfg, b)
+               + t_server_bp_het(sws, prob.sys_cfg, b) + t2)
     t3 = max(t_lora_upload(sw, r) for sw, r in zip(sws, r_fed))
-    e_rounds = float(np.mean([prob.e_model(int(r)) for r in ranks]))
+    e_rounds = float(np.mean([prob.e_model(int(r)) * bits_round_penalty(bb)
+                              for r, bb in zip(ranks, bits)]))
     return e_rounds * (prob.local_steps * t_local + t3)
 
 
-def greedy_subchannels_het(prob: Problem, ells, ranks) -> HeteroAllocation:
+def greedy_subchannels_het(prob: Problem, ells, ranks,
+                           bits=None) -> HeteroAllocation:
     """Algorithm 2 with per-client workloads: straggler times use each
-    client's own (ell_k, r_k)."""
+    client's own (ell_k, r_k) — and its own upload bit-width when ``bits``
+    is given."""
+    scale = None if bits is None else [int(bb) / 16.0 for bb in bits]
     assign_m, assign_f, p_k = _greedy_subchannels_core(
-        prob, _het_sws(prob, ells, ranks))
+        prob, _het_sws(prob, ells, ranks), act_scale=scale)
     return HeteroAllocation(
         assign_main=assign_m, assign_fed=assign_f,
         power_main=p_k.copy(), power_fed=p_k.copy(),
         ell_c=int(np.max(ells)), rank=int(np.max(ranks)),
+        act_bits=16 if bits is None else int(np.max(bits)),
         ell_k=np.asarray(ells, int).copy(),
-        rank_k=np.asarray(ranks, int).copy())
+        rank_k=np.asarray(ranks, int).copy(),
+        bits_k=None if bits is None else np.asarray(bits, int).copy())
 
 
 def solve_power_control_het(prob: Problem, alloc: HeteroAllocation
@@ -496,7 +573,9 @@ def solve_power_control_het(prob: Problem, alloc: HeteroAllocation
     noise = sys_cfg.noise_psd_w_hz
 
     compute = np.array([t_client_fp(sw, e, b) for sw, e in zip(sws, envs)])
-    bits_act = np.array([b * sw.gamma_s * 8.0 for sw in sws])
+    bscale = (np.ones(K) if getattr(alloc, "bits_k", None) is None
+              else alloc.bits_k.astype(float) / 16.0)
+    bits_act = np.array([b * sw.gamma_s * 8.0 for sw in sws]) * bscale
     _, p_main = _solve_minmax_rate(compute, bits_act, alloc.bw_main(sys_cfg),
                                    np.array([e.gain_main for e in envs]),
                                    noise, sys_cfg.p_max_w, sys_cfg.p_th_w)
@@ -511,34 +590,46 @@ def solve_power_control_het(prob: Problem, alloc: HeteroAllocation
 def refine_per_client(prob: Problem, alloc: HeteroAllocation, *,
                       max_sweeps: int = 3, verbose: bool = False
                       ) -> Tuple[HeteroAllocation, List[float]]:
-    """Greedy per-client coordinate descent on (ell_k, r_k): sweep the
-    clients, trying every (split, rank) pair for one client with the rest
-    frozen (power re-solved per trial); accept only strict improvements,
-    re-greedy the subchannels between sweeps.  Monotone by construction,
-    so the result is never worse than its (usually homogeneous) seed."""
+    """Greedy per-client coordinate descent on (ell_k, r_k, bits_k): sweep
+    the clients, trying every (split, rank, bits) triple for one client
+    with the rest frozen (power re-solved per trial); accept only strict
+    improvements, re-greedy the subchannels between sweeps.  Monotone by
+    construction, so the result is never worse than its (usually
+    homogeneous) seed.  With the default ``bits_candidates == (16,)`` the
+    bits loop collapses and this is exactly the pre-precision sweep."""
     best = solve_power_control_het(prob, alloc)
     best_t = objective_het(prob, best)
     hist = [best_t]
     splits = valid_splits(prob.cfg)
+    K = len(prob.envs)
     for sweep in range(max_sweeps):
         improved = False
-        for k in range(len(prob.envs)):
+        for k in range(K):
             for ell in splits:
                 for r in prob.rank_candidates:
-                    if (ell == best.ell_k[k] and r == best.rank_k[k]):
-                        continue
-                    ell_k = best.ell_k.copy()
-                    rank_k = best.rank_k.copy()
-                    ell_k[k], rank_k[k] = ell, r
-                    cand = replace(best, ell_k=ell_k, rank_k=rank_k,
-                                   ell_c=int(ell_k.max()),
-                                   rank=int(rank_k.max()))
-                    cand = solve_power_control_het(prob, cand)
-                    t = objective_het(prob, cand)
-                    if t < best_t:
-                        best, best_t, improved = cand, t, True
+                    for bb in prob.bits_candidates:
+                        cur_bits = (16 if best.bits_k is None
+                                    else int(best.bits_k[k]))
+                        if (ell == best.ell_k[k] and r == best.rank_k[k]
+                                and bb == cur_bits):
+                            continue
+                        ell_k = best.ell_k.copy()
+                        rank_k = best.rank_k.copy()
+                        bits_k = (np.full(K, 16) if best.bits_k is None
+                                  else best.bits_k.copy())
+                        ell_k[k], rank_k[k], bits_k[k] = ell, r, bb
+                        cand = replace(best, ell_k=ell_k, rank_k=rank_k,
+                                       bits_k=bits_k,
+                                       ell_c=int(ell_k.max()),
+                                       rank=int(rank_k.max()),
+                                       act_bits=int(bits_k.max()))
+                        cand = solve_power_control_het(prob, cand)
+                        t = objective_het(prob, cand)
+                        if t < best_t:
+                            best, best_t, improved = cand, t, True
         # new workloads may want a new straggler-feeding assignment
-        cand = greedy_subchannels_het(prob, best.ell_k, best.rank_k)
+        cand = greedy_subchannels_het(prob, best.ell_k, best.rank_k,
+                                      bits=best.bits_k)
         cand = solve_power_control_het(prob, cand)
         t = objective_het(prob, cand)
         if t < best_t:
@@ -564,8 +655,10 @@ def as_hetero(prob: Problem, alloc: Allocation) -> HeteroAllocation:
         power_main=alloc.power_main.copy(),
         power_fed=alloc.power_fed.copy(),
         ell_c=int(alloc.ell_c), rank=int(alloc.rank),
+        act_bits=int(getattr(alloc, "act_bits", 16)),
         ell_k=np.full(K, int(alloc.ell_c)),
-        rank_k=np.full(K, int(alloc.rank)))
+        rank_k=np.full(K, int(alloc.rank)),
+        bits_k=np.full(K, int(getattr(alloc, "act_bits", 16))))
 
 
 def reallocate_warm(prob: Problem, prev: Allocation, *, max_sweeps: int = 2,
@@ -587,7 +680,8 @@ def reallocate_warm(prob: Problem, prev: Allocation, *, max_sweeps: int = 2,
     t_prev = objective_het(prob, prev)
     keep = solve_power_control_het(prob, _copy_hetero(prev))
     regreedy = solve_power_control_het(
-        prob, greedy_subchannels_het(prob, prev.ell_k, prev.rank_k))
+        prob, greedy_subchannels_het(prob, prev.ell_k, prev.rank_k,
+                                     bits=prev.bits_k))
     seed = min((keep, regreedy), key=lambda a: objective_het(prob, a))
     best, hist = refine_per_client(prob, seed, max_sweeps=max_sweeps,
                                    verbose=verbose)
@@ -601,7 +695,9 @@ def _copy_hetero(alloc: HeteroAllocation) -> HeteroAllocation:
                    assign_fed=alloc.assign_fed.copy(),
                    power_main=alloc.power_main.copy(),
                    power_fed=alloc.power_fed.copy(),
-                   ell_k=alloc.ell_k.copy(), rank_k=alloc.rank_k.copy())
+                   ell_k=alloc.ell_k.copy(), rank_k=alloc.rank_k.copy(),
+                   bits_k=None if alloc.bits_k is None
+                   else alloc.bits_k.copy())
 
 
 def bcd_minimize_delay_per_client(prob: Problem, *, rank0: int = 4,
@@ -631,8 +727,9 @@ def bcd_minimize_delay_per_client(prob: Problem, *, rank0: int = 4,
         assign_fed=alloc.assign_fed.copy(),
         power_main=alloc.power_main.copy(),
         power_fed=alloc.power_fed.copy(),
-        ell_c=alloc.ell_c, rank=alloc.rank,
-        ell_k=np.full(K, alloc.ell_c), rank_k=np.full(K, alloc.rank))
+        ell_c=alloc.ell_c, rank=alloc.rank, act_bits=alloc.act_bits,
+        ell_k=np.full(K, alloc.ell_c), rank_k=np.full(K, alloc.rank),
+        bits_k=np.full(K, alloc.act_bits))
     best, hist2 = refine_per_client(prob, seed, max_sweeps=max_sweeps,
                                     verbose=verbose)
     return best, hist + hist2

@@ -55,6 +55,7 @@ every client present reproduces the static trajectory bit for bit.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Any, Dict, Optional, Sequence, Union
 
@@ -63,6 +64,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig, TrainConfig
+from ..precision import PrecisionConfig, fake_quant, round_key
 from ..models import stack as stack_mod
 from ..models.layers import apply_norm, embed, unembed
 from ..models.model import IGNORE_ID
@@ -83,7 +85,14 @@ def quantize_activations(s: jax.Array) -> jax.Array:
 
     Straight-through estimator: forward sees the dequantized value, the
     backward pass is the identity (the paper's activation-gradient download
-    stays exact)."""
+    stays exact).
+
+    Legacy helper: the trainer now routes boundary quantization through
+    ``repro.precision.fake_quant`` (traced per-client bit-widths,
+    stochastic rounding, error feedback); this stays as the standalone
+    per-token reference.  The ``jnp.maximum(scale, 1e-8)`` floor guards
+    the all-zero tensor (zero-init LoRA boundary on step 0): without it
+    the 0/0 divide turns the whole tensor into NaN."""
     scale = jnp.max(jnp.abs(s), axis=-1, keepdims=True) / 127.0
     scale = jnp.maximum(scale, 1e-8)
     deq = jnp.round(s / scale) * scale
@@ -107,6 +116,13 @@ class SflState:
     opt_client: Any
     opt_server: Any
     step: jax.Array
+    # error-feedback accumulators of the quantized split boundary
+    # (``PrecisionConfig.error_feedback``): the compression residual of the
+    # activation upload / gradient download, re-injected before the next
+    # step's quantizer.  ``None`` (the default) keeps the legacy pytree
+    # structure — a pre-precision checkpoint restores untouched.
+    err_act: Any = None       # (K, b, S, d) f32 or None
+    err_grad: Any = None      # (K, b, S, d) f32 or None
 
 
 @jax.tree_util.register_dataclass
@@ -143,6 +159,16 @@ class RoundDynamics:
       rep_hi           (K,) int32 split boundaries in repeat units;
       slot_masks       pytree of per-client slot occupancy masks;
       scales           (K,) adapter scales alpha / r_k.
+
+    Boundary precision (``repro.precision``; from ``allocation_dynamics``
+    or hand-built):
+      act_bits         (K,) f32 per-client activation bit-widths for the
+                       split-boundary upload — a traced operand of the
+                       same compiled round, so per-round re-allocation
+                       can also move each client's precision.  A row of
+                       16.0 passes that client's activations through
+                       bit-identically (in-graph ``jnp.where`` disarm);
+                       ``None`` falls back to the trainer's static bits.
 
     Outage + HARQ retransmissions (``core.channel`` outage model):
       retx_main / retx_fed  (K,) expected transmission counts E[m] >= 1 per
@@ -196,6 +222,7 @@ class RoundDynamics:
     poison: Optional[jax.Array] = None
     robust: Optional[Any] = None
     byzantine: Optional[Any] = None
+    act_bits: Optional[jax.Array] = None
 
 
 class SflLLM:
@@ -207,6 +234,7 @@ class SflLLM:
                  rt: Optional[Runtime] = None,
                  aux_coef: Optional[float] = None,
                  act_quant: bool = False,
+                 act_bits: Union[int, Sequence[int], None] = None,
                  mesh=None, donate: bool = True,
                  ranks: Optional[Sequence[int]] = None,
                  ell_range: Optional[Sequence[int]] = None,
@@ -265,7 +293,42 @@ class SflLLM:
         self.rep_split = self.rep_max
 
         self.aux_coef = cfg.router_aux_coef if aux_coef is None else aux_coef
-        self.act_quant = act_quant
+
+        # ---- boundary precision (repro.precision) -----------------------
+        # one typed config on the Runtime is the source of truth; the
+        # ``act_bits`` kwarg (int or per-client sequence) overrides its
+        # act_bits — e.g. from a HeteroAllocation's per-client ``bits_k``
+        prec = getattr(self.rt, "precision", None)
+        self.precision: PrecisionConfig = (PrecisionConfig() if prec is None
+                                           else prec)
+        self.act_quant = bool(act_quant)
+        if act_quant:
+            warnings.warn(
+                "SflLLM(act_quant=True) is deprecated; use "
+                "Runtime(precision=PrecisionConfig(act_bits=8)) or the "
+                "act_bits kwarg instead", DeprecationWarning, stacklevel=2)
+            if act_bits is None and self.precision.act_bits >= 16:
+                act_bits = 8
+        if act_bits is None:
+            bits_k = ((self.precision.act_bits,) * K
+                      if self.precision.act_bits < 16 else None)
+        elif isinstance(act_bits, (int, np.integer)):
+            bits_k = (int(act_bits),) * K
+        else:
+            bits_k = tuple(int(x) for x in act_bits)
+            if len(bits_k) != K:
+                raise ValueError(f"{len(bits_k)} act_bits for {K} clients")
+        if bits_k is not None and any(x not in (4, 8, 16) for x in bits_k):
+            raise ValueError(f"act_bits must be 4, 8 or 16, got {bits_k}")
+        # NOTE: an explicit all-16 stays armed (in-graph jnp.where disarm,
+        # bit-identical by construction) — that is the tested guarantee;
+        # only the *absence* of a request skips the quantizer entirely.
+        self.act_bits_k = bits_k
+        self._act_bits = (jnp.asarray(bits_k, jnp.float32)
+                          if bits_k is not None else None)
+        self._grad_bits = (jnp.full((K,), self.precision.grad_bits,
+                                    jnp.float32)
+                           if self.precision.grad_bits < 16 else None)
         self.mesh = mesh              # optional ("clients",) mesh (launch.mesh)
         self.donate = donate
         # frozen weights, physically partitioned.  Heterogeneous fleets
@@ -318,7 +381,7 @@ class SflLLM:
         self._jit_round_part = jax.jit(self._train_round_part,
                                        donate_argnums=(0,) if donate else ())
         self._jit_mask = jax.jit(self._dropout_mask,
-                                 static_argnums=(9, 10, 11))
+                                 static_argnums=(10, 11, 12))
 
     # ------------------------------------------------------------------
     def _build_client_masks(self, ranks, reps, force: bool = False):
@@ -377,6 +440,19 @@ class SflLLM:
             ells = np.full(K, ells[0])
         if ranks.size == 1:
             ranks = np.full(K, ranks[0])
+        # per-client boundary precision from the allocator: HeteroAllocation
+        # carries bits_k, the global Allocation a single act_bits; 16 = off
+        bits = getattr(alloc, "bits_k", None)
+        if bits is None:
+            ab = int(getattr(alloc, "act_bits", 16) or 16)
+            if ab < 16:
+                bits = np.full(K, ab)
+        else:
+            bits = np.asarray(bits).reshape(-1)
+            if bits.size == 1:
+                bits = np.full(K, bits[0])
+        if bits is not None:
+            kw.setdefault("act_bits", tuple(int(x) for x in bits))
         return cls(prob.cfg, params, tuple(int(e) for e in ells), train_cfg,
                    optimizer, ranks=tuple(int(r) for r in ranks), **kw)
 
@@ -550,11 +626,26 @@ class SflLLM:
                 fwd = lambda ls: jax.vmap(lambda l, t: cf(l, t, None))(ls, tokens)
             else:
                 fwd = lambda ls: jax.vmap(cf)(ls, tokens, fe)
-        if self.act_quant:
-            base_fwd = fwd
-            fwd = lambda ls: (lambda pair:
-                              (quantize_activations(pair[0]), pair[1]))(base_fwd(ls))
         (acts, client_aux), client_vjp = jax.vjp(fwd, state.lora_client)
+
+        # boundary quantization (repro.precision): the uploaded payload is
+        # the (de)quantized activation — applied OUTSIDE the client vjp,
+        # so the server's g_acts later feeds client_vjp unchanged, which
+        # IS the straight-through estimator.  ``act_bits`` is a traced
+        # (K,) operand (per-round re-allocation moves it with no retrace);
+        # rows at 16.0 select the raw activation bit-identically.
+        bits_dyn = cfg_dyn.get("act_bits") if cfg_dyn is not None else None
+        act_bits = bits_dyn if bits_dyn is not None else self._act_bits
+        new_err_act, new_err_grad = state.err_act, state.err_grad
+        key_a = key_g = None
+        if self.precision.stochastic_rounding and (
+                act_bits is not None or self._grad_bits is not None):
+            base_key = round_key(self.precision.rng_seed, state.step)
+            key_a = jax.random.fold_in(base_key, 0)
+            key_g = jax.random.fold_in(base_key, 1)
+        if act_bits is not None:
+            acts, new_err_act = fake_quant(acts, act_bits, key=key_a,
+                                           err=state.err_act)
 
         # (b) upload (s_k, y_k) — wireless; modeled in core.latency --------
         # (c,d) server FP + BP on the pooled activations --------------------
@@ -568,6 +659,11 @@ class SflLLM:
                                                     labels, rep_lo)
 
         # (e) download dL/ds_k; (f) client-side BP --------------------------
+        # the downloaded gradient is quantized the same way the uploaded
+        # activation was (static config-wide grad_bits, per-client scale)
+        if self._grad_bits is not None:
+            g_acts, new_err_grad = fake_quant(g_acts, self._grad_bits,
+                                              key=key_g, err=state.err_grad)
         # client-side MoE aux loss contributes through the aux cotangent
         # (masked per client under partial participation)
         aux_seed = jnp.full_like(client_aux, self.aux_coef)
@@ -608,6 +704,8 @@ class SflLLM:
             opt_client=opt_c,
             opt_server=opt_s,
             step=state.step + 1,
+            err_act=new_err_act,
+            err_grad=new_err_grad,
         )
         return new, {"loss": loss, "total": total}
 
@@ -653,7 +751,8 @@ class SflLLM:
         return SflState(lora_client=lc_k, lora_server=state.lora_server,
                         opt_client=state.opt_client,
                         opt_server=state.opt_server,
-                        step=state.step), scores
+                        step=state.step, err_act=state.err_act,
+                        err_grad=state.err_grad), scores
 
     def aggregate(self, state: SflState, sample_counts) -> SflState:
         """FedAvg client adapters + broadcast (eq. 7)."""
@@ -716,7 +815,8 @@ class SflLLM:
             new = SflState(
                 lora_client=corrupt_updates(new.lora_client, ref, byz),
                 lora_server=new.lora_server, opt_client=new.opt_client,
-                opt_server=new.opt_server, step=new.step)
+                opt_server=new.opt_server, step=new.step,
+                err_act=new.err_act, err_grad=new.err_grad)
         new, scores = self._aggregate_impl(new, weights, part, masks,
                                            robust, ref)
         if poison is not None:
@@ -728,7 +828,7 @@ class SflLLM:
                     lambda v: jnp.where(poison > 0, jnp.full_like(v, jnp.nan),
                                         v), new.lora_server),
                 opt_client=new.opt_client, opt_server=new.opt_server,
-                step=new.step)
+                step=new.step, err_act=new.err_act, err_grad=new.err_grad)
         finite = tree_all_finite(new)
         state = jax.tree.map(lambda n, o: jnp.where(finite, n, o),
                              new, state)
@@ -738,7 +838,7 @@ class SflLLM:
         return state, metrics
 
     def _dropout_mask(self, rates_main, rates_fed, f_hz, kappa, ell, rank,
-                      deadline_s, retx_main, retx_fed,
+                      deadline_s, retx_main, retx_fed, act_bits,
                       b: int, local_steps: int, seq_len: int):
         """Deadline-aware straggler dropout, in-graph: the traced twin of
         the Section V per-client delay (``core.latency.client_round_seconds``)
@@ -751,7 +851,8 @@ class SflLLM:
         tables = workload_tables(self.cfg, seq_len)
         t_k = client_round_seconds(tables, ell, rank, f_hz, kappa,
                                    rates_main, rates_fed, b, local_steps,
-                                   retx_main=retx_main, retx_fed=retx_fed)
+                                   retx_main=retx_main, retx_fed=retx_fed,
+                                   act_bits=act_bits)
         return (t_k <= deadline_s).astype(jnp.float32)
 
     def _participation_for(self, dyn: RoundDynamics, batches):
@@ -777,9 +878,10 @@ class SflLLM:
         rank = (dyn.rank if dyn.rank is not None
                 else jnp.asarray(self.rank_k or (self.cfg.lora_rank,) * K,
                                  jnp.float32))
+        bits = dyn.act_bits if dyn.act_bits is not None else self._act_bits
         part = self._jit_mask(dyn.rates_main, dyn.rates_fed, dyn.f_hz,
                               dyn.kappa, ell, rank, dyn.deadline_s,
-                              dyn.retx_main, dyn.retx_fed,
+                              dyn.retx_main, dyn.retx_fed, bits,
                               int(b), int(I), int(S))
         return part if explicit is None else part * explicit
 
@@ -808,9 +910,13 @@ class SflLLM:
         part = self._participation_for(dyn, batches)
         cfg_dyn = None
         if (dyn.rep_hi is not None or dyn.slot_masks is not None
-                or dyn.scales is not None):
+                or dyn.scales is not None or dyn.act_bits is not None):
             cfg_dyn = {"rep_hi": dyn.rep_hi, "slot_masks": dyn.slot_masks,
-                       "scales": dyn.scales}
+                       "scales": dyn.scales, "act_bits": dyn.act_bits}
+        state = self._ensure_err_state(
+            state, batches["tokens"].shape[-2:],
+            batches.get("frontend_emb"),
+            armed_act=self._act_bits is not None or dyn.act_bits is not None)
         if self.mesh is not None:
             from ..sharding.specs import round_dynamics_shardings
             part, cfg_dyn = jax.device_put(
@@ -819,14 +925,18 @@ class SflLLM:
         return self._jit_round_part(state, batches, weights, part, cfg_dyn,
                                     dyn.poison, dyn.robust, dyn.byzantine)
 
-    def allocation_dynamics(self, ell_k, rank_k) -> Dict[str, Any]:
+    def allocation_dynamics(self, ell_k, rank_k,
+                            bits_k=None) -> Dict[str, Any]:
         """A per-client allocation decision as RoundDynamics kwargs (``ell``
-        / ``rank`` / ``rep_hi`` / ``slot_masks`` / ``scales``), expressed
-        against this trainer's capacity envelope.  Swapping these between
-        rounds re-points the existing slot-mask machinery at the new
-        (ell_k, r_k) with NO retrace; the trainer must have been built with
-        a wide enough envelope (``ell_range`` / ``rank_max``, e.g. via
-        ``from_allocation(..., dynamic=True)``)."""
+        / ``rank`` / ``rep_hi`` / ``slot_masks`` / ``scales``, plus
+        ``act_bits`` when ``bits_k`` is given), expressed against this
+        trainer's capacity envelope.  Swapping these between rounds
+        re-points the existing slot-mask machinery at the new (ell_k, r_k)
+        with NO retrace; the trainer must have been built with a wide
+        enough envelope (``ell_range`` / ``rank_max``, e.g. via
+        ``from_allocation(..., dynamic=True)``).  ``bits_k`` needs no
+        envelope at all — the bit-width is a traced operand of the
+        quantizer, not a shape."""
         K = self.tc.num_clients
         ells = tuple(int(e) for e in np.asarray(ell_k).reshape(-1))
         ranks = tuple(int(r) for r in np.asarray(rank_k).reshape(-1))
@@ -843,7 +953,7 @@ class SflLLM:
             raise ValueError(f"rank {max(ranks)} > capacity r_max "
                              f"{self.r_max} — build with rank_max")
         masks = self._build_client_masks(ranks, reps, force=True)
-        return dict(
+        out = dict(
             ell=jnp.asarray(ells, jnp.int32),
             rank=jnp.asarray(ranks, jnp.float32),
             rep_hi=jnp.asarray(reps, jnp.int32),
@@ -851,9 +961,48 @@ class SflLLM:
             scales=jnp.asarray([self.cfg.lora_alpha / r for r in ranks],
                                jnp.float32),
         )
+        if bits_k is not None:
+            bits = tuple(int(x) for x in np.asarray(bits_k).reshape(-1))
+            if len(bits) != K:
+                raise ValueError(f"{len(bits)} bit-widths for {K} clients")
+            if any(x not in (4, 8, 16) for x in bits):
+                raise ValueError(f"bits_k must be 4, 8 or 16, got {bits}")
+            out["act_bits"] = jnp.asarray(bits, jnp.float32)
+        return out
+
+    def _ensure_err_state(self, state: SflState, bs, frontend_emb, *,
+                          armed_act: bool) -> SflState:
+        """Lazily attach the error-feedback accumulators (host-side, before
+        the first compile) when the config asks for them.  Idempotent, and
+        a no-op without ``error_feedback`` — the legacy pytree structure is
+        untouched, so pre-precision episodes keep their compiled trace."""
+        if not self.precision.error_feedback:
+            return state
+        armed_grad = self._grad_bits is not None
+        if not armed_act and not armed_grad:
+            return state
+        b, S = int(bs[0]), int(bs[1])
+        if frontend_emb is not None:
+            S += int(frontend_emb.shape[-2])
+        shape = (self.tc.num_clients, b, S, self.cfg.d_model)
+        ea, eg = state.err_act, state.err_grad
+        if armed_act and ea is None:
+            ea = jnp.zeros(shape, jnp.float32)
+        if armed_grad and eg is None:
+            eg = jnp.zeros(shape, jnp.float32)
+        if ea is state.err_act and eg is state.err_grad:
+            return state
+        return self.shard_state(SflState(
+            lora_client=state.lora_client, lora_server=state.lora_server,
+            opt_client=state.opt_client, opt_server=state.opt_server,
+            step=state.step, err_act=ea, err_grad=eg))
 
     # ------------------------------------------------------------------
     def local_step(self, state, batches):
+        state = self._ensure_err_state(
+            state, batches["tokens"].shape[-2:],
+            batches.get("frontend_emb"),
+            armed_act=self._act_bits is not None)
         return self._jit_local_step(state, batches)
 
     def train(self, state: SflState, data_iter, *, global_rounds: int,

@@ -1,5 +1,7 @@
-"""Shared backend auto-detection for the Pallas kernel wrappers."""
+"""Shared backend auto-detection + dispatch for the Pallas kernel wrappers."""
 from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 
@@ -12,3 +14,51 @@ def auto_interpret() -> bool:
     backend only needs to be added here.
     """
     return jax.default_backend() != "tpu"
+
+
+# (op name, branch taken) -> count.  Incremented at trace time; the
+# thin-wrapper regression tests use it to prove the public ``ops.*``
+# entries still route through this one shared convention.
+DISPATCH_COUNTS: Dict[Tuple[str, str], int] = {}
+
+
+def resolve(interpret: Optional[bool], use_kernel: Optional[bool]) -> Tuple[bool, bool]:
+    """The single copy of the entry convention every kernel family shares.
+
+    ``interpret=None`` auto-detects (interpret mode off-TPU).  An
+    *explicit* ``interpret`` request opts into the kernel path — that is
+    how tests force Pallas interpret mode on CPU — otherwise
+    ``use_kernel`` defaults to running the kernel only where it compiles
+    natively.
+    """
+    explicit = interpret is not None
+    if interpret is None:
+        interpret = auto_interpret()
+    if use_kernel is None:
+        use_kernel = explicit or not interpret
+    return bool(interpret), bool(use_kernel)
+
+
+def dispatch(
+    op: str,
+    *,
+    kernel: Callable[[bool], object],
+    ref: Callable[[], object],
+    interpret: Optional[bool] = None,
+    use_kernel: Optional[bool] = None,
+):
+    """Route one op through the shared convention.
+
+    ``kernel`` is a thunk taking the resolved ``interpret`` flag; ``ref``
+    is a zero-argument thunk for the jnp reference path.  Wrappers that
+    need the resolved flags for extra plumbing (padding, custom-VJP cfg)
+    call :func:`resolve` directly and still count as dispatch users —
+    this helper is the default entry for simple ops so a new quantized
+    variant never re-copies the convention.
+    """
+    interpret, use_kernel = resolve(interpret, use_kernel)
+    branch = "kernel" if use_kernel else "ref"
+    DISPATCH_COUNTS[(op, branch)] = DISPATCH_COUNTS.get((op, branch), 0) + 1
+    if not use_kernel:
+        return ref()
+    return kernel(interpret)

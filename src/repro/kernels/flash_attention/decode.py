@@ -82,6 +82,98 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
+def _q8_kernel(len_ref, ks_ref, vs_ref, q_ref, k_ref, v_ref, o_ref, m_ref,
+               l_ref, acc_ref, *, bk: int, k_steps: int, scale: float,
+               window: int):
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    j = pl.program_id(2)
+    length = len_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    live = j * bk < length
+
+    @pl.when(live)
+    def _compute():
+        G = q_ref.shape[2]
+        k_idx = j * bk + jax.lax.broadcasted_iota(jnp.int32, (G, bk), 1)
+        mask = k_idx < length
+        if window:
+            mask &= k_idx > length - 1 - window
+        # per-KV-head dequant in VMEM: the int8 tile is a quarter of the
+        # f32 HBM bytes, and the head scale rides in as a prefetched
+        # scalar — the body is otherwise the f32 kernel verbatim
+        kf = k_ref[0, 0].astype(jnp.float32) * ks_ref[h]
+        vf = v_ref[0, 0].astype(jnp.float32) * vs_ref[h]
+        s = jax.lax.dot_general(
+            q_ref[0, 0].astype(jnp.float32), kf,
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale      # (G, bk)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...][:, :1]                           # (G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+        p = jnp.exp(s - m_new) * mask
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = jnp.broadcast_to(
+            l_ref[...][:, :1] * alpha + jnp.sum(p, -1, keepdims=True),
+            l_ref.shape)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, vf, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(j == k_steps - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...][:, :1], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_decode_q8_kernel(q, k, v, lengths, k_scale, v_scale, *,
+                           window: int = 0, bk: int = 256,
+                           interpret: bool = False):
+    """Int8-KV variant of :func:`flash_decode_kernel`.
+
+    k/v: int8 (B, KH, L, D); k_scale/v_scale: f32 (KH,) per-KV-head
+    scales (see ``repro.precision.quantize_kv_int8``), riding in as
+    scalar-prefetch operands next to the live lengths.  Returns
+    (B, KH, G, D) in q's dtype."""
+    B, KH, G, D = q.shape
+    L = k.shape[2]
+    bk = min(bk, L)
+    grid = (B, KH, L // bk)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D),
+                         lambda b, h, j, lens, ks, vs: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, j, lens, ks, vs: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, j, lens, ks, vs: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, j, lens, ks, vs: (b, h, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((G, _LANES), jnp.float32),
+                        pltpu.VMEM((G, _LANES), jnp.float32),
+                        pltpu.VMEM((G, D), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_q8_kernel, bk=bk, k_steps=grid[2],
+                          scale=D ** -0.5, window=window),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KH, G, D), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), k_scale.astype(jnp.float32),
+      v_scale.astype(jnp.float32), q, k, v)
+
+
 def flash_decode_kernel(q, k, v, lengths, *, window: int = 0, bk: int = 256,
                         interpret: bool = False):
     """q: (B, KH, G, D); k/v: (B, KH, L, D) with L divisible by ``bk``

@@ -6,11 +6,13 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from .. import backend
 from ..backend import auto_interpret
-from .decode import flash_decode_kernel
+from .decode import flash_decode_kernel, flash_decode_q8_kernel
 from .kernel import flash_attention_kernel
-from .paged_decode import paged_decode_kernel
-from .ref import flash_attention_ref, flash_decode_ref, paged_decode_ref
+from .paged_decode import paged_decode_kernel, paged_decode_q8_kernel
+from .ref import (flash_attention_ref, flash_decode_q8_ref, flash_decode_ref,
+                  paged_decode_q8_ref, paged_decode_ref)
 from .tune import best_decode_block, best_paged_block
 
 
@@ -48,6 +50,7 @@ def flash_attention(q, k, v, *, window: int = 0, bq: int = 256, bk: int = 256,
 @functools.partial(jax.jit, static_argnames=("window", "bk", "interpret",
                                              "use_kernel"))
 def flash_decode(q, k, v, lengths, *, window: int = 0,
+                 k_scale=None, v_scale=None,
                  bk: "int | None" = None, interpret: "bool | None" = None,
                  use_kernel: "bool | None" = None):
     """One-token decode attention over per-slot KV caches.
@@ -57,7 +60,13 @@ def flash_decode(q, k, v, lengths, *, window: int = 0,
     per slot (entries contiguous at [0, length); callers with ring-wrapped
     windowed caches must use the position-masked path instead).
 
-    Dispatch mirrors ``lora_matmul``: the native split-K Pallas kernel on
+    ``k_scale``/``v_scale`` (f32 ``(KH,)`` per-KV-head, from
+    ``repro.precision.quantize_kv_int8``) switch on the int8-KV cache:
+    k/v are then int8 and dequantized per-tile in VMEM by the q8 kernel
+    (jnp oracle off-TPU).
+
+    Dispatch mirrors ``lora_matmul`` through the shared
+    ``kernels.backend.dispatch``: the native split-K Pallas kernel on
     TPU (block size from the memoized ``tune.best_decode_block``), the
     masked-einsum oracle elsewhere — an explicit ``interpret`` flag forces
     the kernel (interpret-mode parity testing)."""
@@ -67,32 +76,44 @@ def flash_decode(q, k, v, lengths, *, window: int = 0,
     B, H, D = q.shape
     L, KH = k.shape[1], k.shape[2]
     G = H // KH
-    explicit_interpret = interpret is not None
-    if interpret is None:
-        interpret = auto_interpret()
-    if use_kernel is None:
-        use_kernel = explicit_interpret or not interpret
     qt = q.reshape(B, KH, G, D)
     kt = k.transpose(0, 2, 1, 3)
     vt = v.transpose(0, 2, 1, 3)
-    if not use_kernel:
-        o = flash_decode_ref(qt, kt, vt, lengths, window=window)
-    else:
-        if bk is None:
-            bk = best_decode_block(B, KH, G, L, D, q.dtype)
-        bk = min(bk, L)
-        pk = (-L) % bk
+    quantized = k_scale is not None
+
+    def _ref():
+        if quantized:
+            return flash_decode_q8_ref(qt, kt, vt, k_scale, v_scale,
+                                       lengths, window=window)
+        return flash_decode_ref(qt, kt, vt, lengths, window=window)
+
+    def _kern(interp: bool):
+        tbk = bk
+        if tbk is None:
+            tbk = best_decode_block(B, KH, G, L, D, q.dtype,
+                                    kv_dtype=k.dtype if quantized else None)
+        tbk = min(tbk, L)
+        pk = (-L) % tbk
+        kp, vp = kt, vt
         if pk:       # padded tail entries sit beyond every live length
-            kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pk), (0, 0)))
-            vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pk), (0, 0)))
-        o = flash_decode_kernel(qt, kt, vt, lengths, window=window, bk=bk,
-                                interpret=interpret)
+            kp = jnp.pad(kp, ((0, 0), (0, 0), (0, pk), (0, 0)))
+            vp = jnp.pad(vp, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        if quantized:
+            return flash_decode_q8_kernel(qt, kp, vp, lengths, k_scale,
+                                          v_scale, window=window, bk=tbk,
+                                          interpret=interp)
+        return flash_decode_kernel(qt, kp, vp, lengths, window=window,
+                                   bk=tbk, interpret=interp)
+
+    o = backend.dispatch("flash_decode", kernel=_kern, ref=_ref,
+                         interpret=interpret, use_kernel=use_kernel)
     o = o.reshape(B, H, D)
     return o[:, None] if squeeze else o
 
 
 @functools.partial(jax.jit, static_argnames=("bk", "interpret", "use_kernel"))
 def paged_decode(q, k_pages, v_pages, lengths, block_tables, *,
+                 k_scale=None, v_scale=None,
                  bk: "int | None" = None, interpret: "bool | None" = None,
                  use_kernel: "bool | None" = None):
     """One-token decode attention over a block-table PAGED KV cache.
@@ -102,7 +123,12 @@ def paged_decode(q, k_pages, v_pages, lengths, block_tables, *,
     ids per slot (0 = null page); lengths: (B,) int32 live entries per
     slot (contiguous in the logical [0, MP*PS) view).
 
-    Dispatch mirrors ``flash_decode``: the native scalar-prefetch Pallas
+    ``k_scale``/``v_scale`` (f32 ``(KH,)`` per-KV-head) switch on the
+    int8 page pool — half the KV HBM of bf16 — dequantized per-tile in
+    VMEM by the q8 kernel (jnp oracle off-TPU).
+
+    Dispatch mirrors ``flash_decode`` through the shared
+    ``kernels.backend.dispatch``: the native scalar-prefetch Pallas
     kernel on TPU (the block-table gather IS the kv index map; tile size
     from the memoized ``tune.best_paged_block``), the jnp gather oracle
     elsewhere — an explicit ``interpret`` flag forces the kernel
@@ -114,18 +140,29 @@ def paged_decode(q, k_pages, v_pages, lengths, block_tables, *,
     KH, _, PS, _ = k_pages.shape
     MP = block_tables.shape[1]
     G = H // KH
-    explicit_interpret = interpret is not None
-    if interpret is None:
-        interpret = auto_interpret()
-    if use_kernel is None:
-        use_kernel = explicit_interpret or not interpret
     qt = q.reshape(B, KH, G, D)
-    if not use_kernel:
-        o = paged_decode_ref(qt, k_pages, v_pages, lengths, block_tables)
-    else:
-        if bk is None:
-            bk = best_paged_block(B, KH, G, MP, PS, D, q.dtype)
-        o = paged_decode_kernel(qt, k_pages, v_pages, lengths, block_tables,
-                                bk=bk, interpret=interpret)
+    quantized = k_scale is not None
+
+    def _ref():
+        if quantized:
+            return paged_decode_q8_ref(qt, k_pages, v_pages, k_scale,
+                                       v_scale, lengths, block_tables)
+        return paged_decode_ref(qt, k_pages, v_pages, lengths, block_tables)
+
+    def _kern(interp: bool):
+        tbk = bk
+        if tbk is None:
+            tbk = best_paged_block(
+                B, KH, G, MP, PS, D, q.dtype,
+                kv_dtype=k_pages.dtype if quantized else None)
+        if quantized:
+            return paged_decode_q8_kernel(qt, k_pages, v_pages, lengths,
+                                          block_tables, k_scale, v_scale,
+                                          bk=tbk, interpret=interp)
+        return paged_decode_kernel(qt, k_pages, v_pages, lengths,
+                                   block_tables, bk=tbk, interpret=interp)
+
+    o = backend.dispatch("paged_decode", kernel=_kern, ref=_ref,
+                         interpret=interpret, use_kernel=use_kernel)
     o = o.reshape(B, H, D)
     return o[:, None] if squeeze else o

@@ -28,6 +28,25 @@ def flash_decode_ref(q, k, v, lengths, *, window: int = 0):
     return o.astype(q.dtype)
 
 
+def flash_decode_q8_ref(q, k, v, k_scale, v_scale, lengths, *,
+                        window: int = 0):
+    """Int8-KV decode oracle: dequantizes exactly like the q8 kernel
+    (int8 -> f32 * per-KV-head scale) then runs ``flash_decode_ref``.
+    k/v: int8 (B, KH, L, D); k_scale/v_scale: f32 (KH,)."""
+    kf = k.astype(jnp.float32) * k_scale[None, :, None, None]
+    vf = v.astype(jnp.float32) * v_scale[None, :, None, None]
+    return flash_decode_ref(q, kf, vf, lengths, window=window)
+
+
+def paged_decode_q8_ref(q, k_pages, v_pages, k_scale, v_scale, lengths,
+                        block_tables):
+    """Int8-KV paged decode oracle: dequantize the pool per KV head, then
+    gather and score with ``paged_decode_ref``."""
+    kf = k_pages.astype(jnp.float32) * k_scale[:, None, None, None]
+    vf = v_pages.astype(jnp.float32) * v_scale[:, None, None, None]
+    return paged_decode_ref(q, kf, vf, lengths, block_tables)
+
+
 def paged_decode_ref(q, k_pages, v_pages, lengths, block_tables):
     """Paged decode oracle: q (B, KH, G, D) — one query token per slot,
     GQA folded; k_pages/v_pages (KH, NP, PS, D) — the GLOBAL page pool

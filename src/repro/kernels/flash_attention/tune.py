@@ -18,7 +18,10 @@ from typing import Dict, List, Tuple
 import jax
 import jax.numpy as jnp
 
-_CACHE: Dict[Tuple[int, int, int, int, int, str, str], int] = {}
+# key: (B, KH, G, L, D, q dtype, KV dtype, backend) — the kv dtype keys
+# the int8-KV variant separately: its tiles cost a quarter of the f32
+# VMEM, so the winning bk differs from the same logical shape in f32
+_CACHE: Dict[Tuple[int, int, int, int, int, str, str, str], int] = {}
 
 _CANDIDATES: Tuple[int, ...] = (128, 256, 512, 1024)
 _VMEM_BUDGET = 12 * 1024 * 1024        # leave headroom under ~16 MB/core
@@ -28,32 +31,44 @@ def clear_cache() -> None:
     _CACHE.clear()
 
 
-def _vmem_bytes(bk: int, G: int, D: int, itemsize: int) -> int:
+def _vmem_bytes(bk: int, G: int, D: int, itemsize: int,
+                kv_itemsize: int | None = None) -> int:
     """Per-step VMEM: double-buffered k/v tiles + q + f32 scratch + out."""
-    tiles = itemsize * (2 * bk * D + G * D)
+    kv_itemsize = itemsize if kv_itemsize is None else kv_itemsize
+    tiles = kv_itemsize * 2 * bk * D + itemsize * G * D
     scratch = 4 * (2 * G * 128 + G * D)
     return 2 * tiles + scratch + itemsize * G * D
 
 
 def _time_candidates(B: int, KH: int, G: int, L: int, D: int, dtype,
-                     cands: List[int]) -> int:
-    from .decode import flash_decode_kernel
+                     cands: List[int], kv_dtype=None) -> int:
+    from .decode import flash_decode_kernel, flash_decode_q8_kernel
 
+    int8_kv = kv_dtype is not None and jnp.dtype(kv_dtype) == jnp.int8
     q = jnp.zeros((B, KH, G, D), dtype)
     lens = jnp.full((B,), L, jnp.int32)
+    scale = jnp.ones((KH,), jnp.float32)
     best, best_t = cands[0], float("inf")
     for bk in cands:
         # time against the padded cache length ops.flash_decode will run
         Lp = -(-L // bk) * bk
-        k = jnp.zeros((B, KH, Lp, D), dtype)
         try:
-            fn = jax.jit(lambda q, k, v, n, bk=bk: flash_decode_kernel(
-                q, k, v, n, bk=bk, interpret=False))
-            fn(q, k, k, lens).block_until_ready()           # compile
+            if int8_kv:
+                k = jnp.zeros((B, KH, Lp, D), jnp.int8)
+                fn = jax.jit(lambda q, k, v, n, s, bk=bk:
+                             flash_decode_q8_kernel(q, k, v, n, s, s, bk=bk,
+                                                    interpret=False))
+                args = (q, k, k, lens, scale)
+            else:
+                k = jnp.zeros((B, KH, Lp, D), dtype)
+                fn = jax.jit(lambda q, k, v, n, bk=bk: flash_decode_kernel(
+                    q, k, v, n, bk=bk, interpret=False))
+                args = (q, k, k, lens)
+            fn(*args).block_until_ready()                   # compile
             t = float("inf")
             for _ in range(3):
                 t0 = time.perf_counter()
-                fn(q, k, k, lens).block_until_ready()
+                fn(*args).block_until_ready()
                 t = min(t, time.perf_counter() - t0)
         except Exception:                                   # noqa: BLE001
             continue            # tile shape the backend rejects — skip it
@@ -70,20 +85,28 @@ def _heuristic_key(L: int, bk: int):
 
 
 def best_decode_block(B: int, KH: int, G: int, L: int, D: int,
-                      dtype=jnp.float32, backend: str | None = None) -> int:
-    """Memoized ``bk`` for one flash-decode problem shape."""
+                      dtype=jnp.float32, backend: str | None = None,
+                      kv_dtype=None) -> int:
+    """Memoized ``bk`` for one flash-decode problem shape.
+
+    ``kv_dtype`` (default: same as ``dtype``) keys the int8-KV variant
+    separately — smaller kv tiles admit larger candidates."""
     backend = backend or jax.default_backend()
+    kv_name = jnp.dtype(kv_dtype if kv_dtype is not None else dtype).name
     key = (int(B), int(KH), int(G), int(L), int(D),
-           jnp.dtype(dtype).name, backend)
+           jnp.dtype(dtype).name, kv_name, backend)
     hit = _CACHE.get(key)
     if hit is not None:
         return hit
     itemsize = jnp.dtype(dtype).itemsize
+    kv_itemsize = jnp.dtype(kv_name).itemsize
     cands = [min(bk, L) for bk in _CANDIDATES
-             if _vmem_bytes(min(bk, L), max(G, 1), D, itemsize) <= _VMEM_BUDGET]
+             if _vmem_bytes(min(bk, L), max(G, 1), D, itemsize,
+                            kv_itemsize=kv_itemsize) <= _VMEM_BUDGET]
     cands = sorted(set(cands)) or [min(128, L)]
     if backend == "tpu":
-        best = _time_candidates(B, KH, G, L, D, dtype, cands)
+        best = _time_candidates(B, KH, G, L, D, dtype, cands,
+                                kv_dtype=kv_dtype)
     else:
         best = min(cands, key=lambda bk: _heuristic_key(L, bk))
     _CACHE[key] = best
@@ -92,7 +115,9 @@ def best_decode_block(B: int, KH: int, G: int, L: int, D: int,
 
 # -- paged decode: the kv tile must divide the page size --------------------
 
-_PAGED_CACHE: Dict[Tuple[int, int, int, int, int, int, str, str], int] = {}
+# key additionally carries the KV-pool dtype (int8 pools key separately)
+_PAGED_CACHE: Dict[Tuple[int, int, int, int, int, int, str, str, str],
+                   int] = {}
 
 
 def clear_paged_cache() -> None:
@@ -100,24 +125,33 @@ def clear_paged_cache() -> None:
 
 
 def _time_paged_candidates(B: int, KH: int, G: int, MP: int, PS: int, D: int,
-                           dtype, cands: List[int]) -> int:
-    from .paged_decode import paged_decode_kernel
+                           dtype, cands: List[int], kv_dtype=None) -> int:
+    from .paged_decode import paged_decode_kernel, paged_decode_q8_kernel
 
+    int8_kv = kv_dtype is not None and jnp.dtype(kv_dtype) == jnp.int8
     NP = B * MP + 1                                  # pool incl. null page
     q = jnp.zeros((B, KH, G, D), dtype)
-    kp = jnp.zeros((KH, NP, PS, D), dtype)
+    kp = jnp.zeros((KH, NP, PS, D), jnp.int8 if int8_kv else dtype)
     bt = (jnp.arange(B * MP, dtype=jnp.int32).reshape(B, MP) + 1)
     lens = jnp.full((B,), MP * PS, jnp.int32)
+    scale = jnp.ones((KH,), jnp.float32)
     best, best_t = cands[0], float("inf")
     for bk in cands:
         try:
-            fn = jax.jit(lambda q, k, v, n, t, bk=bk: paged_decode_kernel(
-                q, k, v, n, t, bk=bk, interpret=False))
-            fn(q, kp, kp, lens, bt).block_until_ready()       # compile
+            if int8_kv:
+                fn = jax.jit(lambda q, k, v, n, t, s, bk=bk:
+                             paged_decode_q8_kernel(q, k, v, n, t, s, s,
+                                                    bk=bk, interpret=False))
+                args = (q, kp, kp, lens, bt, scale)
+            else:
+                fn = jax.jit(lambda q, k, v, n, t, bk=bk: paged_decode_kernel(
+                    q, k, v, n, t, bk=bk, interpret=False))
+                args = (q, kp, kp, lens, bt)
+            fn(*args).block_until_ready()                     # compile
             t = float("inf")
             for _ in range(3):
                 t0 = time.perf_counter()
-                fn(q, kp, kp, lens, bt).block_until_ready()
+                fn(*args).block_until_ready()
                 t = min(t, time.perf_counter() - t0)
         except Exception:                                     # noqa: BLE001
             continue            # tile shape the backend rejects — skip it
@@ -127,7 +161,8 @@ def _time_paged_candidates(B: int, KH: int, G: int, MP: int, PS: int, D: int,
 
 
 def best_paged_block(B: int, KH: int, G: int, MP: int, PS: int, D: int,
-                     dtype=jnp.float32, backend: str | None = None) -> int:
+                     dtype=jnp.float32, backend: str | None = None,
+                     kv_dtype=None) -> int:
     """Memoized kv-tile size for one paged-decode problem — the
     ``(page_size, bk)`` twin of ``best_decode_block``.  Candidates are the
     divisors of ``page_size`` within the VMEM budget (a paged tile can
@@ -136,18 +171,22 @@ def best_paged_block(B: int, KH: int, G: int, MP: int, PS: int, D: int,
     paged tiles are fully live up to the length boundary, so fewer grid
     steps is the whole game."""
     backend = backend or jax.default_backend()
+    kv_name = jnp.dtype(kv_dtype if kv_dtype is not None else dtype).name
     key = (int(B), int(KH), int(G), int(MP), int(PS), int(D),
-           jnp.dtype(dtype).name, backend)
+           jnp.dtype(dtype).name, kv_name, backend)
     hit = _PAGED_CACHE.get(key)
     if hit is not None:
         return hit
     itemsize = jnp.dtype(dtype).itemsize
+    kv_itemsize = jnp.dtype(kv_name).itemsize
     cands = [bk for bk in set(_CANDIDATES) | {PS}
              if bk <= PS and PS % bk == 0
-             and _vmem_bytes(bk, max(G, 1), D, itemsize) <= _VMEM_BUDGET]
+             and _vmem_bytes(bk, max(G, 1), D, itemsize,
+                             kv_itemsize=kv_itemsize) <= _VMEM_BUDGET]
     cands = sorted(cands) or [PS]
     if backend == "tpu":
-        best = _time_paged_candidates(B, KH, G, MP, PS, D, dtype, cands)
+        best = _time_paged_candidates(B, KH, G, MP, PS, D, dtype, cands,
+                                      kv_dtype=kv_dtype)
     else:
         best = cands[-1]
     _PAGED_CACHE[key] = best

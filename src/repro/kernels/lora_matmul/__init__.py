@@ -1,11 +1,13 @@
 from .kernel import (lora_matmul_dx_kernel, lora_matmul_gather_kernel,
-                     lora_matmul_kernel, lora_rank_reduce_kernel)
+                     lora_matmul_kernel, lora_matmul_q8_dx_kernel,
+                     lora_matmul_q8_kernel, lora_rank_reduce_kernel)
 from .ops import auto_interpret, lora_matmul, lora_matmul_gathered
-from .ref import lora_matmul_gathered_ref, lora_matmul_ref
+from .ref import lora_matmul_gathered_ref, lora_matmul_q8_ref, lora_matmul_ref
 from .tune import best_blocks, best_gather_blocks
 
 __all__ = ["auto_interpret", "best_blocks", "best_gather_blocks",
            "lora_matmul", "lora_matmul_dx_kernel", "lora_matmul_gather_kernel",
            "lora_matmul_gathered", "lora_matmul_gathered_ref",
-           "lora_matmul_kernel", "lora_matmul_ref",
+           "lora_matmul_kernel", "lora_matmul_q8_dx_kernel",
+           "lora_matmul_q8_kernel", "lora_matmul_q8_ref", "lora_matmul_ref",
            "lora_rank_reduce_kernel"]

@@ -83,6 +83,128 @@ def lora_matmul_kernel(x, w, a, b, *, scale: float, bm: int = 256,
 
 
 # ---------------------------------------------------------------------------
+# weight-only int8 forward: W rides HBM as int8, dequantized per-tile in VMEM
+# ---------------------------------------------------------------------------
+
+def _q8_kernel(x_ref, w_ref, ws_ref, a_ref, b_ref, y_ref, acc_ref, z_ref, *,
+               scale: float, k_steps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    xb = x_ref[...].astype(jnp.float32)
+    # per-output-channel dequant in VMEM: the int8 tile costs half the HBM
+    # bytes of bf16 and a quarter of f32 — the multiply is VPU noise next
+    # to the MXU dot it feeds
+    wf = w_ref[...].astype(jnp.float32) * ws_ref[...]
+    acc_ref[...] += jnp.dot(xb, wf, preferred_element_type=jnp.float32)
+    z_ref[...] += jnp.dot(xb, a_ref[...].astype(jnp.float32).T,
+                          preferred_element_type=jnp.float32)
+
+    @pl.when(k == k_steps - 1)
+    def _finish():
+        y = acc_ref[...] + scale * jnp.dot(
+            z_ref[...], b_ref[...].astype(jnp.float32).T,
+            preferred_element_type=jnp.float32)
+        y_ref[...] = y.astype(y_ref.dtype)
+
+
+def lora_matmul_q8_kernel(x, w_q, w_scale, a, b, *, scale: float,
+                          bm: int = 256, bn: int = 256, bk: int = 512,
+                          interpret: bool = False):
+    """Forward fused LoRA matmul over an ``(int8 W, f32 scale)`` base.
+
+    x: (M, K); w_q: int8 (K, N); w_scale: f32 (1, N) per-output-channel;
+    a: (r, K); b: (N, r) — dims must divide by the block shape (ops.py
+    pads).  Same tiling as ``lora_matmul_kernel`` plus one (1, bn) scale
+    tile per N block.
+    """
+    M, K = x.shape
+    N = w_q.shape[1]
+    r = a.shape[0]
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    grid = (M // bm, N // bn, K // bk)
+
+    return pl.pallas_call(
+        functools.partial(_q8_kernel, scale=scale, k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),     # x
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),     # w_q
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),      # w_scale
+            pl.BlockSpec((r, bk), lambda i, j, k: (0, k)),      # a
+            pl.BlockSpec((bn, r), lambda i, j, k: (j, 0)),      # b
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32),
+                        pltpu.VMEM((bm, r), jnp.float32)],
+        interpret=interpret,
+    )(x, w_q, w_scale, a, b)
+
+
+def _q8_dx_kernel(dy_ref, w_ref, ws_ref, a_ref, b_ref, dx_ref, acc_ref,
+                  z_ref, *, scale: float, n_steps: int):
+    n = pl.program_id(2)
+
+    @pl.when(n == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    dyb = dy_ref[...].astype(jnp.float32)
+    wf = w_ref[...].astype(jnp.float32) * ws_ref[...]
+    acc_ref[...] += jax.lax.dot_general(
+        dyb, wf, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    z_ref[...] += jnp.dot(dyb, b_ref[...].astype(jnp.float32),
+                          preferred_element_type=jnp.float32)
+
+    @pl.when(n == n_steps - 1)
+    def _finish():
+        dx = acc_ref[...] + scale * jnp.dot(
+            z_ref[...], a_ref[...].astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+        dx_ref[...] = dx.astype(dx_ref.dtype)
+
+
+def lora_matmul_q8_dx_kernel(dy, w_q, w_scale, a, b, *, scale: float,
+                             bm: int = 256, bn: int = 256, bk: int = 512,
+                             interpret: bool = False):
+    """dX = dY @ (W_q * scale)^T + scale_lora * (dY @ B) @ A.
+
+    dy: (M, N); w_q: int8 (K, N) forward layout; w_scale: f32 (1, N);
+    a: (r, K); b: (N, r) — dims must divide by the block shape.  Mirrors
+    ``lora_matmul_dx_kernel`` with the per-tile dequant of the q8 forward.
+    """
+    M, N = dy.shape
+    K = w_q.shape[0]
+    r = a.shape[0]
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    grid = (M // bm, K // bk, N // bn)
+
+    return pl.pallas_call(
+        functools.partial(_q8_dx_kernel, scale=scale, n_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, n: (i, n)),     # dy
+            pl.BlockSpec((bk, bn), lambda i, j, n: (j, n)),     # w_q
+            pl.BlockSpec((1, bn), lambda i, j, n: (0, n)),      # w_scale
+            pl.BlockSpec((r, bk), lambda i, j, n: (0, j)),      # a
+            pl.BlockSpec((bn, r), lambda i, j, n: (n, 0)),      # b
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j, n: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, K), dy.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bk), jnp.float32),
+                        pltpu.VMEM((bm, r), jnp.float32)],
+        interpret=interpret,
+    )(dy, w_q, w_scale, a, b)
+
+
+# ---------------------------------------------------------------------------
 # batched-gather forward (multi-tenant serving)
 # ---------------------------------------------------------------------------
 

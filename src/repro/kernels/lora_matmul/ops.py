@@ -23,11 +23,14 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from ..backend import auto_interpret
+from .. import backend
+from ..backend import auto_interpret  # noqa: F401 — re-export (legacy import site)
 from .kernel import (lora_matmul_dx_kernel, lora_matmul_gather_kernel,
-                     lora_matmul_kernel, lora_rank_reduce_kernel)
-from .ref import lora_matmul_gathered_ref, lora_matmul_ref
+                     lora_matmul_kernel, lora_matmul_q8_dx_kernel,
+                     lora_matmul_q8_kernel, lora_rank_reduce_kernel)
+from .ref import lora_matmul_gathered_ref, lora_matmul_q8_ref, lora_matmul_ref
 from .tune import best_blocks, best_gather_blocks
 
 
@@ -118,7 +121,81 @@ def _fused_bwd(cfg: _FusedCfg, res, dy):
 _fused_lora_matmul.defvjp(_fused_fwd, _fused_bwd)
 
 
+# ---------------------------------------------------------------------------
+# weight-only int8 base: (int8 W, f32 scale) dequantized per-tile in VMEM
+# ---------------------------------------------------------------------------
+
+def _fwd_value_q8(cfg: _FusedCfg, x2, w_q, w_scale, a, b):
+    if not cfg.use_kernel:
+        return lora_matmul_q8_ref(x2, w_q, w_scale, a, b, cfg.scale)
+    M, K = x2.shape
+    N = w_q.shape[1]
+    a, b = (t.astype(x2.dtype) for t in (a, b))
+    ws = jnp.asarray(w_scale, jnp.float32).reshape(1, -1)
+    bm, bn, bk, pm, pn, pk = _blocks_pads(cfg, M, K, N)
+    y = lora_matmul_q8_kernel(_pad2(x2, pm, pk), _pad2(w_q, pk, pn),
+                              _pad2(ws, 0, pn), _pad2(a, 0, pk),
+                              _pad2(b, pn, 0), scale=cfg.scale, bm=bm,
+                              bn=bn, bk=bk, interpret=cfg.interpret)
+    return y[:M, :N]
+
+
+def _bwd_value_q8(cfg: _FusedCfg, x2, w_q, w_scale, a, b, dy):
+    scale = cfg.scale
+    xf = x2.astype(jnp.float32)
+    dyf = dy.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    ws = jnp.asarray(w_scale, jnp.float32).reshape(1, -1)
+    # the frozen int8 base never trains: its cotangent is float0 (the
+    # tangent space of an integer primal), and the scale grad is a dead
+    # zeros XLA drops — only dX needs W, via the q8 dX kernel
+    dw_q = np.zeros(w_q.shape, dtype=jax.dtypes.float0)
+    dws = jnp.zeros(jnp.shape(w_scale), jnp.float32)
+    z = xf @ af.T                                 # (M, r) fwd recompute
+    z2 = dyf @ b.astype(jnp.float32)              # (M, r)
+    if not cfg.use_kernel:
+        wf = w_q.astype(jnp.float32) * ws
+        dx = dyf @ wf.T + scale * (z2 @ af)
+        da = scale * (z2.T @ xf)
+        db = scale * (dyf.T @ z)
+        return (dx.astype(x2.dtype), dw_q, dws, da.astype(a.dtype),
+                db.astype(b.dtype))
+    M, K = x2.shape
+    N = w_q.shape[1]
+    bm, bn, bk, pm, pn, pk = _blocks_pads(cfg, M, K, N)
+    dyp = _pad2(dy, pm, pn)
+    dx = lora_matmul_q8_dx_kernel(
+        dyp, _pad2(w_q, pk, pn), _pad2(ws, 0, pn),
+        _pad2(a.astype(dy.dtype), 0, pk), _pad2(b.astype(dy.dtype), pn, 0),
+        scale=scale, bm=bm, bn=bn, bk=bk, interpret=cfg.interpret)[:M, :K]
+    da = scale * lora_rank_reduce_kernel(
+        _pad2(z2, pm, 0), _pad2(x2, pm, pk), bm=bm, bn=bk,
+        interpret=cfg.interpret)[:, :K]
+    dbT = lora_rank_reduce_kernel(
+        _pad2(z, pm, 0), dyp, bm=bm, bn=bn,
+        interpret=cfg.interpret)[:, :N]
+    return (dx.astype(x2.dtype), dw_q, dws, da.astype(a.dtype),
+            (scale * dbT.T).astype(b.dtype))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _fused_lora_matmul_q8(cfg: _FusedCfg, x2, w_q, w_scale, a, b):
+    return _fwd_value_q8(cfg, x2, w_q, w_scale, a, b)
+
+
+def _fused_fwd_q8(cfg: _FusedCfg, x2, w_q, w_scale, a, b):
+    return _fwd_value_q8(cfg, x2, w_q, w_scale, a, b), (x2, w_q, w_scale, a, b)
+
+
+def _fused_bwd_q8(cfg: _FusedCfg, res, dy):
+    return _bwd_value_q8(cfg, *res, dy)
+
+
+_fused_lora_matmul_q8.defvjp(_fused_fwd_q8, _fused_bwd_q8)
+
+
 def lora_matmul(x, w, a, b, *, scale: float = 1.0,
+                w_scale=None,
                 bm: Optional[int] = None, bn: Optional[int] = None,
                 bk: Optional[int] = None, interpret: Optional[bool] = None,
                 use_kernel: Optional[bool] = None):
@@ -127,29 +204,39 @@ def lora_matmul(x, w, a, b, *, scale: float = 1.0,
     Differentiable end to end (custom VJP with fused backward kernels;
     forward and backward validated against the jnp oracle in
     tests/test_kernels.py).  Every knob defaults to auto-detection:
-    ``interpret`` from the backend, ``use_kernel`` to native-TPU only, and
-    block sizes from the memoized autotuner (tune.best_blocks).
+    ``interpret`` from the backend, ``use_kernel`` to native-TPU only
+    (the shared ``kernels.backend.dispatch`` convention), and block sizes
+    from the memoized autotuner (tune.best_blocks).
+
+    ``w_scale`` switches on the weight-only int8 base: ``w`` is then an
+    int8 ``(K, N)`` tensor and ``w_scale`` its f32 per-output-channel
+    scale (see ``repro.precision.quantize_weight_int8``), dequantized
+    per-tile in VMEM by the q8 kernels (jnp oracle off-TPU).
     """
     lead = x.shape[:-1]
     K = x.shape[-1]
     N = w.shape[1]
     x2 = x.reshape(-1, K)
     M = x2.shape[0]
-    explicit_interpret = interpret is not None
-    if interpret is None:
-        interpret = auto_interpret()
-    if use_kernel is None:
-        # an explicit interpret flag means the caller is asking for the
-        # kernel (in interpret mode or natively); otherwise off-TPU rides
-        # the jnp path of the same custom VJP — identical fused math, no
-        # interpreter overhead in the hot loop
-        use_kernel = explicit_interpret or not interpret
-    if use_kernel and (bm is None or bn is None or bk is None):
-        tm, tn, tk = best_blocks(M, K, N, a.shape[0], x.dtype)
-        bm, bn, bk = bm or tm, bn or tn, bk or tk
-    cfg = _FusedCfg(float(scale), int(bm or 256), int(bn or 256),
-                    int(bk or 512), bool(interpret), bool(use_kernel))
-    return _fused_lora_matmul(cfg, x2, w, a, b).reshape(*lead, N)
+    w_dtype = w.dtype if w_scale is not None else None
+
+    def _run(use_k: bool, interp: bool):
+        tm, tn, tk = (bm, bn, bk)
+        if use_k and (tm is None or tn is None or tk is None):
+            am, an, ak = best_blocks(M, K, N, a.shape[0], x.dtype,
+                                     w_dtype=w_dtype)
+            tm, tn, tk = tm or am, tn or an, tk or ak
+        cfg = _FusedCfg(float(scale), int(tm or 256), int(tn or 256),
+                        int(tk or 512), bool(interp), bool(use_k))
+        if w_scale is None:
+            return _fused_lora_matmul(cfg, x2, w, a, b)
+        return _fused_lora_matmul_q8(cfg, x2, w, w_scale, a, b)
+
+    y = backend.dispatch("lora_matmul",
+                         kernel=lambda interp: _run(True, interp),
+                         ref=lambda: _run(False, False),
+                         interpret=interpret, use_kernel=use_kernel)
+    return y.reshape(*lead, N)
 
 
 def lora_matmul_gathered(x, w, a_pool, b_pool, adapter_idx, *,
@@ -180,30 +267,33 @@ def lora_matmul_gathered(x, w, a_pool, b_pool, adapter_idx, *,
     if ai.shape != lead:
         ai = ai.reshape(ai.shape + (1,) * (len(lead) - ai.ndim))
     idx = jnp.broadcast_to(ai, lead).reshape(-1)
-    explicit_interpret = interpret is not None
-    if interpret is None:
-        interpret = auto_interpret()
-    if use_kernel is None:
-        use_kernel = explicit_interpret or not interpret
-    if not use_kernel:
+
+    def _ref():
         y = lora_matmul_gathered_ref(x2, w, a_pool, b_pool, idx,
                                      float(scale))
         return y.reshape(*lead, N)
-    if bn is None or bk is None:
-        tn, tk = best_gather_blocks(M, K, N, a_pool.shape[1],
-                                    a_pool.shape[0], x.dtype, idx.dtype)
-        bn, bk = bn or tn, bk or tk
-    bn, bk = min(int(bn), N), min(int(bk), K)
-    pn, pk = (-N) % bn, (-K) % bk
-    w, a_pool, b_pool = (t.astype(x2.dtype) for t in (w, a_pool, b_pool))
-    if pk:
-        x2 = _pad2(x2, 0, pk)
-        w = _pad2(w, pk, 0)
-        a_pool = jnp.pad(a_pool, ((0, 0), (0, 0), (0, pk)))
-    if pn:
-        w = _pad2(w, 0, pn)
-        b_pool = jnp.pad(b_pool, ((0, 0), (0, pn), (0, 0)))
-    y = lora_matmul_gather_kernel(x2, w, a_pool, b_pool, idx,
-                                  scale=float(scale), bn=bn, bk=bk,
-                                  interpret=bool(interpret))
-    return y[:, :N].reshape(*lead, N)
+
+    def _kern(interp: bool):
+        tn, tk = bn, bk
+        if tn is None or tk is None:
+            an, ak = best_gather_blocks(M, K, N, a_pool.shape[1],
+                                        a_pool.shape[0], x.dtype, idx.dtype)
+            tn, tk = tn or an, tk or ak
+        tn, tk = min(int(tn), N), min(int(tk), K)
+        pn, pk = (-N) % tn, (-K) % tk
+        wp, ap, bp, xp = w, a_pool, b_pool, x2
+        wp, ap, bp = (t.astype(x2.dtype) for t in (wp, ap, bp))
+        if pk:
+            xp = _pad2(xp, 0, pk)
+            wp = _pad2(wp, pk, 0)
+            ap = jnp.pad(ap, ((0, 0), (0, 0), (0, pk)))
+        if pn:
+            wp = _pad2(wp, 0, pn)
+            bp = jnp.pad(bp, ((0, 0), (0, pn), (0, 0)))
+        y = lora_matmul_gather_kernel(xp, wp, ap, bp, idx,
+                                      scale=float(scale), bn=tn, bk=tk,
+                                      interpret=bool(interp))
+        return y[:, :N].reshape(*lead, N)
+
+    return backend.dispatch("lora_matmul_gathered", kernel=_kern, ref=_ref,
+                            interpret=interpret, use_kernel=use_kernel)

@@ -16,6 +16,16 @@ def lora_matmul_ref(x, w, a, b, scale: float):
     return y.astype(x.dtype)
 
 
+def lora_matmul_q8_ref(x, w_q, w_scale, a, b, scale: float):
+    """Oracle for the weight-only int8 fused LoRA matmul.
+
+    w_q: int8 (K, N); w_scale: f32 (1, N) or (N,) per-output-channel.
+    Dequantizes exactly like the kernel (int8 -> f32 * scale) then runs
+    the f32-accumulated reference."""
+    wf = w_q.astype(jnp.float32) * jnp.asarray(w_scale, jnp.float32).reshape(1, -1)
+    return lora_matmul_ref(x, wf, a, b, scale)
+
+
 def lora_matmul_gathered_ref(x, w, a_pool, b_pool, idx, scale: float):
     """y[m] = x[m] @ w + scale * (x[m] @ a_pool[idx[m]]^T) @ b_pool[idx[m]]^T.
 

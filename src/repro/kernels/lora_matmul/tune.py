@@ -21,7 +21,11 @@ import jax.numpy as jnp
 Blocks = Tuple[int, int, int]
 GatherBlocks = Tuple[int, int]
 
-_CACHE: Dict[Tuple[int, int, int, int, str, str], Blocks] = {}
+# key: (M, K, N, r, x dtype, WEIGHT dtype, backend) — the weight dtype is
+# part of the key because the int8 base variant has its own VMEM footprint
+# and its own winner: an (int8 W, f32 scale) sweep must never alias the
+# f32-weight entry for the same logical shape
+_CACHE: Dict[Tuple[int, int, int, int, str, str, str], Blocks] = {}
 # the gathered (multi-tenant) variant memoizes SEPARATELY, and its key
 # additionally covers the adapter-pool size and the index dtype: a
 # single-adapter sweep and a multi-tenant sweep over the same (M, K, N, r)
@@ -45,9 +49,12 @@ def clear_cache() -> None:
     _GATHER_CACHE.clear()
 
 
-def _vmem_bytes(bm: int, bn: int, bk: int, r: int, itemsize: int) -> int:
+def _vmem_bytes(bm: int, bn: int, bk: int, r: int, itemsize: int,
+                w_itemsize: int | None = None) -> int:
     """Per-step VMEM footprint: double-buffered input tiles + f32 scratch."""
-    tiles = itemsize * (bm * bk + bk * bn + r * bk + bn * r)
+    w_itemsize = itemsize if w_itemsize is None else w_itemsize
+    tiles = (itemsize * (bm * bk + r * bk + bn * r)
+             + w_itemsize * bk * bn)
     scratch = 4 * (bm * bn + bm * r)
     out = itemsize * bm * bn
     return 2 * tiles + scratch + out
@@ -66,26 +73,38 @@ def _heuristic_key(M: int, K: int, N: int, c: Blocks):
 
 
 def _time_candidates(M: int, K: int, N: int, r: int, dtype,
-                     cands: List[Blocks]) -> Blocks:
+                     cands: List[Blocks], w_dtype=None) -> Blocks:
     """Time the real kernel per candidate (TPU path); min-of-3 wall time."""
-    from .kernel import lora_matmul_kernel
+    from .kernel import lora_matmul_kernel, lora_matmul_q8_kernel
 
+    int8_w = w_dtype is not None and jnp.dtype(w_dtype) == jnp.int8
     best, best_t = cands[0], float("inf")
     for bm, bn, bk in cands:
         Mp, Kp, Np = _pad_up(M, bm), _pad_up(K, bk), _pad_up(N, bn)
         x = jnp.zeros((Mp, Kp), dtype)
-        w = jnp.zeros((Kp, Np), dtype)
         a = jnp.zeros((r, Kp), dtype)
         b = jnp.zeros((Np, r), dtype)
         try:
-            fn = jax.jit(lambda x, w, a, b, bm=bm, bn=bn, bk=bk:
-                         lora_matmul_kernel(x, w, a, b, scale=1.0, bm=bm,
-                                            bn=bn, bk=bk, interpret=False))
-            fn(x, w, a, b).block_until_ready()          # compile
+            if int8_w:
+                w = jnp.zeros((Kp, Np), jnp.int8)
+                ws = jnp.ones((1, Np), jnp.float32)
+                fn = jax.jit(lambda x, w, ws, a, b, bm=bm, bn=bn, bk=bk:
+                             lora_matmul_q8_kernel(x, w, ws, a, b, scale=1.0,
+                                                   bm=bm, bn=bn, bk=bk,
+                                                   interpret=False))
+                args = (x, w, ws, a, b)
+            else:
+                w = jnp.zeros((Kp, Np), dtype)
+                fn = jax.jit(lambda x, w, a, b, bm=bm, bn=bn, bk=bk:
+                             lora_matmul_kernel(x, w, a, b, scale=1.0, bm=bm,
+                                                bn=bn, bk=bk,
+                                                interpret=False))
+                args = (x, w, a, b)
+            fn(*args).block_until_ready()               # compile
             t = float("inf")
             for _ in range(3):
                 t0 = time.perf_counter()
-                fn(x, w, a, b).block_until_ready()
+                fn(*args).block_until_ready()
                 t = min(t, time.perf_counter() - t0)
         except Exception:                               # noqa: BLE001
             continue            # tile shape the backend rejects — skip it
@@ -95,25 +114,33 @@ def _time_candidates(M: int, K: int, N: int, r: int, dtype,
 
 
 def best_blocks(M: int, K: int, N: int, r: int, dtype=jnp.float32,
-                backend: str | None = None) -> Blocks:
-    """Memoized (bm, bn, bk) for one fused-LoRA problem shape."""
+                backend: str | None = None, w_dtype=None) -> Blocks:
+    """Memoized (bm, bn, bk) for one fused-LoRA problem shape.
+
+    ``w_dtype`` (default: same as ``dtype``) keys the weight-only
+    quantized variant separately — an int8 base halves the W tile's VMEM
+    and shifts the tiling optimum."""
     backend = backend or jax.default_backend()
-    key = (int(M), int(K), int(N), int(r), jnp.dtype(dtype).name, backend)
+    w_name = jnp.dtype(w_dtype if w_dtype is not None else dtype).name
+    key = (int(M), int(K), int(N), int(r), jnp.dtype(dtype).name, w_name,
+           backend)
     hit = _CACHE.get(key)
     if hit is not None:
         return hit
     itemsize = jnp.dtype(dtype).itemsize
+    w_itemsize = jnp.dtype(w_name).itemsize
     cands: List[Blocks] = []
     for bm, bn, bk in _CANDIDATES:
         c = (min(bm, M), min(bn, N), min(bk, K))
-        if _vmem_bytes(*c, r=max(int(r), 1), itemsize=itemsize) > _VMEM_BUDGET:
+        if _vmem_bytes(*c, r=max(int(r), 1), itemsize=itemsize,
+                       w_itemsize=w_itemsize) > _VMEM_BUDGET:
             continue
         if c not in cands:
             cands.append(c)
     if not cands:
         cands = [(min(128, M), min(128, N), min(128, K))]
     if backend == "tpu":
-        best = _time_candidates(M, K, N, r, dtype, cands)
+        best = _time_candidates(M, K, N, r, dtype, cands, w_dtype=w_dtype)
     else:
         best = min(cands, key=lambda c: _heuristic_key(M, K, N, c))
     _CACHE[key] = best

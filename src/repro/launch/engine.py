@@ -291,7 +291,9 @@ class WirelessDynamics:
         # config already matches, so the episode runs the SAME executable a
         # plain static trainer uses (all-ones mask == bit-identical rounds)
         self._cfg_arrays = (
-            sfl.allocation_dynamics(self.alloc.ell_k, self.alloc.rank_k)
+            sfl.allocation_dynamics(self.alloc.ell_k, self.alloc.rank_k,
+                                    bits_k=getattr(self.alloc, "bits_k",
+                                                   None))
             if drift_threshold is not None else {})
         self.deadline_s = deadline_s
         if deadline_factor is not None:
@@ -309,7 +311,8 @@ class WirelessDynamics:
             np.array([e.f_hz for e in envs]),
             np.array([e.kappa for e in envs]),
             rates_m, rates_f, self.prob.batch, self.prob.local_steps,
-            retx_main=retx_main, retx_fed=retx_fed)
+            retx_main=retx_main, retx_fed=retx_fed,
+            act_bits=getattr(self.alloc, "bits_k", None))
         return np.asarray(t)
 
     def _rebase_deadline(self, envs) -> None:
@@ -335,7 +338,8 @@ class WirelessDynamics:
                 prob_r, warm_start=self.alloc, max_sweeps=self.max_sweeps)
             self.ref_delay = self._total_delay(prob_r, self.alloc)
             self._cfg_arrays = self.sfl.allocation_dynamics(
-                self.alloc.ell_k, self.alloc.rank_k)
+                self.alloc.ell_k, self.alloc.rank_k,
+                bits_k=getattr(self.alloc, "bits_k", None))
             if self.deadline_factor is not None:
                 self._rebase_deadline(envs_r)
             info["realloc"] = True
@@ -491,6 +495,9 @@ class WirelessDynamics:
                 "rank": int(a.rank),
                 "ell_k": np.asarray(a.ell_k).tolist(),
                 "rank_k": np.asarray(a.rank_k).tolist(),
+                "act_bits": int(getattr(a, "act_bits", 16)),
+                "bits_k": (None if getattr(a, "bits_k", None) is None
+                           else np.asarray(a.bits_k).tolist()),
             },
         }
 
@@ -511,10 +518,15 @@ class WirelessDynamics:
             power_main=np.asarray(a["power_main"], float),
             power_fed=np.asarray(a["power_fed"], float),
             ell_c=int(a["ell_c"]), rank=int(a["rank"]),
+            act_bits=int(a.get("act_bits", 16)),
             ell_k=np.asarray(a["ell_k"], int),
-            rank_k=np.asarray(a["rank_k"], int))
+            rank_k=np.asarray(a["rank_k"], int),
+            bits_k=(None if a.get("bits_k") is None
+                    else np.asarray(a["bits_k"], int)))
         self._cfg_arrays = (
-            self.sfl.allocation_dynamics(self.alloc.ell_k, self.alloc.rank_k)
+            self.sfl.allocation_dynamics(self.alloc.ell_k, self.alloc.rank_k,
+                                         bits_k=getattr(self.alloc, "bits_k",
+                                                        None))
             if self.drift_threshold is not None else {})
 
 

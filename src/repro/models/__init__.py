@@ -1,3 +1,4 @@
+from ..precision import PrecisionConfig
 from .stack import (Runtime, apply_stack, default_serve_runtime,
                     default_train_runtime, init_stack, init_stack_cache,
                     init_paged_stack_cache)
@@ -11,7 +12,7 @@ from .generate import (SampleConfig, generate, sample_logits,
                        sample_logits_per_key)
 
 __all__ = [
-    "Runtime", "apply_stack", "default_serve_runtime",
+    "PrecisionConfig", "Runtime", "apply_stack", "default_serve_runtime",
     "default_train_runtime", "init_stack", "init_stack_cache",
     "init_paged_stack_cache",
     "abstract_cache", "abstract_lora", "abstract_params", "decode_step",

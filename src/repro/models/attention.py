@@ -44,11 +44,14 @@ def _proj_qkv(cfg, p, x, lora, lora_scale, dense_impl="einsum",
         return None if lora is None or name not in lora else lora[name]
 
     q = dense(x, p["wq"]["w"], p["wq"].get("b"), _l("q"), lora_scale,
-              impl=dense_impl, adapter_idx=adapter_idx)
+              impl=dense_impl, adapter_idx=adapter_idx,
+              w_scale=p["wq"].get("w_scale"))
     k = dense(x, p["wk"]["w"], p["wk"].get("b"), _l("k"), lora_scale,
-              impl=dense_impl, adapter_idx=adapter_idx)
+              impl=dense_impl, adapter_idx=adapter_idx,
+              w_scale=p["wk"].get("w_scale"))
     v = dense(x, p["wv"]["w"], p["wv"].get("b"), _l("v"), lora_scale,
-              impl=dense_impl, adapter_idx=adapter_idx)
+              impl=dense_impl, adapter_idx=adapter_idx,
+              w_scale=p["wv"].get("w_scale"))
     return (q.reshape(B, S, h, hd), k.reshape(B, S, kh, hd), v.reshape(B, S, kh, hd))
 
 
@@ -303,7 +306,7 @@ def self_attention(cfg, p, x, positions, *, lora=None, lora_scale=1.0,
                       s_low_precision=s_low_precision)
     y = dense(o.reshape(B, S, -1), p["wo"]["w"], p["wo"].get("b"),
               None if lora is None or "o" not in lora else lora["o"], lora_scale,
-              impl=dense_impl)
+              impl=dense_impl, w_scale=p["wo"].get("w_scale"))
     if not return_cache:
         return y
     L = cache_len or S
@@ -395,7 +398,8 @@ def paged_decode_attention(cfg, p, x, cache, block_table, cur_index, *,
                      use_kernel=None if impl == "flash" else False)
     y = dense(o.reshape(B, 1, -1), p["wo"]["w"], p["wo"].get("b"),
               None if lora is None or "o" not in lora else lora["o"], lora_scale,
-              impl=dense_impl, adapter_idx=adapter_idx)
+              impl=dense_impl, adapter_idx=adapter_idx,
+              w_scale=p["wo"].get("w_scale"))
     return y, {"k": kc, "v": vc}
 
 
@@ -445,7 +449,7 @@ def paged_chunk_attention(cfg, p, x, cache, block_table, start, *,
     o = o.reshape(1, C, -1).astype(x.dtype)
     y = dense(o, p["wo"]["w"], p["wo"].get("b"),
               None if lora is None or "o" not in lora else lora["o"], lora_scale,
-              impl=dense_impl)
+              impl=dense_impl, w_scale=p["wo"].get("w_scale"))
     return y, {"k": kc, "v": vc}
 
 
@@ -508,5 +512,6 @@ def decode_attention(cfg, p, x, cache, cur_index, *, lora=None,
         o = decode_masked_attention(q, kc, vc, pos_vec, pc, cfg.attn_window)
     y = dense(o.reshape(B, 1, -1), p["wo"]["w"], p["wo"].get("b"),
               None if lora is None or "o" not in lora else lora["o"], lora_scale,
-              impl=dense_impl, adapter_idx=adapter_idx)
+              impl=dense_impl, adapter_idx=adapter_idx,
+              w_scale=p["wo"].get("w_scale"))
     return y, {"k": kc, "v": vc, "pos": pc}

@@ -39,8 +39,15 @@ def _fused_dense_active() -> bool:
 def dense(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
           lora: Optional[dict] = None, lora_scale: float = 1.0,
           impl: str = "einsum",
-          adapter_idx: Optional[jax.Array] = None) -> jax.Array:
+          adapter_idx: Optional[jax.Array] = None,
+          w_scale: Optional[jax.Array] = None) -> jax.Array:
     """y = x @ w (+ b) (+ lora_scale * (x @ a^T) @ b_lora^T).
+
+    WEIGHT-ONLY INT8: with ``w_scale`` (the f32 per-output-channel scale
+    from ``repro.precision.quantize_weight_int8``) the base ``w`` is an
+    int8 tensor; the fused path hands the (int8, scale) pair straight to
+    the q8 kernel, which dequantizes per-tile in VMEM, and the einsum
+    paths dequantize up front (the jnp oracle).
 
     ``lora`` is ``{"a": (r, in), "b": (out, r)}`` or None.  ``impl``
     selects the adapted-projection path: "einsum" runs the base matmul and
@@ -65,14 +72,22 @@ def dense(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
             # single-adapter computation (constant index by construction)
             lora = {"a": lora["a"][0], "b": lora["b"][0]}
             adapter_idx = None
+    def _w_dense():
+        if w_scale is None:
+            return _cast_like(x, w)
+        from ..precision import dequantize_weight
+        return dequantize_weight(w, w_scale, dtype=x.dtype)
+
     if adapter_idx is not None and lora is not None:
         if (impl == "fused" and _fused_dense_active()
                 and not isinstance(lora_scale, jax.Array)):
             from ..kernels.lora_matmul import lora_matmul_gathered
-            y = lora_matmul_gathered(x, w, lora["a"], lora["b"], adapter_idx,
-                                     scale=float(lora_scale))
+            # the gather kernel takes a dense base; int8 storage is
+            # dequantized at its mouth (still one pass over x)
+            y = lora_matmul_gathered(x, _w_dense(), lora["a"], lora["b"],
+                                     adapter_idx, scale=float(lora_scale))
         else:
-            y = jnp.einsum("...i,io->...o", x, _cast_like(x, w))
+            y = jnp.einsum("...i,io->...o", x, _w_dense())
             a_sel = jnp.take(_cast_like(x, lora["a"]), adapter_idx, axis=0)
             b_sel = jnp.take(_cast_like(x, lora["b"]), adapter_idx, axis=0)
             z = jnp.einsum("b...i,bri->b...r", x, a_sel)
@@ -84,9 +99,10 @@ def dense(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
     elif (impl == "fused" and lora is not None and _fused_dense_active()
             and not isinstance(lora_scale, jax.Array)):
         from ..kernels.lora_matmul import lora_matmul
-        y = lora_matmul(x, w, lora["a"], lora["b"], scale=float(lora_scale))
+        y = lora_matmul(x, w, lora["a"], lora["b"], scale=float(lora_scale),
+                        w_scale=w_scale)
     else:
-        y = jnp.einsum("...i,io->...o", x, _cast_like(x, w))
+        y = jnp.einsum("...i,io->...o", x, _w_dense())
         if lora is not None:
             z = jnp.einsum("...i,ri->...r", x, _cast_like(x, lora["a"]))
             delta = jnp.einsum("...r,or->...o", z, _cast_like(x, lora["b"]))
@@ -183,12 +199,15 @@ def swiglu_mlp(cfg, x: jax.Array, p: dict, lora: Optional[dict] = None,
         return None if lora is None or name not in lora else lora[name]
 
     g = dense(x, p["w_gate"]["w"], lora=_l("gate"), lora_scale=lora_scale,
-              impl=dense_impl, adapter_idx=adapter_idx)
+              impl=dense_impl, adapter_idx=adapter_idx,
+              w_scale=p["w_gate"].get("w_scale"))
     u = dense(x, p["w_up"]["w"], lora=_l("up"), lora_scale=lora_scale,
-              impl=dense_impl, adapter_idx=adapter_idx)
+              impl=dense_impl, adapter_idx=adapter_idx,
+              w_scale=p["w_up"].get("w_scale"))
     h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
     return dense(h, p["w_down"]["w"], lora=_l("down"), lora_scale=lora_scale,
-                 impl=dense_impl, adapter_idx=adapter_idx)
+                 impl=dense_impl, adapter_idx=adapter_idx,
+                 w_scale=p["w_down"].get("w_scale"))
 
 
 def gelu_mlp(cfg, x: jax.Array, p: dict, lora: Optional[dict] = None,
@@ -198,11 +217,13 @@ def gelu_mlp(cfg, x: jax.Array, p: dict, lora: Optional[dict] = None,
         return None if lora is None or name not in lora else lora[name]
 
     h = dense(x, p["w_up"]["w"], p["w_up"].get("b"), lora=_l("up"),
-              lora_scale=lora_scale, impl=dense_impl, adapter_idx=adapter_idx)
+              lora_scale=lora_scale, impl=dense_impl, adapter_idx=adapter_idx,
+              w_scale=p["w_up"].get("w_scale"))
     h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(x.dtype)
     return dense(h, p["w_down"]["w"], p["w_down"].get("b"), lora=_l("down"),
                  lora_scale=lora_scale, impl=dense_impl,
-                 adapter_idx=adapter_idx)
+                 adapter_idx=adapter_idx,
+                 w_scale=p["w_down"].get("w_scale"))
 
 
 def apply_mlp(cfg, x: jax.Array, p: dict, lora: Optional[dict] = None,

@@ -14,6 +14,7 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..precision import PrecisionConfig
 from . import attention as attn_mod
 from . import moe as moe_mod
 from . import ssm as ssm_mod
@@ -45,6 +46,12 @@ class Runtime:
     seq_shard: bool = False             # Megatron-style sequence parallelism
     moe_constraints: bool = False       # explicit dispatch/combine shardings
     attn_s_bf16: bool = False           # bf16 score einsum (uneven-GQA fix)
+    # precision as a first-class resource (repro.precision): boundary
+    # activation/gradient bit-widths, weight-only int8 base weights,
+    # stochastic rounding + error feedback — one typed config instead of
+    # per-callsite booleans.  The default is fully disarmed (16/16/f32):
+    # bit-identical to a Runtime without the field.
+    precision: PrecisionConfig = PrecisionConfig()
 
     def replace(self, **kw) -> "Runtime":
         import dataclasses

@@ -1,0 +1,225 @@
+"""Precision as a first-class resource.
+
+One typed config (:class:`PrecisionConfig`) describes every precision
+knob in the stack — split-boundary activation/gradient bit-widths,
+weight-only quantization of the frozen base, stochastic rounding and
+error feedback — and flows trainer -> engine -> kernels instead of
+per-callsite booleans.
+
+The quantizers here are the single source of truth for the math:
+
+* :func:`fake_quant` — symmetric per-tensor int quantization with a
+  **traced** bit-width operand.  ``bits`` may be a scalar or a ``(K,)``
+  vector broadcast against the leading (client) axes, so per-client
+  bit-widths ride the zero-padded hetero path with no retrace; rows with
+  ``bits >= 16`` are passed through **bit-identically** (a ``jnp.where``
+  select of the untouched input), which is what makes the disarmed
+  config bit-exact against the pre-precision round.
+* :func:`quantize_weight_int8` / :func:`dequantize_weight` — per-output-
+  channel ``(int8 W, f32 scale)`` pairs consumed by the fused kernels.
+* :func:`quantize_kv_int8` — per-KV-head scales for the decode kernels.
+
+This module imports only jax/numpy: both ``repro.core`` and
+``repro.models`` depend on it, so it must not import either.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# floor for every max-abs scale: an all-zero tensor (first step of a
+# zero-init LoRA boundary, or a fully masked hetero slot) must quantize
+# to zeros, not divide 0/0 into NaN — NaN here poisons the error-feedback
+# accumulator forever.
+SCALE_FLOOR = 1e-8
+
+_VALID_BITS = (4, 8, 16)
+_VALID_WEIGHT_DTYPES = ("f32", "int8")
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionConfig:
+    """Every precision knob in one hashable object.
+
+    ``act_bits`` / ``grad_bits`` quantize the split-boundary upload and
+    download (16 = off, bit-identical to the unquantized round).
+    ``weight_dtype="int8"`` requests weight-only quantized base weights
+    (per-output-channel scales, dequantized inside the hot kernels).
+    ``stochastic_rounding`` keys unbiased rounding off the round RNG;
+    ``error_feedback`` carries the compression error in ``SflState`` so
+    it is re-injected next step instead of biasing convergence.
+    """
+
+    act_bits: int = 16
+    grad_bits: int = 16
+    weight_dtype: str = "f32"
+    stochastic_rounding: bool = False
+    error_feedback: bool = False
+    rng_seed: int = 0x51C
+
+    def __post_init__(self) -> None:
+        if self.act_bits not in _VALID_BITS:
+            raise ValueError(f"act_bits must be one of {_VALID_BITS}, got {self.act_bits}")
+        if self.grad_bits not in _VALID_BITS:
+            raise ValueError(f"grad_bits must be one of {_VALID_BITS}, got {self.grad_bits}")
+        if self.weight_dtype not in _VALID_WEIGHT_DTYPES:
+            raise ValueError(
+                f"weight_dtype must be one of {_VALID_WEIGHT_DTYPES}, got {self.weight_dtype!r}"
+            )
+
+    @property
+    def boundary_armed(self) -> bool:
+        """Whether any split-boundary quantization op belongs in the graph."""
+        return self.act_bits < 16 or self.grad_bits < 16
+
+    @property
+    def int8_weights(self) -> bool:
+        return self.weight_dtype == "int8"
+
+    def replace(self, **kw) -> "PrecisionConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def round_key(seed: int, step) -> jax.Array:
+    """Stochastic-rounding key for one local step (step may be traced)."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), step)
+
+
+def _bits_view(bits, ndim: int) -> jax.Array:
+    """Reshape bits to broadcast against a tensor's leading axes."""
+    bits = jnp.asarray(bits, jnp.float32)
+    if bits.ndim > ndim:
+        raise ValueError(f"bits has rank {bits.ndim} > tensor rank {ndim}")
+    return bits.reshape(bits.shape + (1,) * (ndim - bits.ndim))
+
+
+def fake_quant(
+    x: jax.Array,
+    bits,
+    *,
+    key: Optional[jax.Array] = None,
+    err: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Symmetric per-tensor fake quantization with traced bit-widths.
+
+    ``bits`` broadcasts against ``x``'s leading axes: a scalar gives the
+    whole tensor one scale, shape ``(K,)`` gives each client its own
+    scale (and its own bit-width).  Rows with ``bits >= 16`` come back as
+    the untouched input — bit-identical disarm, in-graph.
+
+    ``key`` switches round-to-nearest to unbiased stochastic rounding
+    (``floor(x/s + u)`` with ``u ~ U[0, 1)``).  ``err`` is the carried
+    error-feedback accumulator: it is added before quantizing and the
+    fresh residual comes back as the second return value (zeros wherever
+    disarmed, so a disarmed row never accumulates).
+    """
+    b = _bits_view(bits, x.ndim)
+    levels = 2.0 ** (b - 1.0) - 1.0
+    x_in = x if err is None else x + err.astype(x.dtype)
+    axes = tuple(range(jnp.ndim(jnp.asarray(bits)), x.ndim))
+    xf = x_in.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=axes, keepdims=True) if axes else jnp.abs(xf)
+    scale = jnp.maximum(amax / jnp.maximum(levels, 1.0), SCALE_FLOOR)
+    scaled = xf / scale
+    if key is not None:
+        q = jnp.floor(scaled + jax.random.uniform(key, x.shape, jnp.float32))
+    else:
+        q = jnp.round(scaled)
+    q = jnp.clip(q, -levels, levels)
+    deq = (q * scale).astype(x.dtype)
+    armed = b < 16.0
+    out = jnp.where(armed, deq, x)
+    new_err = None
+    if err is not None:
+        residual = (x_in.astype(jnp.float32) - deq.astype(jnp.float32)).astype(err.dtype)
+        new_err = jnp.where(armed, residual, jnp.zeros_like(err))
+    return out, new_err
+
+
+def fake_quant_ste(
+    x: jax.Array,
+    bits,
+    *,
+    key: Optional[jax.Array] = None,
+    err: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """:func:`fake_quant` with a straight-through gradient estimator.
+
+    Forward value is the (de)quantized tensor; the backward pass sees
+    identity.  Disarmed rows return ``x`` verbatim on both passes.
+    """
+    err_in = jax.lax.stop_gradient(err) if err is not None else None
+    q, new_err = fake_quant(jax.lax.stop_gradient(x), bits, key=key, err=err_in)
+    b = _bits_view(bits, x.ndim)
+    out = jnp.where(b < 16.0, x + jax.lax.stop_gradient(q - x), x)
+    return out, new_err
+
+
+def quantize_weight_int8(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-output-channel symmetric int8 weight quantization.
+
+    ``w``: float ``(..., K, N)`` — the trailing two dims are the matmul
+    ``(in, out)`` pair; any leading dims (the depth-stacked layer axis of
+    ``models.stack``) quantize independently.  Returns ``(int8 w-shaped,
+    f32 (..., N) scale)`` with ``w ~= q * scale[..., None, :]`` — the
+    layout the fused kernels dequantize per-tile in VMEM.
+    """
+    wf = jnp.asarray(w).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(wf), axis=-2)
+    scale = jnp.maximum(amax / 127.0, SCALE_FLOOR)
+    q = jnp.clip(jnp.round(wf / scale[..., None, :]),
+                 -127.0, 127.0).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_weight(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """Inverse of :func:`quantize_weight_int8` (the jnp oracle path)."""
+    return (jnp.asarray(q).astype(jnp.float32)
+            * jnp.asarray(scale)[..., None, :]).astype(dtype)
+
+
+def quantize_params_int8(tree):
+    """Weight-only int8 view of a params pytree.
+
+    Walks the tree and replaces every dense layer — any dict carrying a
+    float matrix ``"w"`` (2-D, or depth-stacked ``(L, K, N)``) — with the
+    ``{"w": int8, "w_scale": f32 (..., N)}`` pair that
+    :func:`repro.models.layers.dense` and the fused kernels consume; the
+    depth scan of ``models.stack`` slices both leaves in step.
+    Embeddings, norms and biases keep their dtype (they are a
+    rounding-sensitive sliver of the bytes).  Idempotent: dicts already
+    carrying ``"w_scale"`` (or an int ``"w"``) pass through.
+    """
+    if isinstance(tree, dict):
+        out = {k: quantize_params_int8(v) for k, v in tree.items()}
+        w = out.get("w")
+        if (w is not None and getattr(w, "ndim", 0) >= 2
+                and "w_scale" not in out
+                and jnp.issubdtype(jnp.asarray(w).dtype, jnp.floating)):
+            q, s = quantize_weight_int8(w)
+            out["w"] = q
+            out["w_scale"] = s
+        return out
+    if isinstance(tree, (list, tuple)):
+        return type(tree)(quantize_params_int8(v) for v in tree)
+    return tree
+
+
+def quantize_kv_int8(kv: jax.Array, head_axis: int = 1) -> Tuple[jax.Array, jax.Array]:
+    """Quantize a KV tensor to int8 with one scale per KV head.
+
+    Works for slab caches ``(B, KH, L, D)`` (head_axis=1) and paged
+    pools ``(KH, pages, page, D)`` (head_axis=0).  Returns
+    ``(int8 kv, f32 (KH,) scale)``.
+    """
+    kvf = jnp.asarray(kv).astype(jnp.float32)
+    axes = tuple(i for i in range(kvf.ndim) if i != head_axis)
+    amax = jnp.max(jnp.abs(kvf), axis=axes)
+    scale = jnp.maximum(amax / 127.0, SCALE_FLOOR)
+    bshape = tuple(kvf.shape[head_axis] if i == head_axis else 1 for i in range(kvf.ndim))
+    q = jnp.clip(jnp.round(kvf / scale.reshape(bshape)), -127.0, 127.0).astype(jnp.int8)
+    return q, scale

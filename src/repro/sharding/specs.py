@@ -242,6 +242,10 @@ def sfl_state_shardings(state: Any, mesh: Mesh, axis: str = CLIENT_AXIS):
         opt_client=client_stacked_shardings(state.opt_client, mesh, axis),
         opt_server=replicated_shardings(state.opt_server, mesh),
         step=NamedSharding(mesh, P()),
+        # error-feedback accumulators (K, b, S, d): client-axis parallel
+        # like the stacked adapters; None stays None (legacy states)
+        err_act=client_stacked_shardings(state.err_act, mesh, axis),
+        err_grad=client_stacked_shardings(state.err_grad, mesh, axis),
     )
 
 
